@@ -1,0 +1,40 @@
+"""Table 4 — accuracy / AUC / sparsity at high privacy (ε = 0.1) with a large
+iteration budget, λ scaled up (the paper uses λ=5000, T=400k at full scale;
+the CPU twins use proportionally scaled T).
+
+Claim reproduced: non-trivial accuracy at ε = 0.1 *because* many iterations
+are affordable, and the solution stays sparse (nnz ≤ T ≪ D)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import accuracy_auc, load_problem, sparsity_pct
+from repro.core.fw_sparse import sparse_fw
+
+
+def run(datasets=("rcv1", "news20", "url"), steps: int = 2000,
+        lam: float = 200.0, epsilon: float = 0.1) -> Dict:
+    out = {"table": "4",
+           "claim": "non-trivial accuracy at ε=0.1 via many cheap iterations",
+           "datasets": {}}
+    for name in datasets:
+        prob = load_problem(name)
+        delta = 1.0 / prob.X.shape[0] ** 2
+        r = sparse_fw(prob.X, prob.y, lam=lam, steps=steps, queue="bsls",
+                      epsilon=epsilon, delta=delta)
+        acc, auc = accuracy_auc(prob.X, prob.y, r.w)
+        # non-private reference ceiling at the same budget
+        r_np = sparse_fw(prob.X, prob.y, lam=lam, steps=steps, queue="fib_heap")
+        acc_np, _ = accuracy_auc(prob.X, prob.y, r_np.w)
+        out["datasets"][name] = {
+            "epsilon": epsilon, "steps": steps, "lambda": lam,
+            "accuracy_pct": round(100 * acc, 2),
+            "auc_pct": round(100 * auc, 2),
+            "sparsity_pct": round(sparsity_pct(r.w), 2),
+            "nonprivate_accuracy_pct": round(100 * acc_np, 2),
+            "nnz": int(r.nnz),
+            "pass": bool(acc > 0.55 and r.nnz <= steps + 1),
+        }
+    return out

@@ -1,0 +1,63 @@
+"""§Perf hillclimb target 3 — the paper's own workload at pod scale.
+
+Lowers the distributed DP-FW step (kdda-sized: N=8.4M, D=20.2M) on the 16×16
+mesh under different exchange strategies and reports per-iteration collective
+bytes + roofline terms:
+
+  dense      α-delta psum over the data axis (D/B floats · T iters)
+  topk_k     error-feedback top-k all_gather (2k floats · rows · T)
+
+Run inside the dry-run device environment:
+  PYTHONPATH=src python -m benchmarks.perf_lasso
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import json  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+
+def run(dataset: str = "kdda", steps: int = 50):
+    from repro.configs.paper_lasso import DATASETS
+    from repro.distributed.block_sparse import block_specs
+    from repro.distributed.fw_shard import (DistFWConfig, build_dist_fw_step,
+                                            dist_fw_shardings)
+    from repro.launch.mesh import make_production_mesh
+    from repro.roofline.hlo import collective_bytes_nested
+
+    ds = DATASETS[dataset]
+    mesh = make_production_mesh()
+    rows, cols = 16, 16
+    kc = max(8, int(ds.n * (ds.nnz_per_row / ds.d) / rows * 4))
+    kr = max(8, int(ds.nnz_per_row / cols * 4))
+    blocks_abs = block_specs(ds.n, ds.d, rows, cols, kc, kr)
+    y_abs = jax.ShapeDtypeStruct((blocks_abs.padded[0],), jnp.float32)
+
+    results = {}
+    with mesh:
+        for tag, k in [("dense", 0), ("topk_256", 256), ("topk_64", 64)]:
+            cfg = DistFWConfig(lam=50.0, steps=steps, selection="gumbel",
+                               epsilon=0.1, compress_topk=k)
+            step = build_dist_fw_step(blocks_abs, cfg, mesh)
+            b_shd, y_shd = dist_fw_shardings(blocks_abs, mesh)
+            compiled = jax.jit(step, in_shardings=(b_shd, y_shd)).lower(
+                blocks_abs, y_abs).compile()
+            coll = collective_bytes_nested(compiled.as_text())
+            cost = compiled.cost_analysis() or {}
+            results[tag] = {
+                "collective_bytes_per_step": {
+                    kk: vv / steps for kk, vv in coll.items()},
+                "total_collective_per_iter_kb": sum(coll.values()) / steps / 1024,
+                "flops_per_iter": cost.get("flops", 0) / steps,
+                "temp_bytes": compiled.memory_analysis().temp_size_in_bytes,
+            }
+            print(tag, json.dumps(results[tag], indent=1), flush=True)
+    return results
+
+
+if __name__ == "__main__":
+    out = run()
+    with open("perf_lasso.json", "w") as f:
+        json.dump(out, f, indent=1)

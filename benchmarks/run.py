@@ -1,0 +1,104 @@
+"""Benchmark orchestrator — one bench per paper table/figure (deliverable d).
+
+  Fig 1    bench_convergence   Alg 1 vs Alg 2 gap traces
+  Fig 2/4  bench_flops         FLOPs-reduction factor
+  Fig 3    bench_heap_pops     heap pops / ‖w*‖₀
+  Table 3  bench_speedup       DP wall-clock speedup (Alg 2+4, ablation)
+  Table 4  bench_accuracy      accuracy/AUC/sparsity at ε = 0.1
+  §Roofline roofline_table     three-term model from dryrun_results.json
+
+``python -m benchmarks.run [--fast] [--only NAME]`` — results to
+bench_results.json + stdout summary.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+import traceback
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="fewer steps/datasets")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="bench_results.json")
+    ap.add_argument("--dryrun-json", default="dryrun_results.json")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_accuracy, bench_convergence, bench_flops,
+                            bench_heap_pops, bench_scaling, bench_speedup,
+                            roofline_table)
+
+    fast = args.fast
+    suite = {
+        "fig1_convergence": lambda: bench_convergence.run(
+            datasets=("rcv1",) if fast else ("rcv1", "news20"),
+            steps=150 if fast else 300),
+        "fig2_4_flops": lambda: bench_flops.run(
+            datasets=("rcv1",) if fast else ("rcv1", "news20", "kdda"),
+            steps=150 if fast else 300),
+        "fig3_heap_pops": lambda: bench_heap_pops.run(
+            datasets=("rcv1",) if fast else ("rcv1", "url"),
+            steps=200 if fast else 400),
+        "table3_speedup": lambda: bench_speedup.run(
+            datasets=("rcv1", "url") if fast else
+            ("rcv1", "news20", "url", "web", "kdda"),
+            steps=100 if fast else 200),
+        "table4_accuracy": lambda: bench_accuracy.run(
+            datasets=("rcv1",) if fast else ("rcv1", "news20", "url"),
+            steps=800 if fast else 2000),
+        "scaling_beyond": lambda: bench_scaling.run(
+            d_values=(10_000, 100_000) if fast else
+            (10_000, 100_000, 400_000, 800_000),
+            steps=100 if fast else 150),
+        "roofline": lambda: roofline_table.run(args.dryrun_json),
+    }
+    results, failures = {}, []
+    for name, fn in suite.items():
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        print(f"[bench] {name} ...", flush=True)
+        try:
+            results[name] = fn()
+            results[name]["bench_seconds"] = round(time.time() - t0, 1)
+            print(f"[bench] {name} done in {results[name]['bench_seconds']}s",
+                  flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append({"bench": name, "error": str(e)})
+            traceback.print_exc()
+    with open(args.out, "w") as f:
+        json.dump({"results": results, "failures": failures}, f, indent=1)
+
+    # ---- summary ---------------------------------------------------------
+    print("\n=== benchmark summary ===")
+    for name, r in results.items():
+        if "datasets" in r:
+            for ds, row in r["datasets"].items():
+                passes = {k: v for k, v in row.items()
+                          if k.startswith("pass") or k.endswith("gt1")}
+                keys = [k for k in ("flops_reduction_total", "speedup_alg2+4",
+                                    "accuracy_pct", "pops_over_nnz_ratio",
+                                    "final_gap_rel_diff") if k in row]
+                kv = {k: row[k] for k in keys}
+                for eps_k in ("eps_1.0", "eps_0.1"):
+                    if eps_k in row:
+                        kv[f"speedup@{eps_k[4:]}"] = row[eps_k]["speedup_alg2+4"]
+                print(f"  {name:18s} {ds:8s} {kv} {passes}")
+        elif "points" in r:
+            sp = ", ".join(f"D={p['d']}: {p['speedup']}x" for p in r["points"])
+            print(f"  {name:18s} {sp} (monotone={r['monotone_in_d']})")
+        elif "rows" in r:
+            print(f"  {name:18s} {len(r['rows'])} roofline rows "
+                  f"(see EXPERIMENTS.md §Roofline)")
+        elif "skipped" in r:
+            print(f"  {name:18s} SKIPPED: {r['skipped']}")
+    if failures:
+        print(f"  {len(failures)} benches FAILED")
+        raise SystemExit(1)
+    print("all benches ok →", args.out)
+
+
+if __name__ == "__main__":
+    main()

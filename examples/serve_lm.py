@@ -1,0 +1,54 @@
+"""Batched serving example: continuous batching with mixed prompt lengths,
+slot reuse and latency stats — plus a greedy-determinism self-check.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch falcon-mamba-7b]
+
+Works for every decoder arch (GQA / MLA+MoE / mamba state / RG-LRU hybrid) —
+the engine auto-detects each cache layout.
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.models.registry import get_model
+from repro.serve.engine import Request, ServeConfig, ServingEngine
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="tinyllama-1.1b")
+ap.add_argument("--requests", type=int, default=12)
+ap.add_argument("--slots", type=int, default=4)
+ap.add_argument("--max-new", type=int, default=12)
+args = ap.parse_args()
+
+api = get_model(args.arch, smoke=True)
+params = api.init(jax.random.PRNGKey(0))
+engine = ServingEngine(api, params,
+                       ServeConfig(slots=args.slots, max_len=128,
+                                   prefill_bucket=32))
+
+rng = np.random.default_rng(0)
+t0 = time.time()
+for i in range(args.requests):
+    plen = int(rng.integers(4, 24))
+    engine.submit(Request(uid=i,
+                          prompt=rng.integers(1, 100, plen).astype(np.int32),
+                          max_new_tokens=args.max_new))
+finished = engine.run()
+wall = time.time() - t0
+
+gen = sum(len(r.generated) for r in finished)
+print(f"served {len(finished)} requests / {gen} tokens in {wall:.1f}s "
+      f"({gen / wall:.1f} tok/s, {engine.steps} batched decode steps, "
+      f"slot util {gen / max(engine.steps * args.slots, 1):.0%})")
+
+# determinism self-check: resubmitting a prompt reproduces its completion
+probe = finished[0]
+engine2 = ServingEngine(api, params, ServeConfig(slots=1, max_len=128,
+                                                 prefill_bucket=32))
+engine2.submit(Request(uid=99, prompt=probe.prompt,
+                       max_new_tokens=args.max_new))
+redo = engine2.run()[0]
+assert redo.generated == probe.generated, "greedy decode must be deterministic"
+print("determinism check ok")

@@ -1,0 +1,68 @@
+"""End-to-end driver (deliverable b): train a ~100M-parameter LM for a few
+hundred steps on the synthetic markov stream, with checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+Uses a mid-size llama-style config (not a smoke config): 8 layers, d=512,
+vocab 32k ≈ 100M params (counting tied embeddings at init scale).  On CPU
+this takes a few minutes; on the production mesh the identical step function
+is what launch/dryrun.py lowers at (16,16).
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.loader import ShardedLoader
+from repro.data.synthetic import lm_batches
+from repro.models.registry import get_model
+from repro.train.optimizer import get_optimizer
+from repro.train.trainer import TrainConfig, TrainState, fit, make_train_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=128)
+ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm_ckpt")
+args = ap.parse_args()
+
+# ~100M params: tinyllama family at 8 layers × d_model 512 (overriding the
+# full config down to example scale — same code path as the full model).
+api = get_model("tinyllama-1.1b", overrides=dict(
+    n_layers=8, d_model=512, n_heads=8, n_kv_heads=4, d_ff=2048,
+    dtype="float32"))
+params = api.init(jax.random.PRNGKey(0))
+n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+print(f"model: {n_params / 1e6:.1f}M params")
+
+opt = get_optimizer(api.cfg.optimizer)
+state = TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                   opt_state=opt.init(params))
+tc = TrainConfig(optimizer=api.cfg.optimizer, peak_lr=6e-4,
+                 total_steps=args.steps, warmup=20)
+ckpt = Checkpointer(args.ckpt_dir, keep=2)
+if ckpt.latest_step() is not None:
+    state, meta = ckpt.restore(jax.eval_shape(lambda: state))
+    print(f"resumed from step {meta['step']}")
+
+# the markov stream uses a 2k-token support (the model keeps its full 32k
+# vocab) so a few hundred steps see every bigram several times — enough to
+# show real learning rather than memorized noise
+stream = ShardedLoader(lm_batches(min(api.cfg.vocab, 2048), args.batch,
+                                  args.seq, seed=0))
+step_fn = make_train_step(api.loss, tc)
+t0 = time.time()
+state, history = fit(state, step_fn, stream, steps=args.steps,
+                     checkpointer=ckpt, ckpt_every=100,
+                     log_every=max(args.steps // 15, 1))
+stream.close()
+wall = time.time() - t0
+first, last = history[0]["loss"], history[-1]["loss"]
+print(f"\ntrained {args.steps} steps in {wall:.0f}s "
+      f"({args.steps * args.batch * args.seq / wall:.0f} tok/s): "
+      f"loss {first:.3f} → {last:.3f}")
+assert last < first - 0.5, "the markov structure should be learnable"
+print("ok")

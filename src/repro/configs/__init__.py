@@ -1,0 +1,35 @@
+"""Exact published configs for the assigned architectures (+ the paper's own
+LASSO workloads).  One module per arch; ``get_config(name)`` resolves ids."""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "seamless-m4t-medium",
+    "falcon-mamba-7b",
+    "llama3.2-1b",
+    "minicpm-2b",
+    "tinyllama-1.1b",
+    "nemotron-4-15b",
+    "chameleon-34b",
+    "deepseek-v2-236b",
+    "kimi-k2-1t-a32b",
+    "recurrentgemma-2b",
+]
+
+
+def _modname(arch_id: str) -> str:
+    return arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str):
+    if arch_id not in ARCH_IDS and arch_id != "paper_lasso":
+        raise KeyError(f"unknown arch {arch_id!r}; have {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_modname(arch_id)}")
+    return mod.CONFIG
+
+
+def smoke_config(arch_id: str):
+    """Reduced config of the same family for CPU smoke tests."""
+    mod = importlib.import_module(f"repro.configs.{_modname(arch_id)}")
+    return mod.SMOKE

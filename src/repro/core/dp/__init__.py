@@ -1,0 +1,6 @@
+from repro.core.dp.accountant import PrivacyAccountant, fw_noise_scale, per_step_epsilon  # noqa: F401
+from repro.core.dp.mechanisms import (  # noqa: F401
+    exponential_mechanism_probs,
+    gumbel_argmax,
+    laplace_noisy_argmax,
+)

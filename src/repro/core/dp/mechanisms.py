@@ -1,0 +1,43 @@
+"""DP selection mechanisms used by Frank-Wolfe coordinate selection.
+
+Three equivalent-in-law implementations of private argmax over scores u(j):
+
+* ``laplace_noisy_argmax`` — report-noisy-max with Laplace noise (the paper's
+  Algorithm 1 annotation; pure-DP per step).
+* ``exponential_mechanism_probs`` — the exact softmax law
+  P(j) ∝ exp(ε'·u(j) / (2Δu)); used as the oracle distribution in tests.
+* ``gumbel_argmax`` — samples the exponential mechanism exactly via the
+  Gumbel-max trick (argmax_j s_j + G_j with G_j ~ Gumbel(0,1) samples
+  softmax(s)); this is the TPU-native dense path: one vectorized pass,
+  no sequential stream.
+
+The BSLS sampler (core/samplers) samples the *same law* with O(√D) work.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def laplace_noisy_argmax(key: jax.Array, scores: jnp.ndarray, noise_scale: float) -> jnp.ndarray:
+    """Report-noisy-max: argmax_j scores_j + Lap(noise_scale)."""
+    u = jax.random.uniform(key, scores.shape, minval=-0.5 + 1e-12, maxval=0.5)
+    lap = -noise_scale * jnp.sign(u) * jnp.log1p(-2.0 * jnp.abs(u))
+    return jnp.argmax(scores + lap)
+
+
+def exponential_mechanism_probs(scores: jnp.ndarray, eps_step: float, sensitivity: float) -> jnp.ndarray:
+    """Exact selection probabilities of the exponential mechanism."""
+    logits = scores * (eps_step / (2.0 * sensitivity))
+    return jax.nn.softmax(logits)
+
+
+def em_logits(scores: jnp.ndarray, eps_step: float, sensitivity: float) -> jnp.ndarray:
+    """Log-scale weights fed to samplers: ε'·u/(2Δu)."""
+    return scores * (eps_step / (2.0 * sensitivity))
+
+
+def gumbel_argmax(key: jax.Array, logits: jnp.ndarray) -> jnp.ndarray:
+    """Exact softmax sampling via Gumbel-max; logits already scaled by ε'/(2Δu)."""
+    g = jax.random.gumbel(key, logits.shape)
+    return jnp.argmax(logits + g)

@@ -1,0 +1,99 @@
+"""Loss functions for L1-constrained (LASSO) generalized linear models.
+
+The paper (Raff, Khanna & Lu, NeurIPS 2023) uses the logistic loss to avoid
+exploiting closed-form linear-regression updates; squared loss is included
+because the authors note the results transfer to linear regression.
+
+Conventions
+-----------
+Labels are y ∈ {0, 1}.  A model scores a row with ``m = w · x`` and the
+per-row loss is ``L(m, y)``.  ``grad`` returns dL/dm (the scalar "row
+gradient" called q̄ in the paper's Algorithm 1/2).
+
+The L1-Lipschitz constant ``L`` enters the DP sensitivity Δu = L·λ/N and the
+Laplace/exponential mechanism scales, so each loss carries it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Loss:
+    """A scalar margin loss with its gradient and Lipschitz metadata.
+
+    Attributes:
+      value: ``(margins, labels) -> per-row loss`` (elementwise).
+      grad: ``(margins, labels) -> dL/dmargin`` (elementwise).
+      split_grad: ``margins -> h(margins)`` with ``dL/dm = h(m) - y``.  This
+        is the decomposition the paper's Algorithms 1/2 exploit: the
+        label-dependent part ``ȳ = Xᵀy`` is precomputed once, and only the
+        ``q̄ = h(v̄)`` part is updated each iteration.
+      lipschitz: bound on |dL/dmargin| assuming features in [-1, 1]; this is
+        the ``L`` of the paper's noise scale ``λ·L·sqrt(8T log(1/δ))/(N·ε)``.
+      curvature_note: how the FW curvature constant Γ is bounded.
+      name: identifier used by configs.
+    """
+
+    name: str
+    value: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    grad: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    split_grad: Callable[[jnp.ndarray], jnp.ndarray]
+    lipschitz: float
+    curvature_note: str = ""
+
+    def mean_value(self, margins: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+        return jnp.mean(self.value(margins, labels))
+
+
+def _logistic_value(m, y):
+    # log(1 + exp(m)) - y*m, computed stably via softplus.
+    return jax.nn.softplus(m) - y * m
+
+
+def _logistic_grad(m, y):
+    # sigmoid(m) - y
+    return jax.nn.sigmoid(m) - y
+
+
+LOGISTIC = Loss(
+    name="logistic",
+    value=_logistic_value,
+    grad=_logistic_grad,
+    split_grad=jax.nn.sigmoid,
+    lipschitz=1.0,  # |sigmoid(m) - y| <= 1
+    curvature_note="Γ_L <= λ² · max_i ‖x_i‖∞² / 4 for logistic loss",
+)
+
+
+def _squared_value(m, y):
+    return 0.5 * (m - y) ** 2
+
+
+def _squared_grad(m, y):
+    return m - y
+
+
+SQUARED = Loss(
+    name="squared",
+    value=_squared_value,
+    grad=_squared_grad,
+    split_grad=lambda m: m,
+    # Unbounded in general; bounded by max |m - y| on the L1 ball with
+    # features in [-1,1]: |m| <= λ, so L <= λ + 1.  Callers may override.
+    lipschitz=1.0,
+    curvature_note="Γ = λ² · max eig(XᵀX)/N for squared loss",
+)
+
+LOSSES = {l.name: l for l in (LOGISTIC, SQUARED)}
+
+
+def get_loss(name: str) -> Loss:
+    try:
+        return LOSSES[name]
+    except KeyError:
+        raise KeyError(f"unknown loss {name!r}; have {sorted(LOSSES)}") from None

@@ -1,0 +1,9 @@
+from repro.core.sparse.formats import (  # noqa: F401
+    HostCSC,
+    HostCSR,
+    PaddedCSC,
+    PaddedCSR,
+    coo_to_host,
+    dense_to_host,
+    dense_to_padded,
+)

@@ -1,0 +1,259 @@
+"""Sparse matrix containers used throughout the framework.
+
+Two families:
+
+* ``HostCSR`` / ``HostCSC`` — exact variable-length compressed formats in
+  numpy.  These back the *faithful* sequential algorithms (paper Alg 2/3/4)
+  where per-row / per-column iteration order matters and shapes may be ragged.
+
+* ``PaddedCSR`` / ``PaddedCSC`` — fixed-shape ELL-style padded layouts in JAX
+  arrays.  TPUs want static shapes and contiguous vector lanes, so each row
+  (column) is padded to the max nnz; padding entries carry ``index = 0`` and
+  ``value = 0`` which makes gathers safe and contributes nothing to reductions.
+  This is the §Hardware-adaptation replacement for the paper's linked CSR: the
+  asymptotic nnz-proportional work is preserved (padded nnz, see
+  ``padding_overhead``) while every op lowers to gather / segment-sum that the
+  VPU executes at line rate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Shape = Tuple[int, int]
+
+
+# ---------------------------------------------------------------------------
+# Host (numpy, exact) formats
+# ---------------------------------------------------------------------------
+
+
+class HostCSR:
+    """Compressed sparse row; numpy; exact (no padding)."""
+
+    def __init__(self, indptr: np.ndarray, indices: np.ndarray, data: np.ndarray, shape: Shape):
+        self.indptr = np.asarray(indptr, dtype=np.int64)
+        self.indices = np.asarray(indices, dtype=np.int64)
+        self.data = np.asarray(data, dtype=np.float64)
+        self.shape = (int(shape[0]), int(shape[1]))
+        if self.indptr.shape != (self.shape[0] + 1,):
+            raise ValueError("bad indptr length")
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    def row(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
+        lo, hi = self.indptr[i], self.indptr[i + 1]
+        return self.indices[lo:hi], self.data[lo:hi]
+
+    def matvec(self, w: np.ndarray) -> np.ndarray:
+        out = np.zeros(self.shape[0])
+        for i in range(self.shape[0]):
+            idx, val = self.row(i)
+            out[i] = val @ w[idx]
+        return out
+
+    def rmatvec(self, q: np.ndarray) -> np.ndarray:
+        out = np.zeros(self.shape[1])
+        for i in range(self.shape[0]):
+            idx, val = self.row(i)
+            out[idx] += val * q[i]
+        return out
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros(self.shape)
+        for i in range(self.shape[0]):
+            idx, val = self.row(i)
+            out[i, idx] = val
+        return out
+
+    def tocsc(self) -> "HostCSC":
+        n, d = self.shape
+        counts = np.zeros(d + 1, dtype=np.int64)
+        for j in self.indices:
+            counts[j + 1] += 1
+        indptr = np.cumsum(counts)
+        indices = np.empty(self.nnz, dtype=np.int64)
+        data = np.empty(self.nnz)
+        fill = indptr[:-1].copy()
+        for i in range(n):
+            lo, hi = self.indptr[i], self.indptr[i + 1]
+            for p in range(lo, hi):
+                j = self.indices[p]
+                indices[fill[j]] = i
+                data[fill[j]] = self.data[p]
+                fill[j] += 1
+        return HostCSC(indptr, indices, data, self.shape)
+
+
+class HostCSC:
+    """Compressed sparse column; numpy; exact."""
+
+    def __init__(self, indptr: np.ndarray, indices: np.ndarray, data: np.ndarray, shape: Shape):
+        self.indptr = np.asarray(indptr, dtype=np.int64)
+        self.indices = np.asarray(indices, dtype=np.int64)
+        self.data = np.asarray(data, dtype=np.float64)
+        self.shape = (int(shape[0]), int(shape[1]))
+        if self.indptr.shape != (self.shape[1] + 1,):
+            raise ValueError("bad indptr length")
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    def col(self, j: int) -> Tuple[np.ndarray, np.ndarray]:
+        lo, hi = self.indptr[j], self.indptr[j + 1]
+        return self.indices[lo:hi], self.data[lo:hi]
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros(self.shape)
+        for j in range(self.shape[1]):
+            idx, val = self.col(j)
+            out[idx, j] = val
+        return out
+
+
+def coo_to_host(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray, shape: Shape) -> HostCSR:
+    """Build a HostCSR from COO triplets (duplicates are summed)."""
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    vals = np.asarray(vals, dtype=np.float64)
+    order = np.lexsort((cols, rows))
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    # merge duplicates
+    if rows.size:
+        keep = np.ones(rows.size, dtype=bool)
+        same = (rows[1:] == rows[:-1]) & (cols[1:] == cols[:-1])
+        if same.any():
+            # accumulate into the first of each run
+            out_r, out_c, out_v = [], [], []
+            i = 0
+            while i < rows.size:
+                k = i + 1
+                acc = vals[i]
+                while k < rows.size and rows[k] == rows[i] and cols[k] == cols[i]:
+                    acc += vals[k]
+                    k += 1
+                out_r.append(rows[i]); out_c.append(cols[i]); out_v.append(acc)
+                i = k
+            rows = np.array(out_r, dtype=np.int64)
+            cols = np.array(out_c, dtype=np.int64)
+            vals = np.array(out_v)
+        del keep
+    counts = np.bincount(rows, minlength=shape[0])
+    indptr = np.concatenate([[0], np.cumsum(counts)])
+    return HostCSR(indptr, cols, vals, shape)
+
+
+def dense_to_host(x: np.ndarray) -> HostCSR:
+    rows, cols = np.nonzero(x)
+    return coo_to_host(rows, cols, x[rows, cols], x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Padded (JAX, fixed-shape) formats
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PaddedCSR:
+    """ELL-style padded CSR: ``indices/values`` are (N, K) with K = max row nnz.
+
+    Padding: ``index = 0, value = 0`` — safe for gathers, inert in sums.
+    ``nnz`` keeps true per-row counts for masked iteration and FLOP audits.
+    """
+
+    indices: jnp.ndarray  # (N, K) int32 column ids
+    values: jnp.ndarray   # (N, K) float
+    nnz: jnp.ndarray      # (N,)  int32
+    shape: Shape          # static (N, D)
+
+    def tree_flatten(self):
+        return (self.indices, self.values, self.nnz), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, shape, leaves):
+        return cls(*leaves, shape=shape)
+
+    def matvec(self, w: jnp.ndarray) -> jnp.ndarray:
+        """X · w — gather + row reduction; O(N·K) lanes of work."""
+        return jnp.einsum("nk,nk->n", self.values, w[self.indices])
+
+    def rmatvec(self, q: jnp.ndarray) -> jnp.ndarray:
+        """Xᵀ · q — scatter-add over padded lanes; O(N·K)."""
+        flat_idx = self.indices.reshape(-1)
+        flat_val = (self.values * q[:, None]).reshape(-1)
+        return jnp.zeros(self.shape[1], self.values.dtype).at[flat_idx].add(flat_val)
+
+    def to_dense(self) -> jnp.ndarray:
+        n, d = self.shape
+        out = jnp.zeros((n, d), self.values.dtype)
+        rows = jnp.broadcast_to(jnp.arange(n)[:, None], self.indices.shape)
+        return out.at[rows.reshape(-1), self.indices.reshape(-1)].add(self.values.reshape(-1))
+
+    @property
+    def padding_overhead(self) -> float:
+        """padded-lanes / true-nnz; 1.0 = no waste."""
+        true = float(jnp.sum(self.nnz))
+        return float(self.indices.size) / max(true, 1.0)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PaddedCSC:
+    """Padded CSC: per-column row ids.  Column j's rows = ``indices[j]``."""
+
+    indices: jnp.ndarray  # (D, K) int32 row ids
+    values: jnp.ndarray   # (D, K) float
+    nnz: jnp.ndarray      # (D,)  int32
+    shape: Shape          # static (N, D)
+
+    def tree_flatten(self):
+        return (self.indices, self.values, self.nnz), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, shape, leaves):
+        return cls(*leaves, shape=shape)
+
+    def col(self, j) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """Rows/values/mask of column j (traced-index friendly)."""
+        idx = jnp.take(self.indices, j, axis=0)
+        val = jnp.take(self.values, j, axis=0)
+        k = jnp.take(self.nnz, j)
+        mask = jnp.arange(idx.shape[0]) < k
+        return idx, val, mask
+
+
+def _pad_rows(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray, n_major: int, k: int):
+    out_idx = np.zeros((n_major, k), dtype=np.int32)
+    out_val = np.zeros((n_major, k), dtype=np.float32)
+    nnz = np.diff(indptr).astype(np.int32)
+    for i in range(n_major):
+        lo, hi = indptr[i], indptr[i + 1]
+        out_idx[i, : hi - lo] = indices[lo:hi]
+        out_val[i, : hi - lo] = data[lo:hi]
+    return out_idx, out_val, nnz
+
+
+def dense_to_padded(x: np.ndarray) -> Tuple[PaddedCSR, PaddedCSC]:
+    """Convert a dense numpy matrix into both padded layouts."""
+    csr = dense_to_host(np.asarray(x))
+    return host_to_padded(csr)
+
+
+def host_to_padded(csr: HostCSR) -> Tuple[PaddedCSR, PaddedCSC]:
+    n, d = csr.shape
+    csc = csr.tocsc()
+    k_row = int(max(1, np.max(np.diff(csr.indptr)) if csr.nnz else 1))
+    k_col = int(max(1, np.max(np.diff(csc.indptr)) if csc.nnz else 1))
+    ri, rv, rn = _pad_rows(csr.indptr, csr.indices, csr.data, n, k_row)
+    ci, cv, cn = _pad_rows(csc.indptr, csc.indices, csc.data, d, k_col)
+    pcsr = PaddedCSR(jnp.asarray(ri), jnp.asarray(rv), jnp.asarray(rn), (n, d))
+    pcsc = PaddedCSC(jnp.asarray(ci), jnp.asarray(cv), jnp.asarray(cn), (n, d))
+    return pcsr, pcsc

@@ -1,0 +1,2 @@
+from repro.data.synthetic import lm_batches, make_sparse_classification  # noqa: F401
+from repro.data.loader import ShardedLoader  # noqa: F401

@@ -1,0 +1,51 @@
+"""Sharding-aware batch loader with background prefetch.
+
+Wraps a host iterator; each batch is placed onto the mesh with the step's
+input sharding (batch → ("pod","data")) so device transfers overlap host
+generation — the data-pipeline half of compute/comm overlap.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+class ShardedLoader:
+    def __init__(self, it: Iterator, sharding: Optional[Any] = None,
+                 prefetch: int = 2):
+        self.it = it
+        self.sharding = sharding
+        self.q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self.thread = threading.Thread(target=self._worker, daemon=True)
+        self.thread.start()
+
+    def _place(self, batch):
+        if self.sharding is None:
+            return jax.tree.map(jax.numpy.asarray, batch)
+        return jax.tree.map(lambda x: jax.device_put(x, self.sharding), batch)
+
+    def _worker(self):
+        try:
+            for batch in self.it:
+                if self._stop.is_set():
+                    return
+                self.q.put(self._place(batch))
+        finally:
+            self.q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self.q.get()
+        if item is None:
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stop.set()

@@ -1,0 +1,2 @@
+from repro.distributed.block_sparse import BlockSparse, build_block_sparse  # noqa: F401
+from repro.distributed.fw_shard import DistFWConfig, distributed_fw  # noqa: F401

@@ -1,0 +1,113 @@
+"""2-D block-sharded padded sparse design matrix.
+
+The distributed Frank-Wolfe (DESIGN.md §5) shards the design matrix over the
+production mesh: **rows → ("pod","data"), features → "model"**.  Each device
+(a, b) holds the (N/A × D/B) block X[rows_a, cols_b] in both padded layouts:
+
+  * block CSC — for the selected column j's local rows (v̄/q̄ updates);
+  * block CSR — for the touched rows' local columns (α-shard updates).
+
+Row ids inside a block are *local* (0..N_loc) and column ids are *local*
+(0..D_loc): every per-device kernel indexes only its own shards, so the only
+cross-device traffic left in the FW step is the γ/dv lane exchange and the
+α-delta reduction (see fw_shard.py).
+
+Padding is per-layout-global (one static Kc/Kr for every block) because XLA
+needs one shape; ``waste`` reports the padded/true-nnz ratio so benchmarks
+can audit the overhead the same way PaddedCSR.padding_overhead does.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse.formats import HostCSR
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BlockSparse:
+    """All leaves lead with (A, B) = (data shards, model shards)."""
+
+    csc_rows: jnp.ndarray   # (A, B, D_loc, Kc) int32 local row ids
+    csc_vals: jnp.ndarray   # (A, B, D_loc, Kc) f32
+    csr_cols: jnp.ndarray   # (A, B, N_loc, Kr) int32 local col ids
+    csr_vals: jnp.ndarray   # (A, B, N_loc, Kr) f32
+    shape: Tuple[int, int]  # global (N, D) — static
+    padded: Tuple[int, int]  # (N_pad, D_pad) — static
+
+    def tree_flatten(self):
+        return ((self.csc_rows, self.csc_vals, self.csr_cols, self.csr_vals),
+                (self.shape, self.padded))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, shape=aux[0], padded=aux[1])
+
+    @property
+    def grid(self) -> Tuple[int, int]:
+        return self.csc_rows.shape[0], self.csc_rows.shape[1]
+
+    @property
+    def waste(self) -> float:
+        true = float(jnp.sum(self.csc_vals != 0))
+        return float(self.csc_vals.size) / max(true, 1.0)
+
+
+def build_block_sparse(X: HostCSR, a: int, b: int) -> BlockSparse:
+    """Split a HostCSR into an (a × b) block grid of padded layouts."""
+    n, d = X.shape
+    n_loc = -(-n // a)
+    d_loc = -(-d // b)
+    n_pad, d_pad = n_loc * a, d_loc * b
+
+    # bucket nnz per block
+    csc_lists = [[[[] for _ in range(d_loc)] for _ in range(b)] for _ in range(a)]
+    csr_lists = [[[[] for _ in range(n_loc)] for _ in range(b)] for _ in range(a)]
+    for i in range(n):
+        ai, il = divmod(i, n_loc)
+        idx, val = X.row(i)
+        for j, v in zip(idx, val):
+            bj, jl = divmod(int(j), d_loc)
+            csc_lists[ai][bj][jl].append((il, v))
+            csr_lists[ai][bj][il].append((jl, v))
+
+    kc = max(1, max(len(c) for ab in csc_lists for blk in ab for c in blk))
+    kr = max(1, max(len(r) for ab in csr_lists for blk in ab for r in blk))
+
+    csc_rows = np.zeros((a, b, d_loc, kc), np.int32)
+    csc_vals = np.zeros((a, b, d_loc, kc), np.float32)
+    csr_cols = np.zeros((a, b, n_loc, kr), np.int32)
+    csr_vals = np.zeros((a, b, n_loc, kr), np.float32)
+    for ai in range(a):
+        for bj in range(b):
+            for jl in range(d_loc):
+                for p, (il, v) in enumerate(csc_lists[ai][bj][jl]):
+                    csc_rows[ai, bj, jl, p] = il
+                    csc_vals[ai, bj, jl, p] = v
+            for il in range(n_loc):
+                for p, (jl, v) in enumerate(csr_lists[ai][bj][il]):
+                    csr_cols[ai, bj, il, p] = jl
+                    csr_vals[ai, bj, il, p] = v
+    return BlockSparse(
+        csc_rows=jnp.asarray(csc_rows), csc_vals=jnp.asarray(csc_vals),
+        csr_cols=jnp.asarray(csr_cols), csr_vals=jnp.asarray(csr_vals),
+        shape=(n, d), padded=(n_pad, d_pad),
+    )
+
+
+def block_specs(n: int, d: int, a: int, b: int, kc: int, kr: int) -> BlockSparse:
+    """ShapeDtypeStruct stand-in for dry-runs (no allocation)."""
+    n_loc, d_loc = -(-n // a), -(-d // b)
+    f = jax.ShapeDtypeStruct
+    return BlockSparse(
+        csc_rows=f((a, b, d_loc, kc), jnp.int32),
+        csc_vals=f((a, b, d_loc, kc), jnp.float32),
+        csr_cols=f((a, b, n_loc, kr), jnp.int32),
+        csr_vals=f((a, b, n_loc, kr), jnp.float32),
+        shape=(n, d), padded=(n_loc * a, d_loc * b),
+    )

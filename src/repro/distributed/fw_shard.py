@@ -1,0 +1,220 @@
+"""Distributed DP Frank-Wolfe via shard_map — the paper's mechanism at pod scale.
+
+Layout (DESIGN.md §5): rows → ("pod","data"), features → "model".  Every
+device (a, b) holds one BlockSparse block plus:
+
+  state        sharding                size/device
+  w, α         P("model")  (replicated over rows)   D/B
+  v̄, q̄         P(rows)     (replicated over model)  N/A
+  w_m, g̃, key  replicated  scalars
+
+The coordinate selection is the paper's Big-Step-Little-Step **promoted to a
+collective schedule**: each feature shard's log-sum-exp mass is the "big
+step" table (now one scalar *per device column*), the winning shard is drawn
+by Gumbel-max over the B gathered masses, and only the winner runs its
+in-shard ("little step") draw.  Per-iteration communication:
+
+  selection   all_gather of B scalars over "model"       (paper's √D groups)
+  dv/γ lanes  psum of 3 (Kc,) lanes over "model"
+  α delta     psum of D/B floats over rows — or, with ``compress_topk`` > 0,
+              an all_gather of 2k floats (error-feedback top-k, the gradient
+              compression hook; the residual stays on-device and is re-added
+              next iteration, so nothing is lost, only delayed)
+  g̃ dot      1 scalar psum over both axes
+
+versus the O(D) gradient gather a dense DP-FW would need.  The exponential
+mechanism's DP guarantee is a statement about the *law* of the selected
+index; shard-then-member Gumbel-max samples exactly softmax(all logits)
+(law of total probability), so the accounting in core/dp applies unchanged.
+With top-k compression the selection scores lag by the residuals — the same
+stale-but-bounded regime as the paper's Alg-3 queue (documented §Perf).
+
+Everything below is jit-able and dry-runnable: ``build_dist_fw_step`` returns
+a jitted scan over T iterations whose ``.lower().compile()`` on the 16×16 and
+2×16×16 production meshes is exercised by launch/dryrun.py --arch paper-lasso.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.dp.accountant import per_step_epsilon
+from repro.core.losses import get_loss
+from repro.distributed.block_sparse import BlockSparse
+
+
+@dataclasses.dataclass(frozen=True)
+class DistFWConfig:
+    lam: float = 50.0
+    steps: int = 1000
+    loss: str = "logistic"
+    selection: str = "gumbel"     # gumbel (DP exponential mech) | argmax
+    epsilon: float = 1.0
+    delta: float = 1e-6
+    seed: int = 0
+    compress_topk: int = 0        # 0 = dense α-delta psum; k = EF-top-k exchange
+
+
+def _row_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def distributed_fw(blocks: BlockSparse, y: jnp.ndarray, cfg: DistFWConfig,
+                   mesh: Mesh):
+    """Run T distributed FW iterations. y: (N_pad,) f32 padded with zeros.
+
+    Returns (w, gaps, coords) with w sharded over "model".
+    """
+    step = build_dist_fw_step(blocks, cfg, mesh)
+    return step(blocks, y)
+
+
+def build_dist_fw_step(blocks_abs, cfg: DistFWConfig, mesh: Mesh):
+    """Build the jitted whole-run function for the given (abstract) blocks."""
+    rows = _row_axes(mesh)
+    a_sz = blocks_abs.csc_rows.shape[0]
+    b_sz = blocks_abs.csc_rows.shape[1]
+    n, d = blocks_abs.shape
+    n_pad, d_pad = blocks_abs.padded
+    n_loc, d_loc = n_pad // a_sz, d_pad // b_sz
+    loss = get_loss(cfg.loss)
+    lam = cfg.lam
+    if cfg.selection == "gumbel":
+        eps_step = per_step_epsilon(cfg.epsilon, cfg.delta, cfg.steps)
+        em_scale = eps_step * n / (2.0 * loss.lipschitz)
+    else:
+        em_scale = 1.0
+
+    block_spec = P(rows, "model", None, None)
+    in_specs = (
+        BlockSparse(csc_rows=block_spec, csc_vals=block_spec,
+                    csr_cols=block_spec, csr_vals=block_spec,
+                    shape=blocks_abs.shape, padded=blocks_abs.padded),
+        P(rows),                     # y
+    )
+    out_specs = (P("model"), P(), P())
+
+    def fw_body(blocks: BlockSparse, y_loc: jnp.ndarray):
+        csc_r = blocks.csc_rows.reshape(d_loc, -1)     # (D_loc, Kc)
+        csc_v = blocks.csc_vals.reshape(d_loc, -1)
+        csr_c = blocks.csr_cols.reshape(n_loc, -1)     # (N_loc, Kr)
+        csr_v = blocks.csr_vals.reshape(n_loc, -1)
+        my_b = jax.lax.axis_index("model")
+        col_valid = (my_b * d_loc + jnp.arange(d_loc)) < d
+
+        # ---- first-iteration dense pass (Alg 2 lines 8-14), fully local + one
+        # ---- α reduction over the row axes
+        vbar0 = jnp.zeros((n_loc,), jnp.float32)
+        qbar0 = loss.split_grad(vbar0)
+        resid_q = (qbar0 - y_loc) / n                  # (N_loc,)
+        alpha_part = jnp.zeros((d_loc,), jnp.float32).at[csr_c.reshape(-1)].add(
+            (resid_q[:, None] * csr_v).reshape(-1))
+        alpha0 = jax.lax.psum(alpha_part, rows)
+
+        def selection(alpha, key_t):
+            logits = jnp.where(col_valid, em_scale * jnp.abs(alpha), -jnp.inf)
+            if cfg.selection == "gumbel":
+                c_me = jax.scipy.special.logsumexp(logits)
+                c_all = jax.lax.all_gather(c_me, "model", tiled=False)  # (B,)
+                kg, km = jax.random.split(key_t)
+                bw = jnp.argmax(c_all + jax.random.gumbel(kg, (b_sz,)))
+                km = jax.random.fold_in(km, my_b)
+                j_self = jnp.argmax(logits + jax.random.gumbel(km, (d_loc,)))
+            else:
+                c_me = jnp.max(logits)
+                c_all = jax.lax.all_gather(c_me, "model", tiled=False)
+                bw = jnp.argmax(c_all)
+                j_self = jnp.argmax(logits)
+            mine = (my_b == bw)
+            j_loc = jax.lax.psum(jnp.where(mine, j_self, 0), "model")
+            alpha_j = jax.lax.psum(jnp.where(mine, alpha[j_self], 0.0), "model")
+            return mine, j_loc, alpha_j
+
+        def iteration(carry, t):
+            w_loc, w_m, g_t, vbar, qbar, alpha, resid, key = carry
+            key, key_t = jax.random.split(key)
+            mine, j_loc, alpha_j = selection(alpha, key_t)
+
+            # ---- Alg 2 lines 16-21 (replicated scalar math)
+            d_tilde = jnp.where(alpha_j == 0, lam, -lam * jnp.sign(alpha_j))
+            gap = g_t - d_tilde * alpha_j
+            eta = 2.0 / (t + 2.0)
+            w_m = w_m * (1.0 - eta)
+            w_loc = jnp.where(
+                mine, w_loc.at[j_loc].add(eta * d_tilde / w_m), w_loc)
+            g_t = g_t * (1.0 - eta) + eta * d_tilde * alpha_j
+
+            # ---- winner broadcasts its column's lanes over "model"
+            rows_j = jnp.where(mine, csc_r[j_loc], 0)
+            val_j = jnp.where(mine, csc_v[j_loc], 0.0)
+            rows_j = jax.lax.psum(rows_j, "model")              # (Kc,)
+            val_j = jax.lax.psum(val_j, "model")
+            lane_ok = val_j != 0.0
+
+            # ---- v̄/q̄ updates (replicated over model within each row shard)
+            dv = jnp.where(lane_ok, eta * d_tilde * val_j / w_m, 0.0)
+            vbar = vbar.at[rows_j].add(dv)
+            margins = w_m * vbar[rows_j]
+            gamma = jnp.where(lane_ok, loss.split_grad(margins) - qbar[rows_j], 0.0)
+            qbar = qbar.at[rows_j].add(gamma)
+
+            # ---- α-shard delta from the touched rows' local columns
+            gsc = gamma / n
+            cols = csr_c[rows_j]                                # (Kc, Kr)
+            vals = jnp.where(lane_ok[:, None], csr_v[rows_j], 0.0)
+            delta = jnp.zeros((d_loc,), jnp.float32).at[cols.reshape(-1)].add(
+                (gsc[:, None] * vals).reshape(-1))
+            if cfg.compress_topk:
+                resid = resid + delta
+                k = cfg.compress_topk
+                topv, topi = jax.lax.top_k(jnp.abs(resid), k)
+                sent = resid[topi]
+                resid = resid.at[topi].set(0.0)
+                gi = jax.lax.all_gather(topi, rows, tiled=False)   # (R, k)
+                gv = jax.lax.all_gather(sent, rows, tiled=False)
+                delta_sum = jnp.zeros((d_loc,), jnp.float32).at[
+                    gi.reshape(-1)].add(gv.reshape(-1))
+            else:
+                delta_sum = jax.lax.psum(delta, rows)
+            alpha = alpha + delta_sum
+
+            # ---- g̃ line 27: partial dots reduced over both axes
+            dots = jnp.sum(vals * w_loc[cols], axis=1)          # (Kc,)
+            g_dot = jax.lax.psum(jnp.sum(gsc * dots),
+                                 rows + ("model",)) * w_m
+            g_t = g_t + g_dot
+
+            j_global = jax.lax.psum(
+                jnp.where(mine, my_b * d_loc + j_loc, 0), "model")
+            return ((w_loc, w_m, g_t, vbar, qbar, alpha, resid, key),
+                    (gap, j_global))
+
+        carry0 = (
+            jnp.zeros((d_loc,), jnp.float32), jnp.float32(1.0), jnp.float32(0.0),
+            vbar0, qbar0, alpha0, jnp.zeros((d_loc,), jnp.float32),
+            jax.random.PRNGKey(cfg.seed),
+        )
+        ts = jnp.arange(1, cfg.steps + 1, dtype=jnp.float32)
+        (w_loc, w_m, *_), (gaps, coords) = jax.lax.scan(iteration, carry0, ts)
+        return w_loc * w_m, gaps, coords
+
+    fn = shard_map(fw_body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+def dist_fw_shardings(blocks_abs, mesh: Mesh):
+    """NamedShardings matching build_dist_fw_step's in_specs (for dry-run)."""
+    rows = _row_axes(mesh)
+    bs = NamedSharding(mesh, P(rows, "model", None, None))
+    return (
+        BlockSparse(csc_rows=bs, csc_vals=bs, csr_cols=bs, csr_vals=bs,
+                    shape=blocks_abs.shape, padded=blocks_abs.padded),
+        NamedSharding(mesh, P(rows)),
+    )

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each subpackage is kernel.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling) + ops.py (jit'd public wrapper) + ref.py (pure-jnp oracle), validated
+in interpret mode (CPU container; TPU is the compile target):
+
+  spmv/            padded-ELL X·w and Xᵀ·q — the paper's Alg-1/first-iteration
+                   products, row-tiled with sequential-grid scatter-accumulate.
+  coord_update/    fused Alg-2 inner loop (lines 22-28): one coordinate's
+                   v̄/q̄/α/g̃ propagation in a single VMEM-resident sweep.
+  bsls_draw/       Alg-4's sub-linear EM draw as big step (XLA, √D scan) +
+                   little step (scalar-prefetch Pallas kernel that DMAs only
+                   the winning group's row — O(√D) bytes per draw).
+  flash_attention/ online-softmax attention forward for the LM-side archs
+                   (GQA, causal/local), grid (B·H, nq, nk) with VMEM scratch.
+"""

@@ -1,0 +1,1 @@
+from repro.kernels.bsls_draw.ops import two_level_draw  # noqa: F401

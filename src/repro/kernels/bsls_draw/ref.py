@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the two-level exponential-mechanism draw.
+
+Given group log-sum-exps ``c`` (G,), member log-weights ``v`` (G, M) and two
+Gumbel noise vectors, returns the flat index ``g·M + m`` where
+``g = argmax(c + γ_g)`` and ``m = argmax(v[g] + γ_m)``.  Because
+P(g) = softmax(c)_g and P(m|g) = softmax(v[g])_m, the flat draw is exactly
+``j ~ softmax(v.flatten())`` (law of total probability) — the same law the
+paper's Alg 4 samples.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def two_level_draw_ref(c: jnp.ndarray, v: jnp.ndarray,
+                       gumbel_g: jnp.ndarray, gumbel_m: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.argmax(c + gumbel_g)
+    m = jnp.argmax(v[g] + gumbel_m)
+    return (g * v.shape[1] + m).astype(jnp.int32)

@@ -1,0 +1,1 @@
+from repro.kernels.coord_update.ops import coord_update  # noqa: F401

@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: fused Frank-Wolfe coordinate update (paper Alg 2, l.22-28).
+
+This is the paper's per-iteration hot loop — the O(S_r·S_c) sparse propagation
+of one coordinate step through v̄, q̄, α and g̃ — fused into a single kernel so
+the four scatter/gather passes XLA would emit (one per state vector) become
+one VMEM-resident sweep.
+
+Layout (per-device shard scale, DESIGN.md §5: rows sharded over "data",
+features over "model"):
+  * v̄/q̄ shards: N_shard ≤ 33K rows → 132 KB each in VMEM.
+  * α/w shards:  D_shard ≤ 79K feats → 316 KB each in VMEM.
+  * column tile: (TC,) row ids + (TC, Kr) row data.
+Everything lives in VMEM for the whole sweep; the TPU grid is sequential, so
+read-modify-write accumulation across column tiles is race-free (the same
+trick kernels/spmv uses).  The scalar step state (η, d̃, w_m, 1/N) rides in
+SMEM; the g̃ increment is accumulated in SMEM and added by the wrapper.
+
+Padding convention: lanes with mask=0 carry row=0/value=0 and contribute
+nothing (their dv and γ are forced to 0 before any scatter).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEF_TC = 128  # column-tile lanes per grid step
+
+
+def _coord_update_kernel(scal_ref, rows_ref, xcol_ref, mask_ref, ridx_ref, rval_ref,
+                         vbar_in, qbar_in, alpha_in, w_ref,
+                         vbar_o, qbar_o, alpha_o, gd_o):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        vbar_o[...] = vbar_in[...]
+        qbar_o[...] = qbar_in[...]
+        alpha_o[...] = alpha_in[...]
+        gd_o[0] = jnp.float32(0.0)
+
+    eta, d_tilde, w_m, inv_n = (scal_ref[0], scal_ref[1], scal_ref[2], scal_ref[3])
+    r = rows_ref[...]
+    m = mask_ref[...].astype(bool)
+    # line 23: v̄[rows] += η·d̃·x/w_m  (true margin change rides on w_m scale)
+    dv = jnp.where(m, eta * d_tilde * xcol_ref[...] / w_m, 0.0)
+    vb = vbar_o[...].at[r].add(dv)
+    vbar_o[...] = vb
+    # line 24: γ = h(w_m·v̄) − q̄   (logistic h = σ; stale rows untouched)
+    margins = w_m * vb[r]
+    gamma = jnp.where(m, jax.nn.sigmoid(margins) - qbar_o[...][r], 0.0)
+    # line 25
+    qbar_o[...] = qbar_o[...].at[r].add(gamma)
+    # line 26: α += (γ/N)·X[rows,:]  — scatter over the rows' nnz
+    gscaled = gamma * inv_n
+    contrib = gscaled[:, None] * rval_ref[...]
+    alpha_o[...] = alpha_o[...].at[ridx_ref[...].reshape(-1)].add(contrib.reshape(-1))
+    # line 27: g̃ += w_m·Σᵢ (γᵢ/N)·⟨X[i,:], w⟩
+    dots = jnp.sum(rval_ref[...] * w_ref[...][ridx_ref[...]], axis=1)
+    gd_o[0] += w_m * jnp.sum(gscaled * dots)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def coord_update_pallas(vbar, qbar, alpha, w, rows, x_col, mask, row_idx, row_val,
+                        scalars, *, tile: int = DEF_TC, interpret: bool = True):
+    """Apply one fused coordinate update; returns (v̄', q̄', α', g̃-increment).
+
+    ``scalars`` = f32[4] = [η, d̃, w_m, 1/N] (SMEM).
+    """
+    kc, kr = row_idx.shape
+    tc = min(tile, kc)
+    if kc % tc:
+        pad = tc - kc % tc
+        rows = jnp.pad(rows, (0, pad))
+        x_col = jnp.pad(x_col, (0, pad))
+        mask = jnp.pad(mask, (0, pad))
+        row_idx = jnp.pad(row_idx, ((0, pad), (0, 0)))
+        row_val = jnp.pad(row_val, ((0, pad), (0, 0)))
+    kp = rows.shape[0]
+    n, d = vbar.shape[0], alpha.shape[0]
+    grid = (kp // tc,)
+    full = lambda sz: pl.BlockSpec((sz,), lambda i: (0,))
+    out = pl.pallas_call(
+        _coord_update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),           # scalars
+            pl.BlockSpec((tc,), lambda i: (i,)),             # rows
+            pl.BlockSpec((tc,), lambda i: (i,)),             # x_col
+            pl.BlockSpec((tc,), lambda i: (i,)),             # mask
+            pl.BlockSpec((tc, kr), lambda i: (i, 0)),        # row_idx
+            pl.BlockSpec((tc, kr), lambda i: (i, 0)),        # row_val
+            full(n), full(n), full(d), full(d),              # v̄, q̄, α, w
+        ],
+        out_specs=[
+            full(n), full(n), full(d),
+            pl.BlockSpec(memory_space=pltpu.SMEM),           # g̃ increment
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), vbar.dtype),
+            jax.ShapeDtypeStruct((n,), qbar.dtype),
+            jax.ShapeDtypeStruct((d,), alpha.dtype),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scalars, rows, x_col, mask.astype(jnp.int32), row_idx, row_val,
+      vbar, qbar, alpha, w)
+    vb, qb, al, gd = out
+    return vb, qb, al, gd[0]

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the fused Alg-2 inner loop (paper lines 22-28).
+
+One Frank-Wolfe coordinate update touches:
+  v̄[rows]  += η·d̃·x_col/w_m                  (line 23; v = w_m·v̄ implicitly)
+  γ[i]      = h(w_m·v̄[i]) − q̄[i]             (line 24, logistic h = σ)
+  q̄[rows]  += γ                               (line 25)
+  α         += (γ/N)ᵀ · X[rows, :]            (line 26, scatter over row nnz)
+  g̃        += w_m · Σᵢ (γᵢ/N)·⟨X[i,:], w⟩    (line 27)
+
+Inputs use the padded layouts: ``rows/x_col/mask`` are column j's (Kc,) rows
+from the PaddedCSC; ``row_idx/row_val`` are those rows' (Kc, Kr) entries from
+the PaddedCSR.  Padding lanes carry mask=False and value 0.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax.numpy as jnp
+
+
+def coord_update_ref(
+    vbar: jnp.ndarray, qbar: jnp.ndarray, alpha: jnp.ndarray, w: jnp.ndarray,
+    rows: jnp.ndarray, x_col: jnp.ndarray, mask: jnp.ndarray,
+    row_idx: jnp.ndarray, row_val: jnp.ndarray,
+    *, eta: jnp.ndarray, d_tilde: jnp.ndarray, w_m: jnp.ndarray,
+    inv_n: float, h: Callable = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    import jax
+    h = h or jax.nn.sigmoid
+    dv = jnp.where(mask, eta * d_tilde * x_col / w_m, 0.0)
+    vbar = vbar.at[rows].add(dv)
+    margins = w_m * vbar[rows]
+    gamma = jnp.where(mask, h(margins) - qbar[rows], 0.0)
+    qbar = qbar.at[rows].add(gamma)
+    contrib = (gamma * inv_n)[:, None] * row_val                 # (Kc, Kr)
+    alpha = alpha.at[row_idx.reshape(-1)].add(contrib.reshape(-1))
+    g_delta = w_m * jnp.sum((gamma * inv_n) * jnp.einsum("ck,ck->c", row_val, w[row_idx]))
+    return vbar, qbar, alpha, g_delta

@@ -1,0 +1,126 @@
+"""Pallas TPU flash-attention forward (online softmax, causal/local masking).
+
+Grid: (B·H, nq, nk) with the KV axis innermost — each (batch·head, q-block)
+pair sweeps its KV blocks sequentially, carrying the online-softmax state
+(running max m, normalizer l, accumulator acc) in VMEM scratch.  The output
+block is written once, on the final KV step.
+
+BlockSpecs / VMEM budget per step (defaults bq=bk=512, hd=128, f32):
+  q (1, bq, hd) 256 KB · k/v (1, bk, hd) 256 KB each · acc scratch 256 KB
+  → ~1 MB, well inside the ~16 MB/core budget; bq/bk are multiples of the
+  (8, 128) f32 tile so the MXU sees aligned (bq×hd)·(hd×bk) matmuls.
+
+GQA without KV duplication: the wrapper folds H = KV·G into the grid's head
+axis and the k/v index_map divides by G, so each kv head's blocks are DMA'd
+once per G consecutive head programs (Pallas revisits the same block without
+re-fetching when the index is unchanged between steps).
+
+Causal/local block skipping: blocks wholly above the diagonal (or beyond the
+window) are masked via ``pl.when`` — the MXU work is skipped, mirroring
+models/flash.py's fori-loop bounds (there by trip count, here by predication;
+identical FLOPs-avoided accounting, see benchmarks/bench_attention.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                      *, scale, causal, window, bq, bk, nk):
+    iq, ik = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # block-level visibility: skip blocks fully masked out
+    q_lo = iq * bq
+    k_lo = ik * bk
+    visible = True
+    if causal:
+        visible = jnp.logical_and(visible, k_lo <= q_lo + bq - 1)
+    if window:
+        visible = jnp.logical_and(visible, q_lo - (k_lo + bk - 1) < window)
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)        # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)        # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)        # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= qpos >= kpos
+        if window:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "block_q", "block_k",
+                                    "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           block_q: int = 512, block_k: int = 512,
+                           interpret: bool = True):
+    b, sq, h, hd = q.shape
+    _, sk, kv, _ = k.shape
+    g = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    bq, bk = min(block_q, sq), min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, "seq lens must divide block sizes"
+    nq, nk = sq // bq, sk // bk
+
+    # (B, S, H, hd) → (B·H, S, hd) head-major so the grid's first axis is bh
+    qt = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * kv, sk, hd)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * kv, sk, hd)
+
+    kernel = functools.partial(_flash_fwd_kernel, scale=scale, causal=causal,
+                               window=window, bq=bq, bk=bk, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, iq, ik: (bh, iq, 0)),
+            # GQA: kv-head index = (bh mod h) // g within batch (bh // h)
+            pl.BlockSpec((1, bk, hd),
+                         lambda bh, iq, ik: ((bh // h) * kv + (bh % h) // g, ik, 0)),
+            pl.BlockSpec((1, bk, hd),
+                         lambda bh, iq, ik: ((bh // h) * kv + (bh % h) // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # running max m
+            pltpu.VMEM((bq,), jnp.float32),      # normalizer l
+            pltpu.VMEM((bq, hd), jnp.float32),   # accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

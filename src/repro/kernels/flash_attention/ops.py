@@ -1,0 +1,22 @@
+"""jit'd wrapper for the Pallas flash-attention forward.
+
+Training uses models/flash.py (pure-JAX custom-VJP flash) because the Pallas
+kernel here is forward-only; serving/prefill paths can swap this in via
+``ModelConfig``-level dispatch.  Validated against ref.py across
+shape/dtype/mask sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def flash_attention_tpu(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: int = 0,
+                        block_q: int = 512, block_k: int = 512,
+                        interpret: bool = True) -> jnp.ndarray:
+    """GQA flash attention forward: q (B,S,H,hd), k/v (B,S,KV,hd)."""
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=interpret)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash-attention Pallas kernel.
+
+Naive materialized attention (O(S²) memory) — only run at test sizes.
+GQA layout matches models/flash.py: q (B,Sq,H,hd), k/v (B,Sk,KV,hd) with
+H = KV·G query heads per kv head.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0) -> jnp.ndarray:
+    b, sq, h, hd = q.shape
+    _, sk, kv, _ = k.shape
+    g = h // kv
+    qf = q.astype(jnp.float32).reshape(b, sq, kv, g, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf) / math.sqrt(hd)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, None, None], s, NEG)
+    p = jnp.exp(s - jnp.max(s, -1, keepdims=True))
+    p = p / jnp.sum(p, -1, keepdims=True)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
+    return out.reshape(b, sq, h, hd).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.spmv.ops import ell_matvec, ell_rmatvec  # noqa: F401

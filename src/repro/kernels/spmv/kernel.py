@@ -1,0 +1,107 @@
+"""Pallas TPU kernels for padded-ELL sparse mat-vec (X·w and Xᵀ·q).
+
+Hardware adaptation (DESIGN.md §2): the paper's CSR loops are pointer-chasing
+CPU code.  On TPU we tile the fixed-shape padded layout into VMEM:
+
+  * ``matvec`` — grid over row tiles.  Each step holds an
+    (TR, K) index/value tile plus the feature vector ``w`` in VMEM and runs a
+    vectorized gather + lane reduction on the VPU.  ``w`` here is the
+    *per-device feature shard* (D_shard = D / model-parallel degree); at the
+    production mesh D_shard·4B ≈ 20M/256·4 ≈ 316 KB — comfortably inside the
+    ~16 MB VMEM budget, which is exactly why the feature-sharded layout was
+    chosen (launch/sharding.py "FW/LASSO" rules).
+
+  * ``rmatvec`` — same row tiling, but the output is the D_shard-sized
+    gradient accumulator.  TPU grid steps execute **sequentially**, so the
+    read-modify-write scatter-add into the single output block is race-free;
+    the block stays resident in VMEM across steps (same block index every
+    step → Pallas does not flush it).
+
+VMEM working set per step (f32, defaults TR=256, K=128, D_shard≤512K):
+  tile idx+val 2·256·128·4 B = 256 KB, w/out ≤ 2 MB, total < 3 MB.
+Block shapes keep the lane dim a multiple of 128 (VPU lane width) and the
+sublane dim a multiple of 8.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEF_TR = 256  # rows per tile (sublane-aligned: multiple of 8)
+
+
+def _matvec_kernel(idx_ref, val_ref, w_ref, out_ref):
+    idx = idx_ref[...]                      # (TR, K) int32
+    val = val_ref[...]                      # (TR, K)
+    w = w_ref[...]                          # (D,)
+    out_ref[...] = jnp.sum(val * w[idx], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows", "interpret"))
+def ell_matvec_pallas(indices: jnp.ndarray, values: jnp.ndarray, w: jnp.ndarray,
+                      *, tile_rows: int = DEF_TR, interpret: bool = True) -> jnp.ndarray:
+    n, k = indices.shape
+    tr = min(tile_rows, n)
+    if n % tr:  # pad rows to a tile multiple (padding rows are all-zero lanes)
+        pad = tr - n % tr
+        indices = jnp.pad(indices, ((0, pad), (0, 0)))
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+    np_, _ = indices.shape
+    grid = (np_ // tr,)
+    out = pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tr, k), lambda i: (i, 0)),
+            pl.BlockSpec((tr, k), lambda i: (i, 0)),
+            pl.BlockSpec((w.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tr,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), values.dtype),
+        interpret=interpret,
+    )(indices, values, w)
+    return out[:n]
+
+
+def _rmatvec_kernel(idx_ref, val_ref, q_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    contrib = val_ref[...] * q_ref[...][:, None]        # (TR, K)
+    flat_idx = idx_ref[...].reshape(-1)
+    # sequential grid → accumulation into the resident output block is safe
+    out_ref[...] = out_ref[...].at[flat_idx].add(contrib.reshape(-1))
+
+
+@functools.partial(jax.jit, static_argnames=("d", "tile_rows", "interpret"))
+def ell_rmatvec_pallas(indices: jnp.ndarray, values: jnp.ndarray, q: jnp.ndarray,
+                       d: int, *, tile_rows: int = DEF_TR,
+                       interpret: bool = True) -> jnp.ndarray:
+    n, k = indices.shape
+    tr = min(tile_rows, n)
+    if n % tr:
+        pad = tr - n % tr
+        indices = jnp.pad(indices, ((0, pad), (0, 0)))
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+        q = jnp.pad(q, (0, pad))
+    np_, _ = indices.shape
+    grid = (np_ // tr,)
+    return pl.pallas_call(
+        _rmatvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tr, k), lambda i: (i, 0)),
+            pl.BlockSpec((tr, k), lambda i: (i, 0)),
+            pl.BlockSpec((tr,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((d,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), values.dtype),
+        interpret=interpret,
+    )(indices, values, q)

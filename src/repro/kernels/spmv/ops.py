@@ -1,0 +1,22 @@
+"""Public jit'd wrappers for the padded-ELL sparse mat-vec kernels.
+
+``interpret`` defaults to True (this container is CPU-only; TPU is the
+target).  On a real TPU pass ``interpret=False`` — block shapes and the
+sequential-grid accumulation pattern are already TPU-legal.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.sparse.formats import PaddedCSR
+from repro.kernels.spmv.kernel import ell_matvec_pallas, ell_rmatvec_pallas
+
+
+def ell_matvec(X: PaddedCSR, w: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """X · w for a PaddedCSR design matrix via the Pallas row-tile kernel."""
+    return ell_matvec_pallas(X.indices, X.values, w, interpret=interpret)
+
+
+def ell_rmatvec(X: PaddedCSR, q: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """Xᵀ · q via the Pallas sequential scatter-accumulate kernel."""
+    return ell_rmatvec_pallas(X.indices, X.values, q, X.shape[1], interpret=interpret)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the padded-ELL sparse mat-vec kernels.
+
+Semantics (shared with kernel.py):
+  * ``indices``/``values`` are (N, K) — each row padded to K lanes with
+    ``index = 0, value = 0`` (inert in sums, safe to gather).
+  * ``matvec``:  out[i]  = Σ_k values[i,k] · w[indices[i,k]]        → (N,)
+  * ``rmatvec``: out[j] += Σ_{i,k: indices[i,k]=j} values[i,k]·q[i] → (D,)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ell_matvec_ref(indices: jnp.ndarray, values: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("nk,nk->n", values, w[indices])
+
+
+def ell_rmatvec_ref(indices: jnp.ndarray, values: jnp.ndarray, q: jnp.ndarray,
+                    d: int) -> jnp.ndarray:
+    contrib = values * q[:, None]
+    return jnp.zeros((d,), values.dtype).at[indices.reshape(-1)].add(contrib.reshape(-1))

@@ -1,0 +1,402 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=" + os.environ.get(
+    "REPRO_DRYRUN_DEVICES", "512")
+
+# --- everything below must come after the XLA flag (jax locks device count
+# --- on first init) -------------------------------------------------------
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config                     # noqa: E402
+from repro.launch.mesh import make_production_mesh                 # noqa: E402
+from repro.launch import sharding as shd                           # noqa: E402
+from repro.models.registry import (                                # noqa: E402
+    cache_specs, get_model, input_specs, supported_cells)
+from repro.models.config import SHAPES                             # noqa: E402
+from repro.train.optimizer import get_optimizer                    # noqa: E402
+from repro.train.trainer import TrainConfig, TrainState, make_train_step  # noqa: E402
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape) cell, build the production mesh
+(16×16 single-pod / 2×16×16 multi-pod), attach shardings from
+``launch/sharding.py``, and prove the distribution config is coherent:
+``jit(step).lower(**specs).compile()`` must succeed with per-device memory
+that fits a v5e (16 GB).  Records memory_analysis + cost_analysis +
+collective-bytes (parsed from the optimized HLO) per cell into a JSON that
+EXPERIMENTS.md §Dry-run / §Roofline and the roofline tooling consume.
+"""
+
+# per-arch microbatch (gradient accumulation) for the train_4k cell — memory
+# knob iterated per §Perf; 1 = no accumulation.
+TRAIN_MICROBATCH = {
+    "kimi-k2-1t-a32b": 8,
+    "deepseek-v2-236b": 4,
+    "chameleon-34b": 2,
+    "nemotron-4-15b": 2,
+}
+
+# §Perf optimized configuration (--optimized): outcome of the hillclimb
+# iterations recorded in EXPERIMENTS.md §Perf.  fsdp doubly-shards weights
+# (launch/sharding.py _RULES_FSDP) for models whose replicated-over-data
+# state exceeds the 16 GB HBM; microbatches bound the activation high-water
+# mark of the train_4k cells.
+PERF_OVERRIDES = {
+    "kimi-k2-1t-a32b": dict(fsdp="zero3_moe", microbatches=64, moe_groups=16,
+                            moe_combine="scatter"),
+    "deepseek-v2-236b": dict(fsdp="zero3_moe", microbatches=32, moe_groups=16,
+                             moe_combine="scatter"),
+    "chameleon-34b": dict(fsdp="zero2", microbatches=16),
+    "nemotron-4-15b": dict(dp="full", microbatches=1, grad_dtype="bfloat16"),
+    "falcon-mamba-7b": dict(microbatches=16),
+    "recurrentgemma-2b": dict(microbatches=16),
+    "minicpm-2b": dict(fsdp="zero2", microbatches=4),
+    "tinyllama-1.1b": dict(microbatches=2),
+    "llama3.2-1b": dict(microbatches=2),
+    "seamless-m4t-medium": dict(),
+}
+OPTIMIZED = False  # set by main(); run_cell/builders read it
+
+
+def _metrics_shardings(abstract, mesh):
+    return jax.tree.map(lambda _: shd.replicated(mesh), abstract)
+
+
+def _perf(arch: str) -> dict:
+    return PERF_OVERRIDES.get(arch, {}) if OPTIMIZED else {}
+
+
+def _perf_overrides(arch: str, overrides=None) -> dict:
+    """Merge PERF config-level knobs (moe_local_groups) into model overrides.
+    (unroll_layers is train-only — decode/prefill scans carry caches.)"""
+    perf = _perf(arch)
+    out = dict(overrides or {})
+    if perf.get("moe_groups"):
+        out["moe_local_groups"] = perf["moe_groups"]
+    if perf.get("moe_combine"):
+        out["moe_combine"] = perf["moe_combine"]
+    return out
+
+
+def build_train(arch: str, mesh, log, overrides=None):
+    api = get_model(arch, overrides=overrides)
+    cfg = api.cfg
+    perf = _perf(arch)
+    mb = perf.get("microbatches", TRAIN_MICROBATCH.get(arch, 1))
+    tc = TrainConfig(optimizer=cfg.optimizer, remat=True, microbatches=mb,
+                     grad_reduce_dtype=perf.get("grad_dtype", ""))
+    opt = get_optimizer(cfg.optimizer)
+
+    from repro.models import common as cm
+    full_dp = perf.get("dp") == "full"
+    # full-DP: batch spread over every mesh axis; weights live doubly sharded
+    # (ZeRO-3 storage) and are gathered per layer — trades batch-proportional
+    # TP all-reduce traffic for batch-independent weight gathers (§Perf).
+    cm.BATCH_AXES = ("pod", "data", "model") if full_dp else ("pod", "data")
+    baxes = cm.BATCH_AXES if full_dp else None
+    cfg_over = dict(overrides or {})
+    if perf.get("unroll"):
+        # per-layer weight gathers must not be hoisted as one stacked gather
+        # (lax.scan over stacked FSDP params materializes ALL layers' weights
+        # — measured +30 GiB temp on nemotron §Perf i3); a Python-unrolled
+        # loop lets XLA schedule gather→use→free per layer.
+        cfg_over["unroll_layers"] = True
+    if perf.get("moe_groups"):
+        # locality-aware MoE dispatch (see models/common.moe_apply)
+        cfg_over["moe_local_groups"] = perf["moe_groups"]
+    if perf.get("moe_combine"):
+        cfg_over["moe_combine"] = perf["moe_combine"]
+    if cfg_over != (overrides or {}):
+        overrides = cfg_over
+        api = get_model(arch, overrides=overrides)
+        cfg = api.cfg
+
+    def init_state(key):
+        params = api.init(key)
+        return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                          opt_state=opt.init(params))
+
+    state_abs = jax.eval_shape(init_state, jax.random.PRNGKey(0))
+    state_shd = shd.params_shardings(state_abs, mesh, log,
+                                     fsdp=True if full_dp else perf.get("fsdp", False))
+    batch_abs = input_specs(arch, "train_4k", overrides=overrides)
+    batch_shd = shd.batch_shardings(batch_abs, mesh, log, axes=baxes)
+
+    step_fn = make_train_step(api.loss, tc)
+    _, metrics_abs = jax.eval_shape(step_fn, state_abs, batch_abs)
+    jitted = jax.jit(step_fn,
+                     in_shardings=(state_shd, batch_shd),
+                     out_shardings=(state_shd, _metrics_shardings(metrics_abs, mesh)),
+                     donate_argnums=(0,))
+    return jitted, (state_abs, batch_abs)
+
+
+def build_prefill(arch: str, mesh, log, overrides=None):
+    overrides = _perf_overrides(arch, overrides)
+    api = get_model(arch, overrides=overrides)
+    params_abs = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    params_shd = shd.params_shardings(params_abs, mesh, log,
+                                      fsdp=_perf(arch).get("fsdp", False))
+    batch_abs = input_specs(arch, "prefill_32k", overrides=overrides)
+    batch_shd = shd.batch_shardings(batch_abs, mesh, log)
+
+    if api.cfg.family == "encdec":
+        fwd = lambda p, batch: api.forward(p, batch, remat=True, last_only=True)
+        args = (params_abs, batch_abs)
+        in_shd = (params_shd, batch_shd)
+    else:
+        fwd = lambda p, tokens: api.forward(p, tokens, remat=True, last_only=True)
+        args = (params_abs, batch_abs["tokens"])
+        in_shd = (params_shd, batch_shd["tokens"])
+    logits_abs = jax.eval_shape(fwd, *args)
+    baxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    out_shd = shd._sanitize((baxes, None, "model"), logits_abs.shape, mesh, log, "logits")
+    jitted = jax.jit(fwd, in_shardings=in_shd,
+                     out_shardings=jax.sharding.NamedSharding(mesh, out_shd))
+    return jitted, args
+
+
+def build_decode(arch: str, shape_name: str, mesh, log, overrides=None):
+    overrides = _perf_overrides(arch, overrides)
+    api = get_model(arch, overrides=overrides)
+    params_abs = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    params_shd = shd.params_shardings(params_abs, mesh, log,
+                                      fsdp=_perf(arch).get("fsdp", False))
+    cache_abs = cache_specs(arch, shape_name, overrides=overrides)
+    cache_shd = shd.cache_shardings(cache_abs, mesh, log)
+    toks_abs = input_specs(arch, shape_name, overrides=overrides)
+    batch_shd = shd.batch_shardings(toks_abs["tokens"], mesh, log)
+
+    def step(params, cache, tokens, pos):
+        return api.decode_step(params, cache, tokens, pos)
+
+    logits_abs, _ = jax.eval_shape(step, params_abs, cache_abs,
+                                   toks_abs["tokens"], toks_abs["pos"])
+    baxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    lg_spec = shd._sanitize((baxes, None, "model"), logits_abs.shape, mesh, log, "logits")
+    jitted = jax.jit(
+        step,
+        in_shardings=(params_shd, cache_shd, batch_shd, shd.replicated(mesh)),
+        out_shardings=(jax.sharding.NamedSharding(mesh, lg_spec), cache_shd),
+        donate_argnums=(1,),
+    )
+    return jitted, (params_abs, cache_abs, toks_abs["tokens"], toks_abs["pos"])
+
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*=?\s*([a-z0-9]+\[[^\]]*\])?", re.I)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COLL_LINE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def collective_bytes(hlo_text: str):
+    """Sum result-shape bytes of collective ops in optimized HLO, by type.
+
+    HLO format: ``%name = f32[dims]{layout} all-gather(...)`` — the result
+    shape follows '='.  Tuple results (start ops) are summed element-wise.
+    NOTE: ops inside while bodies appear once; the roofline layer multiplies
+    per-layer collectives by the trip count using the loop-structure metadata
+    it gets from the model (see roofline/analysis.py).
+    """
+    out = {}
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _COLL_LINE.search(line)
+        if not m:
+            continue
+        shape_txt, kind = m.group(1), m.group(2)
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape_txt)
+    return out
+
+
+def build_lasso(dataset: str, mesh, log, steps: int = 50):
+    """The paper's own workload: distributed DP-FW on a Table-2-sized design
+    matrix (ShapeDtypeStruct stand-ins — no allocation).  Block padding (Kc,
+    Kr) uses the dataset's average sparsity ×4 (a generous skew allowance)."""
+    from repro.configs.paper_lasso import DATASETS
+    from repro.distributed.block_sparse import block_specs
+    from repro.distributed.fw_shard import (
+        DistFWConfig, build_dist_fw_step, dist_fw_shardings)
+
+    ds = DATASETS[dataset]
+    rows = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            rows *= dict(zip(mesh.axis_names, mesh.devices.shape))[ax]
+    cols = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    kc = max(8, int(ds.n * (ds.nnz_per_row / ds.d) / rows * 4))   # rows/col/block
+    kr = max(8, int(ds.nnz_per_row / cols * 4))                    # cols/row/block
+    blocks_abs = block_specs(ds.n, ds.d, rows, cols, kc, kr)
+    cfg = DistFWConfig(lam=50.0, steps=steps, selection="gumbel", epsilon=0.1)
+    step = build_dist_fw_step(blocks_abs, cfg, mesh)
+    b_shd, y_shd = dist_fw_shardings(blocks_abs, mesh)
+    y_abs = jax.ShapeDtypeStruct((blocks_abs.padded[0],), jnp.float32)
+    jitted = jax.jit(step, in_shardings=(b_shd, y_shd))
+    return jitted, (blocks_abs, y_abs)
+
+
+def _layer_points(arch: str):
+    """Two layer counts for the roofline two-point FLOPs correction.
+
+    The correction lowers UNROLLED (scan bodies are invisible to
+    cost_analysis whatever the stacked size — verified: cost(L=2) == cost(L=4)
+    under scan) at two small layer counts; the per-layer delta then
+    extrapolates exactly for homogeneous stacks (roofline/analysis.py)."""
+    cfg = get_config(arch)
+    u = {"unroll_layers": True}
+    if cfg.family == "encdec":
+        mk = lambda l: {"n_layers": 2 * l, "enc_layers": l, "dec_layers": l, **u}
+        return (2, mk(2)), (4, mk(4)), cfg.n_layers
+    if cfg.layer_pattern:  # preserve the pattern-unit mix (e.g. "rra")
+        n = len(cfg.layer_pattern)
+        return ((n, {"n_layers": n, **u}), (2 * n, {"n_layers": 2 * n, **u}),
+                cfg.n_layers)
+    return (2, {"n_layers": 2, **u}), (4, {"n_layers": 4, **u}), cfg.n_layers
+
+
+def _build(arch, shape_name, mesh, log, overrides=None):
+    from repro.models import common as cm
+    cm.BATCH_AXES = ("pod", "data")  # reset; build_train may widen for dp="full"
+    kind = SHAPES[shape_name].kind
+    if kind == "train":
+        return build_train(arch, mesh, log, overrides)
+    if kind == "prefill":
+        return build_prefill(arch, mesh, log, overrides)
+    return build_decode(arch, shape_name, mesh, log, overrides)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             two_point: bool = False) -> dict:
+    log: list = []
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    two_point_data = None
+    with mesh:
+        if arch == "paper-lasso":
+            jitted, args = build_lasso(shape_name, mesh, log)
+        else:
+            jitted, args = _build(arch, shape_name, mesh, log)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+        if two_point and arch != "paper-lasso" and not multi_pod:
+            # roofline table is single-pod only — skip the extra compiles
+            # on the 2×16×16 mesh
+            (l1, ov1), (l2, ov2), l_full = _layer_points(arch)
+            pts = {}
+            for tag, (l, ov) in (("l1", (l1, ov1)), ("l2", (l2, ov2))):
+                j, a = _build(arch, shape_name, mesh, [], overrides=ov)
+                c = j.lower(*a).compile()
+                ca = c.cost_analysis() or {}
+                pts[tag] = {"layers": l,
+                            "flops": float(ca.get("flops", 0)),
+                            "bytes": float(ca.get("bytes accessed", 0))}
+            pts["l_full"] = l_full
+            two_point_data = pts
+    t1 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    from repro.roofline.hlo import collective_bytes_nested
+    coll = collective_bytes_nested(hlo)
+    coll_flat = collective_bytes(hlo)  # once-per-loop-body (diagnostic)
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "compile_s": round(t1 - t0, 1),
+        "flops": float(cost.get("flops", -1)) if cost else None,
+        "bytes_accessed": float(cost.get("bytes accessed", -1)) if cost else None,
+        "collective_bytes": coll,
+        "collective_bytes_flat": coll_flat,
+        "two_point": two_point_data,
+        "fallbacks": log,
+        "memory": {
+            k: getattr(mem, k)
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes")
+            if mem is not None and hasattr(mem, k)
+        },
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="single shape (default: all supported)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the §Perf PERF_OVERRIDES (FSDP + microbatch) "
+                         "instead of the paper-faithful baseline config")
+    ap.add_argument("--two-point", action="store_true",
+                    help="also lower at 2 layer counts for the roofline "
+                         "FLOPs correction (scan bodies count once)")
+    ap.add_argument("--out", default="dryrun_results.json")
+    args = ap.parse_args()
+    global OPTIMIZED
+    OPTIMIZED = args.optimized
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    results, failures = [], []
+    for arch in archs:
+        if arch == "paper-lasso":
+            from repro.configs.paper_lasso import DATASETS
+            shapes = [args.shape] if args.shape else list(DATASETS)
+        else:
+            shapes = [args.shape] if args.shape else supported_cells(arch)
+        for shape_name in shapes:
+            meshes = [False, True] if args.both_meshes else [args.multi_pod]
+            for mp in meshes:
+                tag = f"{arch} × {shape_name} × {'2x16x16' if mp else '16x16'}"
+                try:
+                    r = run_cell(arch, shape_name, mp, two_point=args.two_point)
+                    results.append(r)
+                    mem_gb = r["memory"].get("temp_size_in_bytes", 0) / 2**30
+                    print(f"[ok] {tag}: compile={r['compile_s']}s "
+                          f"flops={r['flops']:.3e} temp/device={mem_gb:.2f}GiB "
+                          f"coll={sum(r['collective_bytes'].values())/2**30:.2f}GiB",
+                          flush=True)
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    failures.append({"cell": tag, "error": str(e)})
+                    print(f"[FAIL] {tag}: {e}", flush=True)
+                    traceback.print_exc()
+            # incremental save so long sweeps are restartable
+            with open(args.out, "w") as f:
+                json.dump({"results": results, "failures": failures}, f, indent=1)
+    print(f"\n{len(results)} cells ok, {len(failures)} failed → {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,507 @@
+"""Shared neural building blocks (pure JAX, framework-free).
+
+Every module is a pair of functions:
+  ``<name>_init(key, cfg, ...) -> params`` (a dict pytree) and
+  ``<name>_apply(params, x, ...) -> out``.
+
+Attention is *blocked* (flash-style online softmax over KV chunks inside a
+``lax.scan`` / ``fori_loop``) so no S×S score tensor is ever materialized —
+required even for train_4k at the assigned batch sizes, and the pure-JAX
+reference for the Pallas flash kernel in ``repro/kernels/flash_attention``.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    # 1/sqrt(d) scale keeps tied-head logits O(1) at init
+    scale = 1.0 / math.sqrt(d)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (vocab, d), jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope / activations
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """Llama-style rotary embedding.  x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = jnp.exp(-math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def activation(name: str):
+    if name == "swiglu" or name == "geglu":
+        raise ValueError("gated activations are applied inside ffn_apply")
+    return {"relu2": lambda u: jnp.square(jax.nn.relu(u)), "gelu": jax.nn.gelu,
+            "silu": jax.nn.silu}[name]
+
+
+# ---------------------------------------------------------------------------
+# blocked attention (flash-style, pure JAX)
+# ---------------------------------------------------------------------------
+
+NEG = -1e30
+
+
+def _attend_block(q, k, v, qpos, kpos, *, causal: bool, window: int, softcap: float,
+                  scale: float, state):
+    """Online-softmax update for one KV block.
+
+    q: (B, bq, KV, G, hd); k/v: (B, bk, KV, hd); state = (m, l, acc).
+    """
+    m, l, acc = state
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    mask = jnp.ones((qpos.shape[-1], kpos.shape[-1]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, NEG)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + jnp.sum(p, axis=-1)
+    acc_new = acc * corr[..., None] + jnp.einsum(
+        "bkgqs,bskd->bkgqd", p, v.astype(jnp.float32)
+    )
+    return m_new, l_new, acc_new
+
+
+def blocked_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                      q_offset=0, softcap: float = 0.0,
+                      block_q: int = 512, block_k: int = 1024,
+                      kv_len=None):
+    """Memory-bounded attention.
+
+    q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd) with H = KV·G (GQA).
+    ``q_offset``: global position of q[0] (decode/prefill continuation).
+    ``kv_len``: live prefix length of the KV buffers (masks cache padding).
+    Returns (B, Sq, H, hd).
+    """
+    b, sq, h, hd = q.shape
+    _, sk, kv, _ = k.shape
+    hdv = v.shape[-1]
+    g = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    nq, nk = sq // block_q, sk // block_k
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, block_q, sk, block_k)
+
+    qr = q.reshape(b, nq, block_q, kv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    kr = k.reshape(b, nk, block_k, kv, hd).transpose(1, 0, 2, 3, 4)
+    vr = v.reshape(b, nk, block_k, kv, hdv).transpose(1, 0, 2, 3, 4)
+
+    kpos_all = jnp.arange(sk)
+    live = kpos_all < (kv_len if kv_len is not None else sk)
+
+    def q_block(iq, qb):
+        qpos = q_offset + iq * block_q + jnp.arange(block_q)
+
+        def kv_step(ik, state):
+            kb = jax.lax.dynamic_index_in_dim(kr, ik, 0, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vr, ik, 0, keepdims=False)
+            kpos = ik * block_k + jnp.arange(block_k)
+            kpos = jnp.where(
+                jax.lax.dynamic_slice_in_dim(live, ik * block_k, block_k),
+                kpos, jnp.full((block_k,), 2**30),
+            )
+            return _attend_block(qb, kb, vb, qpos, kpos, causal=causal,
+                                 window=window, softcap=softcap, scale=scale,
+                                 state=state)
+
+        m0 = jnp.full((b, kv, g, block_q), NEG, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, block_q), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, block_q, hdv), jnp.float32)
+        if causal and window == 0:
+            # skip blocks strictly after the diagonal (trip count is dynamic
+            # in iq → lowers to a while loop; saves ~2× FLOPs vs full sweep)
+            hi = (q_offset + (iq + 1) * block_q + block_k - 1) // block_k
+            hi = jnp.minimum(hi, nk)
+            m, l, acc = jax.lax.fori_loop(0, hi, kv_step, (m0, l0, a0))
+        elif window:
+            lo = jnp.maximum((q_offset + iq * block_q - window) // block_k, 0)
+            hi = jnp.minimum((q_offset + (iq + 1) * block_q + block_k - 1) // block_k, nk)
+            m, l, acc = jax.lax.fori_loop(lo, hi, kv_step, (m0, l0, a0))
+        else:
+            m, l, acc = jax.lax.fori_loop(0, nk, kv_step, (m0, l0, a0))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, block_q, kv * g, hdv)
+
+    outs = jax.lax.map(lambda args: q_block(*args), (jnp.arange(nq), qr))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hdv).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *, window: int = 0):
+    """Single-position attention over a (possibly padded) KV cache.
+
+    q: (B, 1, H, hd); caches: (B, S_max, KV, hd); kv_len: live length (incl.
+    current token).  Window > 0 restricts to a trailing window (ring caches
+    pass the window-sized buffer directly with kv_len = window fill).
+    """
+    b, _, h, hd = q.shape
+    kv = k_cache.shape[2]
+    hdv = v_cache.shape[-1]
+    g = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    qr = q.reshape(b, kv, g, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qr.astype(jnp.float32), k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(k_cache.shape[1])
+    mask = pos[None, :] < kv_len if jnp.ndim(kv_len) else pos < kv_len
+    if window:
+        lo = kv_len - window
+        mask = mask & (pos[None, :] >= lo if jnp.ndim(kv_len) else pos >= lo)
+    s = jnp.where(mask[:, None, None, :] if jnp.ndim(kv_len) else mask[None, None, None, :], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hdv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg: ModelConfig, dtype):
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, h * hd, dtype),
+        "wk": dense_init(ks[1], d, kvh * hd, dtype),
+        "wv": dense_init(ks[2], d, kvh * cfg.vhd, dtype),
+        "wo": dense_init(ks[3], h * cfg.vhd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def attn_qkv(p, x, cfg: ModelConfig, positions):
+    b, s, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, kvh, hd)
+    v = (x @ p["wv"]).reshape(b, s, kvh, cfg.vhd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(p, x, cfg: ModelConfig, *, window: int = 0, positions=None):
+    from repro.models.flash import flash_attention
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = attn_qkv(p, x, cfg, positions)
+    out = flash_attention(q, k, v, causal=True, window=window)
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# FFN (dense)
+# ---------------------------------------------------------------------------
+
+
+def ffn_init(key, cfg: ModelConfig, d_ff: Optional[int] = None, dtype=None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dtype = dtype or cfg.jdtype
+    ks = jax.random.split(key, 3)
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "w1": dense_init(ks[0], d, f, dtype),
+            "w3": dense_init(ks[1], d, f, dtype),
+            "w2": dense_init(ks[2], f, d, dtype),
+        }
+    return {"w1": dense_init(ks[0], d, f, dtype), "w2": dense_init(ks[2], f, d, dtype)}
+
+
+def ffn_apply(p, x, cfg: ModelConfig):
+    if cfg.act == "swiglu":
+        return (jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])) @ p["w2"]
+    if cfg.act == "geglu":
+        return (jax.nn.gelu(x @ p["w1"]) * (x @ p["w3"])) @ p["w2"]
+    act = activation(cfg.act)
+    return act(x @ p["w1"]) @ p["w2"]
+
+
+# ---------------------------------------------------------------------------
+# sharding-constraint helper (no-op outside a mesh context)
+# ---------------------------------------------------------------------------
+
+
+# which mesh axes the "batch" sentinel expands to.  The §Perf full-DP layout
+# (launch/dryrun.py PERF_OVERRIDES dp="full") widens it to include "model" so
+# activations stay batch-sharded across the whole pod instead of being
+# tensor-parallel (weight-gather traffic then replaces activation all-reduce
+# traffic — the right trade for batch-heavy dense train cells).
+BATCH_AXES = ("pod", "data")
+
+
+def constrain(x, *spec):
+    """``with_sharding_constraint`` against the ambient mesh; axis names not
+    present on the mesh are dropped; outside any mesh this is the identity —
+    so model code stays runnable on a bare CPU while anchoring the SPMD
+    partitioner's propagation on the production mesh.
+
+    Spec entries: None, axis name, tuple of names, or the sentinel "batch"
+    (expands to BATCH_AXES ∩ mesh axes).
+    """
+    from jax._src import mesh as mesh_lib
+    env = mesh_lib.thread_resources.env
+    mesh = env.physical_mesh
+    if mesh.empty:
+        return x
+    names = set(mesh.axis_names)
+
+    def fix(a):
+        if a == "batch":
+            a = tuple(n for n in BATCH_AXES if n in names)
+            return a if a else None
+        if isinstance(a, tuple):
+            a = tuple(n for n in a if n in names)
+            return a if a else None
+        return a if (a is None or a in names) else None
+
+    clean = [fix(a) for a in spec]
+    # drop axes whose dim size doesn't divide
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, a in zip(x.shape, clean + [None] * (x.ndim - len(clean))):
+        if a is None:
+            out.append(None)
+            continue
+        total = 1
+        for n in (a if isinstance(a, tuple) else (a,)):
+            total *= sizes[n]
+        out.append(a if (dim % total == 0 and dim > 0) else None)
+    return jax.lax.with_sharding_constraint(x, jax.sharding.PartitionSpec(*out))
+
+
+# ---------------------------------------------------------------------------
+# chunked cross-entropy (memory-bounded loss head)
+# ---------------------------------------------------------------------------
+
+
+def ce_loss(x, head, targets, loss_mask, vocab: int, padded_vocab: int,
+            *, tied: bool = False, logit_softcap: float = 0.0,
+            chunk_seq: int = 256):
+    """Causal-LM CE with the (B,S,padded_vocab) logits tensor never fully
+    materialized: a checkpointed ``lax.scan`` over **sequence** chunks
+    computes each chunk's f32 logits, logsumexp and target logit, then
+    discards them — backward recomputes per chunk.
+
+    Chunking over the sequence dim (not flattened tokens) keeps every chunk
+    spread across all batch (data-axis) shards, so the SPMD partitioner never
+    needs to gather the activations — chunk logits stay sharded
+    (batch → data, vocab → model).
+
+    x: (B,S,D) final hiddens; head: (D,Vp) or (Vp,D) when ``tied``;
+    targets/loss_mask: (B,S).  Returns mean NLL over masked positions.
+    """
+    b, s, d = x.shape
+    ck = min(chunk_seq, s)
+    n_chunks = -(-s // ck)
+    pad = n_chunks * ck - s
+    mf = jnp.broadcast_to(loss_mask, (b, s)).astype(jnp.float32)
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mf = jnp.pad(mf, ((0, 0), (0, pad)))
+    xs = jnp.moveaxis(x.reshape(b, n_chunks, ck, d), 1, 0)        # (C,B,ck,D)
+    ts = jnp.moveaxis(targets.reshape(b, n_chunks, ck), 1, 0)
+    ms = jnp.moveaxis(mf.reshape(b, n_chunks, ck), 1, 0)
+    # anchor: chunk dim replicated, batch stays on the data axes
+    xs = constrain(xs, None, "batch", None, None)
+    ts = constrain(ts, None, "batch", None)
+    ms = constrain(ms, None, "batch", None)
+    vmask_neg = jnp.where(jnp.arange(padded_vocab) < vocab, 0.0, -1e30).astype(jnp.float32)
+
+    def chunk_nll(xc, tc, mc):
+        logits = (jnp.einsum("bsd,vd->bsv", xc, head) if tied else xc @ head).astype(jnp.float32)
+        if logit_softcap:
+            logits = jnp.tanh(logits / logit_softcap) * logit_softcap
+        logits = logits + vmask_neg[None, None, :]
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - tgt) * mc)
+
+    chunk_nll = jax.checkpoint(chunk_nll, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(acc, inp):
+        xc, tc, mc = inp
+        return acc + chunk_nll(xc, tc, mc), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ts, ms))
+    return total / jnp.maximum(jnp.sum(mf), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts — sort-based dispatch (production path, pjit-shardable)
+# ---------------------------------------------------------------------------
+
+
+def moe_init(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 8)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    gated = cfg.act in ("swiglu", "geglu")
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32, scale=0.02),
+        "w1": _stack_init(ks[1], e, d, f, dtype),
+        "w2": _stack_init(ks[2], e, f, d, dtype),
+    }
+    if gated:
+        p["w3"] = _stack_init(ks[3], e, d, f, dtype)
+    if cfg.n_shared_experts:
+        p["shared"] = ffn_init(ks[4], cfg, d_ff=cfg.moe_d_ff * cfg.n_shared_experts, dtype=dtype)
+    return p
+
+
+def _stack_init(key, e, d_in, d_out, dtype):
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (e, d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def moe_apply(p, x, cfg: ModelConfig, capacity: Optional[int] = None):
+    """Top-k MoE with sort-based capacity dispatch.
+
+    x: (T, d) flattened tokens.  Returns (T, d) plus aux losses dict.
+    Dispatch: argsort token→expert assignments, positions via cumsum, drop
+    beyond capacity, scatter into an (E, C, d) buffer, grouped matmul, scatter
+    back weighted by gates.
+
+    ``cfg.moe_local_groups > 1`` (the pod-scale path): tokens split into
+    groups riding the data axis; each group routes **its own tokens only**,
+    so the sort/cumsum/scatter bookkeeping never crosses a shard and the one
+    cross-mesh transfer is the expert buffer itself (the intrinsic
+    all-to-all).  A global argsort instead replicates every token on every
+    device — measured 43–86 TB/step of all-reduce on the MoE train cells
+    (EXPERIMENTS.md §Perf).
+    """
+    g = cfg.moe_local_groups
+    t_all = x.shape[0]
+    if g > 1 and t_all % g == 0 and t_all // g >= 1:
+        tl = t_all // g
+        cap = capacity or max(1, int(tl * cfg.top_k / cfg.n_experts
+                                     * cfg.capacity_factor))
+        xg = constrain(x.reshape(g, tl, x.shape[1]), "batch", None, None)
+        y, aux = jax.vmap(lambda xx: _moe_dispatch(p, xx, cfg, cap))(xg)
+        return y.reshape(t_all, -1), jax.tree_util.tree_map(jnp.mean, aux)
+    cap = capacity or max(1, int(t_all * cfg.top_k / cfg.n_experts
+                                 * cfg.capacity_factor))
+    return _moe_dispatch(p, x, cfg, cap)
+
+
+def _moe_dispatch(p, x, cfg: ModelConfig, cap: int):
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    logits = (x.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                    # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = idx.reshape(-1)                                # (T·k,)
+    sort_idx = jnp.argsort(flat_e)                          # stable
+    sorted_e = flat_e[sort_idx]
+    token_of = sort_idx // k
+    counts = jnp.bincount(sorted_e, length=e)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(t * k) - starts[sorted_e]
+    keep = pos_in_e < cap
+    dest = jnp.where(keep, sorted_e * cap + pos_in_e, e * cap)  # overflow slot
+
+    xb = x[token_of]                                        # (T·k, d)
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[dest].add(jnp.where(keep[:, None], xb, 0))
+    buf = constrain(buf[:-1].reshape(e, cap, d), "model", "batch", None)
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w1"])
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, p["w3"])
+    elif cfg.act == "geglu":
+        h = jax.nn.gelu(h) * jnp.einsum("ecd,edf->ecf", buf, p["w3"])
+    else:
+        h = activation(cfg.act)(h)
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["w2"]).reshape(e * cap, d)
+
+    gates_sorted = gates.reshape(-1)[sort_idx]
+    if cfg.moe_combine == "scatter":
+        # expert-side combine: build slot→token index/gate maps (D-free — the
+        # only cross-shard traffic), scatter each expert row into its token's
+        # partial sum; the partitioner reduces y over the expert shards as an
+        # activation-sized all-reduce instead of broadcasting the whole
+        # (E,C,D) buffer (§Perf thread-2 i3).
+        tok_slot = jnp.full((e * cap + 1,), t, jnp.int32).at[dest].set(
+            jnp.where(keep, token_of, t).astype(jnp.int32))
+        gate_slot = jnp.zeros((e * cap + 1,), x.dtype).at[dest].set(
+            jnp.where(keep, gates_sorted, 0.0).astype(x.dtype))
+        y = jnp.zeros((t + 1, d), x.dtype).at[tok_slot[:-1]].add(
+            out_e * gate_slot[:-1, None])[:t]
+    else:  # "gather" — token-side (single-device-friendly) form
+        gath = jnp.where(keep[:, None], out_e[jnp.minimum(dest, e * cap - 1)], 0)
+        contrib = gath * gates_sorted[:, None].astype(x.dtype)
+        y = jnp.zeros((t, d), x.dtype).at[token_of].add(contrib)
+
+    if cfg.n_shared_experts:
+        y = y + ffn_apply(p["shared"], x, cfg)
+
+    # load-balance aux loss (Switch): E · Σ_e f_e · p_e
+    frac = jnp.bincount(flat_e, length=e) / (t * k)
+    mean_p = probs.mean(0)
+    aux = e * jnp.sum(frac * mean_p)
+    return y, {"moe_aux": aux, "dropped": 1.0 - keep.mean()}
+
+
+def scan_or_unroll(body, carry, stacked, unroll: bool):
+    """lax.scan over stacked layer params, or a Python loop when ``unroll``
+    (the roofline two-point costing path — scan bodies are invisible to
+    cost_analysis; see ModelConfig.unroll_layers)."""
+    if unroll:
+        n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+        ys = []
+        for i in range(n):
+            layer_p = jax.tree_util.tree_map(lambda a: a[i], stacked)
+            carry, y = body(carry, layer_p)
+            ys.append(y)
+        stacked_y = (jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ys)
+                     if ys and ys[0] is not None else None)
+        return carry, stacked_y
+    return jax.lax.scan(body, carry, stacked)

@@ -1,0 +1,212 @@
+"""Model configuration shared by every assigned architecture.
+
+Exact published hyperparameters live in ``repro/configs/<arch>.py``; this
+dataclass is the superset of knobs those configs set.  Derived/padded values
+(vocab padding for TP divisibility, head-sharding fallbacks) are computed
+here so dry-run reports can show both the true and padded shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | ssm | hybrid | moe | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+
+    # attention
+    head_dim: int = 0           # 0 → d_model // n_heads
+    qk_norm: bool = False       # chameleon
+    rope_theta: float = 10_000.0
+    window: int = 0             # >0 → sliding-window (local) attention
+    attn_logit_softcap: float = 0.0
+
+    # FFN
+    act: str = "swiglu"         # swiglu | relu2 | geglu
+
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    first_dense_layers: int = 0  # leading layers with dense FFN (DeepSeek style)
+    capacity_factor: float = 1.25
+    router_noise: float = 0.0
+
+    # MLA (deepseek-v2)
+    use_mla: bool = False
+    kv_lora: int = 0
+    q_lora: int = 0
+    rope_head_dim: int = 64      # decoupled rope dims per head for MLA
+    v_head_dim: int = 0
+
+    # SSM (mamba1)
+    ssm_state: int = 0
+    d_inner: int = 0
+    conv_kernel: int = 4
+    dt_rank: int = 0             # 0 → ceil(d_model/16)
+
+    # hybrid (recurrentgemma)
+    layer_pattern: str = ""      # e.g. "rra" tiled over n_layers
+    d_rnn: int = 0               # RG-LRU width
+
+    # encoder-decoder (seamless)
+    enc_layers: int = 0
+    dec_layers: int = 0
+
+    # embeddings / head
+    tie_embeddings: bool = False
+    emb_scale: bool = False      # multiply embeddings by sqrt(d_model)
+    logit_softcap: float = 0.0
+
+    # numerics / training
+    dtype: str = "bfloat16"      # activations/params dtype for large-scale runs
+    norm_eps: float = 1e-5
+
+    # lower with a Python loop over layers instead of lax.scan — used by the
+    # roofline two-point method (cost_analysis counts a scan body once, so
+    # per-layer costs are invisible under scan; unrolled lowering exposes
+    # them exactly).  Never used for real training (compile time).
+    unroll_layers: bool = False
+
+    # MoE dispatch locality: 0 = single global sort (fine on one device;
+    # SPMD-hostile at pod scale — a global argsort forces token replication,
+    # measured 43–86 TB/step of all-reduce on deepseek/kimi train, §Perf).
+    # >1 = route each of `moe_local_groups` token groups locally (group dim
+    # rides the data axis), so only the (groups, E, C_loc, D) expert buffer
+    # crosses the mesh — the intrinsic all-to-all volume.
+    moe_local_groups: int = 0
+    # combine form: "gather" pulls each token's expert rows (partitioner
+    # broadcasts the (E,C,D) buffer across shards); "scatter" pushes each
+    # expert row into a token partial-sum (activation-sized reduce + D-free
+    # index maps).  Identical math (test-pinned); §Perf thread-2 i3.
+    moe_combine: str = "gather"
+
+    # which optimizer the trainer uses at scale (DESIGN.md §5 memory notes)
+    optimizer: str = "adamw"     # adamw | adafactor
+
+    # ------------------------------------------------------------------ derived
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def vhd(self) -> int:
+        return self.v_head_dim or self.hd
+
+    @property
+    def padded_vocab(self) -> int:
+        return round_up(self.vocab, 2048)
+
+    @property
+    def dt_rank_(self) -> int:
+        return self.dt_rank or (self.d_model + 15) // 16
+
+    @property
+    def jdtype(self):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.dtype]
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if the arch can run long_500k (no full-attention layer)."""
+        if self.family == "ssm":
+            return True
+        if self.family == "hybrid":
+            return self.window > 0  # local attention is O(S·window)
+        return False
+
+    def pattern(self) -> str:
+        """Per-layer kind string of length n_layers ('f'=full attn, 'l'=local,
+        'r'=recurrent, 'm'=mamba)."""
+        if self.family == "ssm":
+            return "m" * self.n_layers
+        if self.layer_pattern:
+            reps = (self.n_layers + len(self.layer_pattern) - 1) // len(self.layer_pattern)
+            return (self.layer_pattern * reps)[: self.n_layers]
+        return ("l" if self.window else "f") * self.n_layers
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, v = self.d_model, self.padded_vocab
+        total = v * d  # embedding
+        if not self.tie_embeddings:
+            total += v * d
+        for kind in self.pattern():
+            total += self._block_params(kind)
+        if self.family == "encdec":
+            # encoder blocks (full attn + ffn) — pattern above covered decoder
+            total += self.enc_layers * self._block_params("f", cross=False)
+            total += self.dec_layers * (self.d_model * self.hd * (self.n_heads + 2 * self.n_kv_heads)
+                                        + self.n_heads * self.hd * self.d_model)  # cross-attn
+        return total
+
+    def _block_params(self, kind: str, cross: bool = False) -> int:
+        d = self.d_model
+        if kind == "m":
+            di, r, s = self.d_inner, self.dt_rank_, self.ssm_state
+            return (d * 2 * di + di * self.conv_kernel + di * (r + 2 * s)
+                    + r * di + di * s + di + di * d)
+        total = 0
+        if kind in ("f", "l"):
+            if self.use_mla:
+                qd = self.q_lora or d
+                total += d * self.q_lora if self.q_lora else 0
+                total += qd * self.n_heads * (self.hd + self.rope_head_dim)
+                total += d * (self.kv_lora + self.rope_head_dim)
+                total += self.kv_lora * self.n_heads * (self.hd + self.vhd)
+                total += self.n_heads * self.vhd * d
+            else:
+                total += d * self.hd * (self.n_heads + 2 * self.n_kv_heads)
+                total += self.n_heads * self.vhd * d
+        if kind == "r":
+            dr = self.d_rnn
+            total += d * dr * 2 + dr * 4 + dr * self.conv_kernel + dr * d  # in-projs, gates, conv, out
+        # ffn
+        total += self._ffn_params()
+        return total
+
+    def _ffn_params(self) -> int:
+        d = self.d_model
+        def dense_ffn(f):
+            mult = 3 if self.act in ("swiglu", "geglu") else 2
+            return mult * d * f
+        if self.n_experts:
+            per = dense_ffn(self.moe_d_ff)
+            return (self.n_experts + self.n_shared_experts) * per + d * self.n_experts
+        return dense_ffn(self.d_ff)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One of the four assigned input shapes."""
+
+    name: str                    # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}

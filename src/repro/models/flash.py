@@ -1,0 +1,184 @@
+"""Pure-JAX flash attention with a custom VJP (Dao et al., TPU-adapted).
+
+Forward: online-softmax over KV blocks (never materializes S×S), saving only
+(q, k, v, out, lse).  Backward: two blockwise passes (dq by q-block; dk/dv by
+kv-block) that *recompute* the probability tiles — O(block²) live memory in
+both directions, which is what makes train_4k at the assigned batch sizes and
+prefill_32k fit HBM.
+
+Causal block-skipping uses ``fori_loop`` with data-dependent trip counts —
+legal here because custom_vjp hides the loops from autodiff; each pass saves
+~2× FLOPs versus a full masked sweep.
+
+GQA layout: q (B,Sq,H,hd), k/v (B,Sk,KV,hd[v]) with H = KV·G.  This module is
+also the reference implementation the Pallas kernel
+(``repro/kernels/flash_attention``) is validated against.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 512, block_k: int = 1024):
+    return _flash(q, k, v, causal, window, block_q, block_k)
+
+
+def _bounds(iq, bq, bk, nk, causal, window):
+    """KV-block range [lo, hi) visible to q-block iq."""
+    hi = jnp.minimum(((iq + 1) * bq + bk - 1) // bk, nk) if causal else nk
+    lo = jnp.maximum((iq * bq - window + 1) // bk, 0) if window else 0
+    return lo, hi
+
+
+def _mask(qpos, kpos, causal, window):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window:
+        m &= qpos[:, None] - kpos[None, :] < window
+    return m
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, window, block_q, block_k):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, block_q, block_k)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, window, block_q, block_k):
+    b, sq, h, hd = q.shape
+    _, sk, kv, hdk = k.shape
+    hdv = v.shape[-1]
+    g = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    bq, bk = min(block_q, sq), min(block_k, sk)
+    nq, nk = sq // bq, sk // bk
+    assert sq % bq == 0 and sk % bk == 0
+
+    qr = q.reshape(b, nq, bq, kv, g, hd).transpose(1, 0, 3, 4, 2, 5)   # (nq,B,KV,G,bq,hd)
+    kr = k.reshape(b, nk, bk, kv, hdk).transpose(1, 0, 3, 2, 4)        # (nk,B,KV,bk,hdk)
+    vr = v.reshape(b, nk, bk, kv, hdv).transpose(1, 0, 3, 2, 4)
+
+    def q_block(iq, qb):
+        qpos = iq * bq + jnp.arange(bq)
+
+        def body(ik, state):
+            m, l, acc = state
+            kb = jax.lax.dynamic_index_in_dim(kr, ik, 0, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vr, ik, 0, keepdims=False)
+            kpos = ik * bk + jnp.arange(bk)
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32)) * scale
+            s = jnp.where(_mask(qpos, kpos, causal, window)[None, None, None], s, NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum("bkgqs,bksd->bkgqd", p, vb.astype(jnp.float32))
+            return m_new, l, acc
+
+        m0 = jnp.full((b, kv, g, bq), NEG, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, bq), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, bq, hdv), jnp.float32)
+        lo, hi = _bounds(iq, bq, bk, nk, causal, window)
+        m, l, acc = jax.lax.fori_loop(lo, hi, body, (m0, l0, a0))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return out, lse
+
+    outs, lses = jax.lax.map(lambda args: q_block(*args), (jnp.arange(nq), qr))
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, hdv).astype(q.dtype)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(b, kv, g, sq)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, causal, window, block_q, block_k):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, block_q, block_k)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, block_q, block_k, res, dout):
+    q, k, v, out, lse = res
+    b, sq, h, hd = q.shape
+    _, sk, kv, hdk = k.shape
+    hdv = v.shape[-1]
+    g = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    bq, bk = min(block_q, sq), min(block_k, sk)
+    nq, nk = sq // bq, sk // bk
+
+    qr = q.reshape(b, nq, bq, kv, g, hd).transpose(1, 0, 3, 4, 2, 5)
+    kr = k.reshape(b, nk, bk, kv, hdk).transpose(1, 0, 3, 2, 4)
+    vr = v.reshape(b, nk, bk, kv, hdv).transpose(1, 0, 3, 2, 4)
+    do = dout.reshape(b, nq, bq, kv, g, hdv).transpose(1, 0, 3, 4, 2, 5)
+    o = out.reshape(b, nq, bq, kv, g, hdv).transpose(1, 0, 3, 4, 2, 5)
+    lse_r = lse.reshape(b, kv, g, nq, bq).transpose(3, 0, 1, 2, 4)     # (nq,B,KV,G,bq)
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), -1)  # (nq,B,KV,G,bq)
+
+    def _p(qb, kb, qpos, kpos, lse_b):
+        s = jnp.einsum("bkgqd,bksd->bkgqs", qb.astype(jnp.float32),
+                       kb.astype(jnp.float32)) * scale
+        s = jnp.where(_mask(qpos, kpos, causal, window)[None, None, None], s, NEG)
+        return jnp.exp(s - lse_b[..., None])
+
+    # ---- pass 1: dq (loop q blocks; inner kv) -------------------------------
+    def dq_block(args):
+        iq, qb, dob, deltab, lseb = args
+        qpos = iq * bq + jnp.arange(bq)
+
+        def body(ik, dq_acc):
+            kb = jax.lax.dynamic_index_in_dim(kr, ik, 0, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vr, ik, 0, keepdims=False)
+            kpos = ik * bk + jnp.arange(bk)
+            p = _p(qb, kb, qpos, kpos, lseb)
+            dp = jnp.einsum("bkgqd,bksd->bkgqs", dob.astype(jnp.float32), vb.astype(jnp.float32))
+            ds = p * (dp - deltab[..., None])
+            return dq_acc + jnp.einsum("bkgqs,bksd->bkgqd", ds, kb.astype(jnp.float32)) * scale
+
+        lo, hi = _bounds(iq, bq, bk, nk, causal, window)
+        dq0 = jnp.zeros((b, kv, g, bq, hd), jnp.float32)
+        return jax.lax.fori_loop(lo, hi, body, dq0)
+
+    dqs = jax.lax.map(dq_block, (jnp.arange(nq), qr, do, delta, lse_r))
+    dq = dqs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, hd).astype(q.dtype)
+
+    # ---- pass 2: dk, dv (loop kv blocks; inner q) ----------------------------
+    def dkv_block(args):
+        ik, kb, vb = args
+        kpos = ik * bk + jnp.arange(bk)
+
+        def body(iq, acc):
+            dk_acc, dv_acc = acc
+            qb = jax.lax.dynamic_index_in_dim(qr, iq, 0, keepdims=False)
+            dob = jax.lax.dynamic_index_in_dim(do, iq, 0, keepdims=False)
+            deltab = jax.lax.dynamic_index_in_dim(delta, iq, 0, keepdims=False)
+            lseb = jax.lax.dynamic_index_in_dim(lse_r, iq, 0, keepdims=False)
+            qpos = iq * bq + jnp.arange(bq)
+            p = _p(qb, kb, qpos, kpos, lseb)
+            dv_acc = dv_acc + jnp.einsum("bkgqs,bkgqd->bksd", p, dob.astype(jnp.float32))
+            dp = jnp.einsum("bkgqd,bksd->bkgqs", dob.astype(jnp.float32), vb.astype(jnp.float32))
+            ds = p * (dp - deltab[..., None])
+            dk_acc = dk_acc + jnp.einsum("bkgqs,bkgqd->bksd", ds, qb.astype(jnp.float32)) * scale
+            return dk_acc, dv_acc
+
+        # q blocks that can see kv block ik
+        lo_q = (ik * bk) // bq if causal else 0
+        hi_q = jnp.minimum((ik * bk + bk + window + bq - 1) // bq, nq) if window else nq
+        dk0 = jnp.zeros((b, kv, bk, hdk), jnp.float32)
+        dv0 = jnp.zeros((b, kv, bk, hdv), jnp.float32)
+        return jax.lax.fori_loop(lo_q, hi_q, body, (dk0, dv0))
+
+    dks, dvs = jax.lax.map(dkv_block, (jnp.arange(nk), kr, vr))
+    dk = dks.transpose(1, 0, 3, 2, 4).reshape(b, sk, kv, hdk).astype(k.dtype)
+    dv = dvs.transpose(1, 0, 3, 2, 4).reshape(b, sk, kv, hdv).astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)

@@ -1,0 +1,213 @@
+"""Mamba-1 (selective SSM) LM — falcon-mamba-7b family.
+
+The selective scan is computed chunk-parallel: the sequence is split into
+chunks, an ``associative_scan`` (parallel prefix over (a, b) pairs with
+(a₁,b₁)∘(a₂,b₂) = (a₁a₂, a₂b₁+b₂)) runs inside each chunk, and a sequential
+``lax.scan`` carries the (B, d_inner, N) state across chunks — bounded memory
+at any sequence length, which is what lets this arch run the ``long_500k``
+cell.  Decode carries (conv window, ssm state) — O(1) per token, no KV cache.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.config import ModelConfig
+
+CHUNK = 256
+
+
+def block_init(key, cfg: ModelConfig):
+    dtype = cfg.jdtype
+    d, di, r, n, k = cfg.d_model, cfg.d_inner, cfg.dt_rank_, cfg.ssm_state, cfg.conv_kernel
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    a_init = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))
+    dt_bias = jnp.log(jnp.exp(jnp.exp(
+        jax.random.uniform(ks[4], (di,), minval=math.log(1e-3), maxval=math.log(1e-1)))) - 1.0 + 1e-9)
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "in_proj": cm.dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.truncated_normal(ks[1], -2, 2, (k, di), jnp.float32) / math.sqrt(k)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": cm.dense_init(ks[2], di, r + 2 * n, dtype),
+        "dt_proj": cm.dense_init(ks[3], r, di, dtype, scale=r**-0.5),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "a_log": jnp.log(a_init),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": cm.dense_init(ks[5], di, d, dtype),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv.  x: (B,S,di); w: (K,di).  state: (B,K-1,di)
+    carried for decode.  Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, di)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    new_state = xp[:, -(k - 1):, :]
+    return y + b[None, None, :], new_state
+
+
+def _ssm_chunked(dA, dBx, c, h0):
+    """Chunk-parallel selective scan.
+
+    dA, dBx: (B, S, di, N); c: (B, S, N); h0: (B, di, N) initial state.
+    Returns y: (B, S, di), h_final.
+    """
+    b, s, di, n = dA.shape
+    nc = max(1, s // CHUNK)
+    ck = s // nc
+    assert s % ck == 0
+
+    dA_c = dA.reshape(b, nc, ck, di, n).transpose(1, 0, 2, 3, 4)
+    dBx_c = dBx.reshape(b, nc, ck, di, n).transpose(1, 0, 2, 3, 4)
+    c_c = c.reshape(b, nc, ck, n).transpose(1, 0, 2, 3)
+
+    def chunk_step(h, inp):
+        a, bx, cc = inp  # (B, ck, di, N), (B, ck, N)
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+        a_cum, b_cum = jax.lax.associative_scan(combine, (a, bx), axis=1)
+        h_t = a_cum * h[:, None] + b_cum                 # (B, ck, di, N)
+        y = jnp.einsum("bsdn,bsn->bsd", h_t, cc)
+        return h_t[:, -1], y
+
+    h_final, ys = jax.lax.scan(chunk_step, h0, (dA_c, dBx_c, c_c))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, di)
+    return y, h_final
+
+
+def _ssm_inputs(p, xc, cfg: ModelConfig):
+    """Shared projections: returns (dA, dBx, C) from conv output xc (B,S,di)."""
+    r, n = cfg.dt_rank_, cfg.ssm_state
+    proj = xc @ p["x_proj"]                               # (B,S,r+2N)
+    dt_r, b_mat, c_mat = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt_r.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"])                  # (B,S,di)
+    a = -jnp.exp(p["a_log"])                              # (di,N)
+    dA = jnp.exp(dt[..., None] * a[None, None])           # (B,S,di,N)
+    dBx = (dt * xc.astype(jnp.float32))[..., None] * b_mat.astype(jnp.float32)[:, :, None, :]
+    return dA, dBx, c_mat.astype(jnp.float32)
+
+
+def block_apply(p, x, cfg: ModelConfig, h0=None, conv_state=None):
+    """Full-sequence mamba block.  Returns (x_out, (h_final, conv_state))."""
+    b, s, d = x.shape
+    di = cfg.d_inner
+    res = x
+    x = cm.rmsnorm(x, p["ln"], cfg.norm_eps)
+    xz = x @ p["in_proj"]
+    xi, z = xz[..., :di], xz[..., di:]
+    xc, conv_state = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    dA, dBx, c_mat = _ssm_inputs(p, xc, cfg)
+    if h0 is None:
+        h0 = jnp.zeros((b, di, cfg.ssm_state), jnp.float32)
+    y, h_final = _ssm_chunked(dA, dBx, c_mat, h0)
+    y = y + p["d_skip"][None, None] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return res + y @ p["out_proj"], (h_final, conv_state)
+
+
+def block_decode(p, x, cache, cfg: ModelConfig):
+    """One-token step.  cache = {"h": (B,di,N) f32, "conv": (B,K-1,di)}."""
+    b = x.shape[0]
+    di = cfg.d_inner
+    res = x
+    x = cm.rmsnorm(x, p["ln"], cfg.norm_eps)
+    xz = x @ p["in_proj"]
+    xi, z = xz[..., :di], xz[..., di:]
+    xc, conv_state = _causal_conv(xi, p["conv_w"], p["conv_b"], cache["conv"])
+    xc = jax.nn.silu(xc)
+    dA, dBx, c_mat = _ssm_inputs(p, xc, cfg)              # S=1
+    h = dA[:, 0] * cache["h"] + dBx[:, 0]                 # (B,di,N)
+    y = jnp.einsum("bdn,bn->bd", h, c_mat[:, 0])[:, None]
+    y = y + p["d_skip"][None, None] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return res + y @ p["out_proj"], {"h": h, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# LM shell
+# ---------------------------------------------------------------------------
+
+
+def lm_init(key, cfg: ModelConfig):
+    dtype = cfg.jdtype
+    k1, k2, k3 = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k3, cfg.n_layers)
+    p = {
+        "embed": cm.embed_init(k1, cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "blocks": jax.vmap(lambda k: block_init(k, cfg))(layer_keys),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = cm.dense_init(k2, cfg.d_model, cfg.padded_vocab, dtype)
+    return p
+
+
+def _backbone(p, x, cfg: ModelConfig, *, remat: bool = True):
+    def body(h, layer_p):
+        h, _ = block_apply(layer_p, h, cfg)
+        return h, None
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = cm.scan_or_unroll(body, x, p["blocks"], cfg.unroll_layers)
+    return cm.rmsnorm(x, p["final_norm"], cfg.norm_eps)
+
+
+def lm_loss(p, batch, cfg: ModelConfig, *, remat: bool = True):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = jnp.take(p["embed"], tokens, axis=0)
+    x = _backbone(p, x, cfg, remat=remat)
+    targets = jnp.roll(tokens, -1, axis=1)
+    mask = (jnp.arange(s) < s - 1)[None, :]
+    head = p["embed"] if cfg.tie_embeddings else p["head"]
+    return cm.ce_loss(x, head, targets, mask, cfg.vocab, cfg.padded_vocab,
+                      tied=cfg.tie_embeddings)
+
+
+def lm_forward(p, tokens, cfg: ModelConfig, *, remat: bool = False,
+               last_only: bool = False):
+    from repro.models.transformer import _logits
+    x = jnp.take(p["embed"], tokens, axis=0)
+    x = _backbone(p, x, cfg, remat=remat)
+    if last_only:
+        x = x[:, -1:, :]
+    return _logits(p, x, cfg)
+
+
+def lm_init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    del max_len  # state size is sequence-independent (the SSM win)
+    return {
+        "h": jnp.zeros((cfg.n_layers, batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_kernel - 1, cfg.d_inner), cfg.jdtype),
+    }
+
+
+def lm_decode_step(p, cache, tokens, pos, cfg: ModelConfig):
+    from repro.models.transformer import _logits
+    del pos  # stateful recurrence — position-free
+    x = jnp.take(p["embed"], tokens, axis=0)
+
+    def body(h, inp):
+        layer_p, layer_cache = inp
+        h, new_cache = block_decode(layer_p, h, layer_cache, cfg)
+        return h, new_cache
+
+    x, new_cache = jax.lax.scan(body, x, (p["blocks"], cache))
+    x = cm.rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    return _logits(p, x, cfg), new_cache

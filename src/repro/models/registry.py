@@ -1,0 +1,112 @@
+"""Architecture registry: resolve ``--arch <id>`` to model functions and
+ShapeDtypeStruct input specs for every assigned (arch × shape) cell."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, smoke_config
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    """Uniform surface over the four model families."""
+
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss: Callable[..., Any]
+    forward: Optional[Callable[..., Any]]
+    init_cache: Callable[..., Any]
+    decode_step: Callable[..., Any]
+
+
+def _family_module(cfg: ModelConfig):
+    if cfg.family == "ssm":
+        from repro.models import mamba as m
+    elif cfg.family == "hybrid":
+        from repro.models import rglru as m
+    elif cfg.family == "encdec":
+        from repro.models import encdec as m
+    else:  # dense / moe
+        from repro.models import transformer as m
+    return m
+
+
+def get_model(arch_id: str, *, smoke: bool = False,
+              overrides: Optional[dict] = None) -> ModelAPI:
+    """``overrides``: dataclasses.replace fields applied to the config —
+    used by the roofline two-point method (lower at n_layers ∈ {1, 2} and
+    extrapolate; see roofline/analysis.py)."""
+    cfg = smoke_config(arch_id) if smoke else get_config(arch_id)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    m = _family_module(cfg)
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key: m.lm_init(key, cfg),
+        loss=lambda p, batch, remat=True: m.lm_loss(p, batch, cfg, remat=remat),
+        forward=(lambda p, tokens, remat=False, last_only=False:
+                 m.lm_forward(p, tokens, cfg, remat=remat, last_only=last_only))
+        if hasattr(m, "lm_forward") else None,
+        init_cache=lambda batch, max_len: m.lm_init_cache(cfg, batch, max_len),
+        decode_step=lambda p, cache, tokens, pos: m.lm_decode_step(p, cache, tokens, pos, cfg),
+    )
+
+
+def input_specs(arch_id: str, shape_name: str, *, smoke: bool = False,
+                overrides: Optional[dict] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the cell's step inputs (no allocation).
+
+    train/prefill → {"tokens": (B,S)} (+ "frames" for enc-dec);
+    decode        → {"tokens": (B,1), "pos": scalar} (cache specs come from
+                    ``cache_specs``).
+    """
+    cfg = smoke_config(arch_id) if smoke else get_config(arch_id)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            half = s // 2
+            return {
+                "frames": jax.ShapeDtypeStruct((b, half, cfg.d_model), cfg.jdtype),
+                "tokens": jax.ShapeDtypeStruct((b, half), i32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    # decode: one new token against a seq_len cache
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def cache_specs(arch_id: str, shape_name: str, *, smoke: bool = False,
+                overrides: Optional[dict] = None):
+    """Abstract cache pytree for decode cells (eval_shape — no allocation)."""
+    cfg = smoke_config(arch_id) if smoke else get_config(arch_id)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    m = _family_module(cfg)
+    shape = SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        s = s // 2
+    return jax.eval_shape(lambda: m.lm_init_cache(cfg, b, s))
+
+
+def supported_cells(arch_id: str):
+    """The assigned shape list for this arch, with skip rationale applied."""
+    cfg = get_config(arch_id)
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.is_subquadratic:
+        cells.append("long_500k")
+    return cells
+
+
+ALL_CELLS = [(a, s) for a in ARCH_IDS for s in SHAPES]

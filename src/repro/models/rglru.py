@@ -1,0 +1,250 @@
+"""RecurrentGemma / Griffin hybrid — RG-LRU recurrent blocks + local attention.
+
+Layer pattern "rra" (two recurrent blocks, one local-MQA attention block)
+tiled over ``n_layers``.  The RG-LRU recurrence
+
+    a_t = exp(-c · softplus(Λ) · r_t),   r_t = σ(W_r x_t),  i_t = σ(W_i x_t)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+is diagonal, so it runs as a chunked associative scan (same machinery as
+mamba, state (B, d_rnn)).  Local attention uses a ring-buffer KV cache of
+``window`` positions → the arch is sub-quadratic and runs ``long_500k``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.config import ModelConfig
+
+LRU_C = 8.0
+CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block
+# ---------------------------------------------------------------------------
+
+
+def rec_block_init(key, cfg: ModelConfig):
+    dtype = cfg.jdtype
+    d, dr, k = cfg.d_model, cfg.d_rnn, cfg.conv_kernel
+    ks = jax.random.split(key, 7)
+    # Λ init so that a ∈ [0.9, 0.999] at r=1 (Griffin §2.4)
+    u = jax.random.uniform(ks[5], (dr,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.exp(-jnp.log(u) / LRU_C) - 1.0)  # softplus⁻¹(-log a / c)
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "in_x": cm.dense_init(ks[0], d, dr, dtype),
+        "in_gate": cm.dense_init(ks[1], d, dr, dtype),
+        "conv_w": (jax.random.truncated_normal(ks[2], -2, 2, (k, dr), jnp.float32) / math.sqrt(k)).astype(dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "w_r": cm.dense_init(ks[3], dr, dr, dtype),
+        "w_i": cm.dense_init(ks[4], dr, dr, dtype),
+        "lam": lam.astype(jnp.float32),
+        "out": cm.dense_init(ks[6], dr, d, dtype),
+    }
+
+
+def _lru_scan(a, bx, h0):
+    """Diagonal linear recurrence via chunked associative scan.
+    a, bx: (B,S,dr) f32; h0: (B,dr)."""
+    b, s, dr = a.shape
+    nc = max(1, s // CHUNK)
+    ck = s // nc
+    a_c = a.reshape(b, nc, ck, dr).transpose(1, 0, 2, 3)
+    bx_c = bx.reshape(b, nc, ck, dr).transpose(1, 0, 2, 3)
+
+    def chunk(h, inp):
+        aa, bb = inp
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+        a_cum, b_cum = jax.lax.associative_scan(combine, (aa, bb), axis=1)
+        h_t = a_cum * h[:, None] + b_cum
+        return h_t[:, -1], h_t
+
+    h_final, hs = jax.lax.scan(chunk, h0, (a_c, bx_c))
+    return hs.transpose(1, 0, 2, 3).reshape(b, s, dr), h_final
+
+
+def _lru_gates(p, xc):
+    r = jax.nn.sigmoid(xc.astype(jnp.float32) @ p["w_r"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xc.astype(jnp.float32) @ p["w_i"].astype(jnp.float32))
+    log_a = -LRU_C * jax.nn.softplus(p["lam"])[None, None] * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * xc.astype(jnp.float32)
+    return a, gated
+
+
+def rec_block_apply(p, x, cfg: ModelConfig, h0=None, conv_state=None):
+    from repro.models.mamba import _causal_conv
+    b, s, d = x.shape
+    res = x
+    x = cm.rmsnorm(x, p["ln"], cfg.norm_eps)
+    gate = jax.nn.gelu(x @ p["in_gate"])
+    xi = x @ p["in_x"]
+    xc, conv_state = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_state)
+    a, gated = _lru_gates(p, xc)
+    if h0 is None:
+        h0 = jnp.zeros((b, cfg.d_rnn), jnp.float32)
+    h, h_final = _lru_scan(a, gated, h0)
+    y = (h.astype(x.dtype) * gate) @ p["out"]
+    return res + y, (h_final, conv_state)
+
+
+def rec_block_decode(p, x, cache, cfg: ModelConfig):
+    from repro.models.mamba import _causal_conv
+    res = x
+    x = cm.rmsnorm(x, p["ln"], cfg.norm_eps)
+    gate = jax.nn.gelu(x @ p["in_gate"])
+    xi = x @ p["in_x"]
+    xc, conv_state = _causal_conv(xi, p["conv_w"], p["conv_b"], cache["conv"])
+    a, gated = _lru_gates(p, xc)
+    h = a[:, 0] * cache["h"] + gated[:, 0]
+    y = (h[:, None].astype(x.dtype) * gate) @ p["out"]
+    return res + y, {"h": h, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# Hybrid LM: pattern-tiled blocks
+# ---------------------------------------------------------------------------
+
+
+def _layer_kinds(cfg: ModelConfig):
+    pat = cfg.pattern()
+    return [k for k in pat]
+
+
+def _mlp_init(key, cfg):
+    return {"ln": jnp.zeros((cfg.d_model,), cfg.jdtype), "ffn": cm.ffn_init(key, cfg, dtype=cfg.jdtype)}
+
+
+def _mlp_apply(p, x, cfg):
+    return x + cm.ffn_apply(p["ffn"], cm.rmsnorm(x, p["ln"], cfg.norm_eps), cfg)
+
+
+def _attn_block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"ln": jnp.zeros((cfg.d_model,), cfg.jdtype), "attn": cm.attn_init(k1, cfg, cfg.jdtype)}
+
+
+def lm_init(key, cfg: ModelConfig):
+    dtype = cfg.jdtype
+    kinds = _layer_kinds(cfg)
+    keys = jax.random.split(key, len(kinds) * 2 + 2)
+    blocks = []
+    for li, kind in enumerate(kinds):
+        kb, km = keys[2 * li], keys[2 * li + 1]
+        if kind == "r":
+            blk = {"kind_r": rec_block_init(kb, cfg), "mlp": _mlp_init(km, cfg)}
+        else:
+            blk = {"kind_a": _attn_block_init(kb, cfg), "mlp": _mlp_init(km, cfg)}
+        blocks.append(blk)
+    p = {
+        "embed": cm.embed_init(keys[-2], cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "blocks": blocks,  # heterogeneous list (pattern-ordered)
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = cm.dense_init(keys[-1], cfg.d_model, cfg.padded_vocab, dtype)
+    return p
+
+
+def _apply_block(blk, x, cfg: ModelConfig, remat: bool):
+    def run(x):
+        if "kind_r" in blk:
+            x, _ = rec_block_apply(blk["kind_r"], x, cfg)
+        else:
+            a = blk["kind_a"]
+            h = cm.rmsnorm(x, a["ln"], cfg.norm_eps)
+            x = x + cm.attn_apply(a["attn"], h, cfg, window=cfg.window)
+        return _mlp_apply(blk["mlp"], x, cfg)
+    if remat:
+        run = jax.checkpoint(run, policy=jax.checkpoint_policies.nothing_saveable)
+    return run(x)
+
+
+def _backbone(p, x, cfg: ModelConfig, *, remat: bool = True):
+    for blk in p["blocks"]:
+        x = _apply_block(blk, x, cfg, remat)
+    return cm.rmsnorm(x, p["final_norm"], cfg.norm_eps)
+
+
+def lm_loss(p, batch, cfg: ModelConfig, *, remat: bool = True):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = jnp.take(p["embed"], tokens, axis=0)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    x = _backbone(p, x, cfg, remat=remat)
+    targets = jnp.roll(tokens, -1, axis=1)
+    mask = (jnp.arange(s) < s - 1)[None, :]
+    head = p["embed"] if cfg.tie_embeddings else p["head"]
+    return cm.ce_loss(x, head, targets, mask, cfg.vocab, cfg.padded_vocab,
+                      tied=cfg.tie_embeddings)
+
+
+def lm_forward(p, tokens, cfg: ModelConfig, *, remat: bool = False,
+               last_only: bool = False):
+    from repro.models.transformer import _logits
+    x = jnp.take(p["embed"], tokens, axis=0)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    x = _backbone(p, x, cfg, remat=remat)
+    if last_only:
+        x = x[:, -1:, :]
+    return _logits(p, x, cfg)
+
+
+def lm_init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Per-layer caches: LRU state + conv for 'r', ring KV for 'a'."""
+    kinds = _layer_kinds(cfg)
+    win = min(cfg.window or max_len, max_len)
+    caches = []
+    for kind in kinds:
+        if kind == "r":
+            caches.append({
+                "h": jnp.zeros((batch, cfg.d_rnn), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.conv_kernel - 1, cfg.d_rnn), cfg.jdtype),
+            })
+        else:
+            caches.append({
+                "k": jnp.zeros((batch, win, cfg.n_kv_heads, cfg.hd), cfg.jdtype),
+                "v": jnp.zeros((batch, win, cfg.n_kv_heads, cfg.vhd), cfg.jdtype),
+            })
+    return caches
+
+
+def lm_decode_step(p, cache, tokens, pos, cfg: ModelConfig):
+    from repro.models.transformer import _logits
+    b = tokens.shape[0]
+    x = jnp.take(p["embed"], tokens, axis=0)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    new_cache = []
+    for blk, lc in zip(p["blocks"], cache):
+        if "kind_r" in blk:
+            x, lc = rec_block_decode(blk["kind_r"], x, lc, cfg)
+        else:
+            a = blk["kind_a"]
+            h = cm.rmsnorm(x, a["ln"], cfg.norm_eps)
+            positions = jnp.broadcast_to(pos, (b, 1))
+            q, k, v = cm.attn_qkv(a["attn"], h, cfg, positions)
+            win = lc["k"].shape[1]
+            slot = pos % win                      # ring buffer
+            lc = dict(lc)
+            lc["k"] = jax.lax.dynamic_update_slice_in_dim(lc["k"], k.astype(lc["k"].dtype), slot, 1)
+            lc["v"] = jax.lax.dynamic_update_slice_in_dim(lc["v"], v.astype(lc["v"].dtype), slot, 1)
+            fill = jnp.minimum(pos + 1, win)
+            out = cm.decode_attention(q, lc["k"], lc["v"], fill)
+            x = x + out.reshape(b, 1, -1) @ a["attn"]["wo"]
+        x = _mlp_apply(blk["mlp"], x, cfg)
+        new_cache.append(lc)
+    x = cm.rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    return _logits(p, x, cfg), new_cache

@@ -1,0 +1,338 @@
+"""Decoder-only transformer LM — dense (llama family, nemotron, chameleon)
+and MoE (deepseek-v2 MLA, kimi-k2) variants.
+
+Layers are scanned with stacked parameters (two groups when the config has
+``first_dense_layers`` à la DeepSeek); blocks are optionally rematerialized.
+Serving uses a position-indexed KV cache — full k/v for GQA, the compressed
+latent for MLA (with matrix-absorbed decode, the production trick that makes
+the MLA cache pay off).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, cfg: ModelConfig, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    hd, rhd, vhd = cfg.hd, cfg.rope_head_dim, cfg.vhd
+    ks = jax.random.split(key, 8)
+    p = {}
+    if cfg.q_lora:
+        p["wdq"] = cm.dense_init(ks[0], d, cfg.q_lora, dtype)
+        p["q_norm"] = jnp.zeros((cfg.q_lora,), dtype)
+        p["wuq"] = cm.dense_init(ks[1], cfg.q_lora, h * (hd + rhd), dtype)
+    else:
+        p["wq"] = cm.dense_init(ks[1], d, h * (hd + rhd), dtype)
+    p["wdkv"] = cm.dense_init(ks[2], d, cfg.kv_lora + rhd, dtype)
+    p["kv_norm"] = jnp.zeros((cfg.kv_lora,), dtype)
+    p["wuk"] = cm.dense_init(ks[3], cfg.kv_lora, h * hd, dtype)
+    p["wuv"] = cm.dense_init(ks[4], cfg.kv_lora, h * vhd, dtype)
+    p["wo"] = cm.dense_init(ks[5], h * vhd, d, dtype)
+    return p
+
+
+def _mla_q(p, x, cfg: ModelConfig, positions):
+    b, s, _ = x.shape
+    h, hd, rhd = cfg.n_heads, cfg.hd, cfg.rope_head_dim
+    if cfg.q_lora:
+        q = cm.rmsnorm(x @ p["wdq"], p["q_norm"], cfg.norm_eps) @ p["wuq"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(b, s, h, hd + rhd)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = cm.rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, x, cfg: ModelConfig, positions):
+    b, s, _ = x.shape
+    ckv = x @ p["wdkv"]                                   # (B,S,kv_lora+rhd)
+    c, k_rope = ckv[..., : cfg.kv_lora], ckv[..., cfg.kv_lora :]
+    c = cm.rmsnorm(c, p["kv_norm"], cfg.norm_eps)
+    k_rope = cm.rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # (B,S,1,rhd)
+    return c, k_rope
+
+
+def mla_apply(p, x, cfg: ModelConfig, positions=None):
+    """Training/prefill: materialize per-head k/v from the latent."""
+    b, s, _ = x.shape
+    h, hd, rhd, vhd = cfg.n_heads, cfg.hd, cfg.rope_head_dim, cfg.vhd
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c, k_rope = _mla_latent(p, x, cfg, positions)
+    k_nope = (c @ p["wuk"]).reshape(b, s, h, hd)
+    v = (c @ p["wuv"]).reshape(b, s, h, vhd)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, rhd))], axis=-1)
+    from repro.models.flash import flash_attention
+    out = flash_attention(q, k, v, causal=True)
+    return out.reshape(b, s, h * vhd) @ p["wo"]
+
+
+def mla_decode(p, x, cache_c, cache_kr, pos, cfg: ModelConfig):
+    """Matrix-absorbed decode: score and readout in latent space.
+
+    cache_c: (B, S_max, kv_lora); cache_kr: (B, S_max, rhd); pos: scalar index
+    of the current token.  Returns (out, cache_c, cache_kr).
+    """
+    b = x.shape[0]
+    h, hd, rhd, vhd, kl = cfg.n_heads, cfg.hd, cfg.rope_head_dim, cfg.vhd, cfg.kv_lora
+    positions = jnp.broadcast_to(pos, (b, 1))
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)          # (B,1,H,·)
+    c, k_rope = _mla_latent(p, x, cfg, positions)          # (B,1,kl), (B,1,1,rhd)
+    cache_c = jax.lax.dynamic_update_slice_in_dim(cache_c, c.astype(cache_c.dtype), pos, 1)
+    cache_kr = jax.lax.dynamic_update_slice_in_dim(
+        cache_kr, k_rope[:, :, 0, :].astype(cache_kr.dtype), pos, 1)
+    # absorb W_uk into q: q_lat (B,H,kl)
+    wuk = p["wuk"].reshape(kl, h, hd)
+    q_lat = jnp.einsum("bhd,chd->bhc", q_nope[:, 0], wuk)
+    s_nope = jnp.einsum("bhc,bsc->bhs", q_lat.astype(jnp.float32), cache_c.astype(jnp.float32))
+    s_rope = jnp.einsum("bhr,bsr->bhs", q_rope[:, 0].astype(jnp.float32), cache_kr.astype(jnp.float32))
+    scores = (s_nope + s_rope) / math.sqrt(hd + rhd)
+    live = jnp.arange(cache_c.shape[1]) <= pos
+    scores = jnp.where(live[None, None, :], scores, cm.NEG)
+    pr = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhs,bsc->bhc", pr, cache_c.astype(jnp.float32))   # (B,H,kl)
+    wuv = p["wuv"].reshape(kl, h, vhd)
+    out = jnp.einsum("bhc,chd->bhd", o_lat, wuv.astype(jnp.float32))      # (B,H,vhd)
+    out = out.reshape(b, 1, h * vhd).astype(x.dtype) @ p["wo"]
+    return out, cache_c, cache_kr
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def block_init(key, cfg: ModelConfig, use_moe: bool):
+    dtype = cfg.jdtype
+    ka, kf, kn = jax.random.split(key, 3)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "attn": mla_init(ka, cfg, dtype) if cfg.use_mla else cm.attn_init(ka, cfg, dtype),
+    }
+    if use_moe:
+        p["moe"] = cm.moe_init(kf, cfg, dtype)
+    else:
+        p["ffn"] = cm.ffn_init(kf, cfg, dtype=dtype)
+    return p
+
+
+def block_apply(p, x, cfg: ModelConfig, use_moe: bool, positions=None,
+                full_capacity: bool = False):
+    h = cm.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        attn_out = mla_apply(p["attn"], h, cfg, positions)
+    else:
+        attn_out = cm.attn_apply(p["attn"], h, cfg, window=cfg.window, positions=positions)
+    x = x + attn_out
+    h = cm.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if use_moe:
+        b, s, d = h.shape
+        # training: capacity-bounded dispatch (drops bound memory/compute);
+        # inference: capacity = T so no token is ever dropped and decode
+        # matches the parallel forward bit-for-bit.
+        cap = b * s if full_capacity else None
+        y, moe_aux = cm.moe_apply(p["moe"], h.reshape(b * s, d), cfg, capacity=cap)
+        x = x + y.reshape(b, s, d)
+        aux = moe_aux["moe_aux"].astype(jnp.float32)
+    else:
+        x = x + cm.ffn_apply(p["ffn"], h, cfg)
+    return x, aux
+
+
+def block_decode(p, x, cache, pos, cfg: ModelConfig, use_moe: bool):
+    """One-token decode through a block.  cache is a dict of this block's
+    per-layer buffers; returns (x, cache)."""
+    b = x.shape[0]
+    h = cm.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        attn_out, cache["c"], cache["kr"] = mla_decode(
+            p["attn"], h, cache["c"], cache["kr"], pos, cfg)
+    else:
+        positions = jnp.broadcast_to(pos, (b, 1))
+        q, k, v = cm.attn_qkv(p["attn"], h, cfg, positions)
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, 1)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, 1)
+        out = cm.decode_attention(q, cache["k"], cache["v"], pos + 1, window=cfg.window)
+        attn_out = out.reshape(b, 1, -1) @ p["attn"]["wo"]
+    x = x + attn_out
+    h = cm.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if use_moe:
+        s = h.shape[1]
+        # decode: capacity = token count → no token is ever dropped (an
+        # expert can receive at most one assignment per token), so decode
+        # logits match the parallel forward exactly.
+        y, _ = cm.moe_apply(p["moe"], h.reshape(b * s, -1), cfg, capacity=b * s)
+        x = x + y.reshape(b, s, -1)
+    else:
+        x = x + cm.ffn_apply(p["ffn"], h, cfg)
+    return x, cache
+
+
+def init_block_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int):
+    dtype = cfg.jdtype
+    if cfg.use_mla:
+        return {
+            "c": jnp.zeros((n_layers, batch, max_len, cfg.kv_lora), dtype),
+            "kr": jnp.zeros((n_layers, batch, max_len, cfg.rope_head_dim), dtype),
+        }
+    window = cfg.window or 0
+    s = min(max_len, window) if window else max_len
+    return {
+        "k": jnp.zeros((n_layers, batch, s, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((n_layers, batch, s, cfg.n_kv_heads, cfg.vhd), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# LM: init / loss / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _split_groups(cfg: ModelConfig) -> Tuple[int, int]:
+    """(#leading dense-FFN layers, #scanned main layers)."""
+    lead = cfg.first_dense_layers if cfg.n_experts else 0
+    return lead, cfg.n_layers - lead
+
+
+def lm_init(key, cfg: ModelConfig) -> Params:
+    dtype = cfg.jdtype
+    lead, main = _split_groups(cfg)
+    keys = jax.random.split(key, 4)
+    p: Params = {
+        "embed": cm.embed_init(keys[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = cm.dense_init(keys[1], cfg.d_model, cfg.padded_vocab, dtype)
+    if lead:
+        lead_keys = jax.random.split(keys[2], lead)
+        p["lead_blocks"] = jax.vmap(lambda k: block_init(k, cfg, use_moe=False))(lead_keys)
+    main_keys = jax.random.split(keys[3], main)
+    p["blocks"] = jax.vmap(lambda k: block_init(k, cfg, use_moe=bool(cfg.n_experts)))(main_keys)
+    return p
+
+
+def _embed(p, tokens, cfg: ModelConfig):
+    x = jnp.take(p["embed"], tokens, axis=0)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def _logits(p, x, cfg: ModelConfig):
+    head = p["embed"].T if cfg.tie_embeddings else p["head"]
+    logits = x @ head
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits
+
+
+def _backbone(p, x, cfg: ModelConfig, *, remat: bool = True, positions=None,
+              full_capacity: bool = False):
+    lead, _ = _split_groups(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def body(carry, layer_p, use_moe: bool):
+        h, aux = carry
+        h, a = block_apply(layer_p, h, cfg, use_moe, positions,
+                           full_capacity=full_capacity)
+        return (h, aux + a), None
+
+    def run_group(carry, stacked, use_moe: bool):
+        group_body = partial(body, use_moe=use_moe)
+        if remat:
+            group_body = jax.checkpoint(
+                group_body, policy=jax.checkpoint_policies.nothing_saveable)
+        if cfg.unroll_layers:  # roofline costing path — see ModelConfig
+            n = jax.tree.leaves(stacked)[0].shape[0]
+            for i in range(n):
+                layer_p = jax.tree.map(lambda a: a[i], stacked)
+                carry, _ = group_body(carry, layer_p)
+            return carry
+        carry, _ = jax.lax.scan(group_body, carry, stacked)
+        return carry
+
+    if lead:
+        (x, aux_total) = run_group((x, aux_total), p["lead_blocks"], False)
+    (x, aux_total) = run_group((x, aux_total), p["blocks"], bool(cfg.n_experts))
+    return cm.rmsnorm(x, p["final_norm"], cfg.norm_eps), aux_total
+
+
+def lm_loss(p, batch, cfg: ModelConfig, *, remat: bool = True):
+    """Causal LM loss.  batch = {"tokens": (B,S) int32}; position i predicts
+    token i+1 (last position masked).  Chunked CE keeps the logits tensor
+    memory-bounded (cm.ce_loss)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = _embed(p, tokens, cfg)
+    x, aux = _backbone(p, x, cfg, remat=remat)
+    targets = jnp.roll(tokens, -1, axis=1)
+    mask = (jnp.arange(s) < s - 1)[None, :]
+    head = p["embed"] if cfg.tie_embeddings else p["head"]
+    loss = cm.ce_loss(x, head, targets, mask, cfg.vocab, cfg.padded_vocab,
+                      tied=cfg.tie_embeddings, logit_softcap=cfg.logit_softcap)
+    if cfg.n_experts:
+        loss = loss + 0.01 * aux / cfg.n_layers
+    return loss
+
+
+def lm_forward(p, tokens, cfg: ModelConfig, *, remat: bool = False,
+               last_only: bool = False):
+    """Sequence logits.  ``last_only`` returns just the final position — the
+    production prefill contract (avoids a (B,S,V) output buffer)."""
+    x = _embed(p, tokens, cfg)
+    x, _ = _backbone(p, x, cfg, remat=remat, full_capacity=True)
+    if last_only:
+        x = x[:, -1:, :]
+    return _logits(p, x, cfg)
+
+
+def lm_init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    _, main = _split_groups(cfg)
+    lead, _ = _split_groups(cfg)
+    caches = {"main": init_block_cache(cfg, batch, max_len, main)}
+    if lead:
+        caches["lead"] = init_block_cache(cfg, batch, max_len, lead)
+    return caches
+
+
+def lm_decode_step(p, cache, tokens, pos, cfg: ModelConfig):
+    """One decode step.  tokens: (B,1) int32; pos: scalar int32 — the index
+    the new token occupies (attends to cache[:pos+1]).  Returns (logits,
+    cache)."""
+    x = _embed(p, tokens, cfg)
+    lead, _ = _split_groups(cfg)
+
+    def scan_blocks(x, stacked_p, stacked_cache, use_moe):
+        def body(h, inp):
+            layer_p, layer_cache = inp
+            h, layer_cache = block_decode(layer_p, h, layer_cache, pos, cfg, use_moe)
+            return h, layer_cache
+        x, new_cache = jax.lax.scan(body, x, (stacked_p, stacked_cache))
+        return x, new_cache
+
+    if lead:
+        x, cache["lead"] = scan_blocks(x, p["lead_blocks"], cache["lead"], False)
+    x, cache["main"] = scan_blocks(x, p["blocks"], cache["main"], bool(cfg.n_experts))
+    x = cm.rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    return _logits(p, x, cfg), cache

@@ -1,0 +1,1 @@
+from repro.roofline.hlo import collective_bytes_nested, parse_hlo_computations  # noqa: F401

@@ -1,0 +1,66 @@
+"""Three-term roofline model over dry-run artifacts (deliverable g).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI (bidirectional ⇒ 2× per-link bytes/s in the collective
+term; a 2-D torus gives each chip multiple links, but we charge the single
+busiest link — conservative).
+
+``compiled.cost_analysis()`` counts a while-loop body **once**; scanned
+transformers execute theirs L (layers) × M (microbatches) times.  The
+collective side is fixed by roofline/hlo.py's trip-count-aware parser.  For
+FLOPs/bytes we use the two-point method: lower the same cell at two layer
+counts and extrapolate
+
+    per_layer = (cost(L₂) − cost(L₁)) / (L₂ − L₁)
+    total     = cost(L₁) + (L − L₁) · per_layer
+
+which is exact for layer-homogeneous stacks (all ours are, per group).
+benchmarks/roofline_table.py drives this.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+# TPU v5e
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link per direction
+
+
+def roofline_terms(*, flops: float, bytes_accessed: float,
+                   collective_bytes: float, chips: int,
+                   peak_flops: float = PEAK_FLOPS, hbm_bw: float = HBM_BW,
+                   ici_bw: float = ICI_BW) -> Dict[str, float]:
+    """The three roofline times (seconds) + dominant bottleneck.
+
+    ``flops``/``bytes_accessed`` are per-device (that's what
+    cost_analysis() of an SPMD module reports), so the per-chip rates apply
+    directly; ``collective_bytes`` is per-device bytes crossing its busiest
+    link (2× for bidirectional links).
+    """
+    t_comp = flops / peak_flops
+    t_mem = bytes_accessed / hbm_bw
+    t_coll = collective_bytes / (2.0 * ici_bw)
+    terms = {"t_compute_s": t_comp, "t_memory_s": t_mem,
+             "t_collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    terms["bottleneck"] = {"t_compute_s": "compute", "t_memory_s": "memory",
+                           "t_collective_s": "collective"}[dominant]
+    terms["t_bound_s"] = max(t_comp, t_mem, t_coll)
+    terms["roofline_fraction"] = (t_comp / terms["t_bound_s"]
+                                  if terms["t_bound_s"] > 0 else 0.0)
+    return terms
+
+
+def model_flops(n_params: float, tokens: float, *, active_params: Optional[float] = None,
+                training: bool = True) -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (inference); MoE uses N_active."""
+    n = active_params if active_params is not None else n_params
+    return (6.0 if training else 2.0) * n * tokens
+
+
+def two_point_total(cost_l1: float, cost_l2: float, l1: int, l2: int,
+                    l_target: int) -> float:
+    """Extrapolate a per-layer-homogeneous cost to the full layer count."""
+    per_layer = (cost_l2 - cost_l1) / max(l2 - l1, 1)
+    return cost_l1 + (l_target - l1) * per_layer

@@ -1,0 +1,131 @@
+"""Optimized-HLO parsing for the roofline analysis.
+
+``compiled.cost_analysis()`` and a flat text scan both count a while-loop
+body **once**, but a scanned transformer executes its body L times — so
+collective bytes (and FLOPs) hiding inside ``lax.scan`` loops would be
+undercounted by L×.  This parser reconstructs the computation graph of the
+optimized HLO text, extracts each while loop's trip count from the constant
+bound in its condition computation, and sums collective result-shape bytes
+with nested trip-count multipliers.
+
+Loops whose bound is data-dependent (e.g. flash attention's causal
+block-skipping) have no constant bound; they get multiplier 1 — conservative,
+and correct for our programs because no collective ops live inside those
+loops (asserted by tests/test_roofline.py on a sharded example).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# headers like: %region_0.1_spmd (param: (s32[], f32[16,64])) -> (...) {
+# — params may contain NESTED parens (tuple-typed while state), so match
+# greedily up to the -> rather than assuming a single paren group.
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_WHILE_RE = re.compile(r"\bwhile\(")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+# XLA annotates whiles it has unrolled/analyzed:  backend_config=
+# {"known_trip_count":{"n":"12"}} — authoritative when present.
+_KNOWN_TRIPS = re.compile(r"known_trip_count[^0-9]*(\d+)")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_hlo_computations(hlo_text: str) -> Dict[str, List[str]]:
+    """computation name → list of body lines."""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _COMP_HEADER.match(line)  # headers start at column 0
+        if m and (line.rstrip().endswith("{") or "->" in line):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if stripped == "}":
+                cur = None
+                continue
+            comps[cur].append(stripped)
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Largest integer constant in the condition computation (scan bound)."""
+    best = 1
+    for line in cond_lines:
+        for v in _CONST_RE.findall(line):
+            best = max(best, int(v))
+    return best
+
+
+def collective_bytes_nested(hlo_text: str) -> Dict[str, float]:
+    comps = parse_hlo_computations(hlo_text)
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HEADER.match(line)
+            if m:
+                entry = m.group(1)
+    if entry is None:  # fall back: last computation
+        entry = list(comps)[-1] if comps else None
+    if entry is None:
+        return {}
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def comp_bytes(name: str, depth: int = 0) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        if depth > 32 or name not in comps:
+            return {}
+        total: Dict[str, float] = {}
+        for line in comps[name]:
+            if "-done" not in line:
+                m = _COLL_RE.search(line)
+                if m:
+                    shape_txt, kind = m.group(1), m.group(2)
+                    total[kind] = total.get(kind, 0) + _shape_bytes(shape_txt)
+            if _WHILE_RE.search(line):
+                mc, mb = _COND_RE.search(line), _BODY_RE.search(line)
+                if mc and mb:
+                    mk = _KNOWN_TRIPS.search(line)
+                    trips = (int(mk.group(1)) if mk
+                             else _trip_count(comps.get(mc.group(1), [])))
+                    inner = comp_bytes(mb.group(1), depth + 1)
+                    for k, v in inner.items():
+                        total[k] = total.get(k, 0) + trips * v
+            # calls / fusions / conditionals referencing other computations
+            for attr in ("to_apply=", "calls="):
+                if attr in line:
+                    mname = re.search(attr + r"%?([\w.\-]+)", line)
+                    if mname:
+                        inner = comp_bytes(mname.group(1), depth + 1)
+                        for k, v in inner.items():
+                            total[k] = total.get(k, 0) + v
+        memo[name] = total
+        return total
+
+    return comp_bytes(entry)

@@ -1,0 +1,215 @@
+"""Batched serving engine: continuous batching over a fixed-slot KV cache.
+
+vLLM-style request lifecycle adapted to JAX's static-shape world:
+
+  * a fixed number of **slots** (the decode batch dimension) hold in-flight
+    requests; shapes never change, so the jitted prefill/decode steps compile
+    once per (slot count, cache length) and are reused forever;
+  * **prefill** runs one request at a time through ``lm_forward(last_only)``
+    (chunk-padded to a bucket length to bound recompilation), then its KV
+    state is *inserted* into the batched cache at the assigned slot;
+  * **decode** steps all live slots together — one token per live request per
+    step (inactive slots are masked);
+  * finished requests (EOS or max_tokens) free their slot immediately; the
+    scheduler admits the longest-waiting request first (FCFS), which bounds
+    head-of-line latency.
+
+The per-slot insertion uses the same position-indexed cache layout the models
+define (`lm_init_cache`), so every architecture family (GQA / MLA latent /
+mamba state / RG-LRU ring buffer) serves through one engine.
+
+Production notes (DESIGN.md §5): the decode batch axis is sharded over
+("pod","data"); caches follow launch/sharding.py's cache rules; the engine's
+host loop is the single-controller view and each step is one pjit call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # (P,) int32 token ids
+    max_new_tokens: int = 32
+    eos_id: int = -1                   # -1 → never matches (length-capped)
+    # filled by the engine
+    generated: Optional[List[int]] = None
+    submitted_at: float = 0.0
+    finished_at: float = 0.0
+
+    @property
+    def done(self) -> bool:
+        if self.generated is None:
+            return False
+        return (len(self.generated) >= self.max_new_tokens
+                or (self.eos_id >= 0 and self.eos_id in self.generated))
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    slots: int = 8                     # decode batch size (compiled once)
+    max_len: int = 2048                # cache capacity per slot
+    prefill_bucket: int = 256          # prompts padded up to a multiple
+    greedy: bool = True
+    temperature: float = 1.0
+    seed: int = 0
+
+
+class ServingEngine:
+    """Single-controller continuous-batching engine over a ModelAPI."""
+
+    def __init__(self, api, params, config: ServeConfig):
+        self.api = api
+        self.params = params
+        self.cfg = config
+        self.cache = api.init_cache(config.slots, config.max_len)
+        # Families lay caches out differently (stacked (L, B, ...) vs per-layer
+        # lists with (B, ...) leaves).  Detect each leaf's slot axis once by
+        # diffing abstract cache shapes at two batch sizes — fully
+        # model-agnostic, no allocation (eval_shape).
+        s2 = jax.eval_shape(lambda: api.init_cache(2, config.max_len))
+        s3 = jax.eval_shape(lambda: api.init_cache(3, config.max_len))
+
+        def slot_axis(a, b):
+            diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+            if len(diffs) != 1:
+                raise ValueError(f"ambiguous slot axis for cache leaf {a.shape}")
+            return diffs[0]
+
+        self.slot_axes = jax.tree.map(slot_axis, s2, s3)
+        self.pos = np.zeros(config.slots, np.int32)        # next write index
+        self.live: List[Optional[Request]] = [None] * config.slots
+        self.queue: List[Request] = []
+        self.key = jax.random.PRNGKey(config.seed)
+        self.steps = 0
+        self.prefills = 0
+
+        # jit once; shapes are static per bucket
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._prefill_fns: Dict[int, Callable] = {}
+
+    # ------------------------------------------------------------------ public
+    def submit(self, req: Request) -> None:
+        req.submitted_at = time.time()
+        req.generated = []
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        """Drive until queue and slots drain; returns finished requests."""
+        finished: List[Request] = []
+        for _ in range(max_steps):
+            self._admit()
+            if not any(r is not None for r in self.live):
+                if not self.queue:
+                    break
+                continue
+            self._step(finished)
+        return finished
+
+    # ------------------------------------------------------------------ internals
+    def _admit(self) -> None:
+        for slot in range(self.cfg.slots):
+            if self.live[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            self._prefill_into_slot(req, slot)
+            self.live[slot] = req
+
+    def _bucket(self, n: int) -> int:
+        b = self.cfg.prefill_bucket
+        return min(((n + b - 1) // b) * b, self.cfg.max_len)
+
+    def _prefill_into_slot(self, req: Request, slot: int) -> None:
+        """Run the prompt through decode steps into this slot's cache rows.
+
+        Uses a scanned multi-token pass (token-parallel prefill is the
+        models' ``forward``; cache-writing prefill reuses ``decode_step`` so
+        every family's cache layout is handled uniformly).  Bucketed to bound
+        compile count.
+        """
+        p = len(req.prompt)
+        bucket = self._bucket(p)
+        toks = np.zeros(bucket, np.int32)
+        toks[:p] = req.prompt
+        if bucket not in self._prefill_fns:
+            self._prefill_fns[bucket] = jax.jit(
+                self._prefill_impl, static_argnums=(3,), donate_argnums=(1,))
+        fn = self._prefill_fns[bucket]
+        slot_cache = jax.tree.map(
+            lambda c, ax: jax.lax.slice_in_dim(c, slot, slot + 1, axis=ax),
+            self.cache, self.slot_axes)
+        logits, slot_cache = fn(self.params, slot_cache, jnp.asarray(toks[None, :]),
+                                bucket)
+        # merge slot cache back
+        self.cache = jax.tree.map(
+            lambda full, part, ax: jax.lax.dynamic_update_slice_in_dim(
+                full, part.astype(full.dtype), slot, ax),
+            self.cache, slot_cache, self.slot_axes)
+        self.pos[slot] = p
+        # first generated token from the last prompt logit
+        last = np.asarray(logits[0, p - 1 if p <= bucket else -1])
+        req.generated.append(int(np.argmax(last)))
+        self.prefills += 1
+
+    def _prefill_impl(self, params, cache, tokens, bucket: int):
+        """Sequential cache-filling prefill: scan decode_step over positions."""
+        def body(cache, i):
+            tok = jax.lax.dynamic_slice_in_dim(tokens, i, 1, axis=1)
+            logits, cache = self.api.decode_step(params, cache, tok, i)
+            return cache, logits[:, 0]
+        cache, logits = jax.lax.scan(body, cache, jnp.arange(bucket))
+        return jnp.moveaxis(logits, 0, 1), cache                # (1, bucket, V)
+
+    def _decode_impl(self, params, cache, tokens, pos):
+        """One batched decode step at per-slot positions.
+
+        Per-slot positions require per-slot cache indexing; the models'
+        ``decode_step`` takes a scalar pos, so the engine vmaps it over each
+        leaf's detected slot axis (each slot is an independent 1-row batch —
+        vmap re-inserts the batch dim the model expects).
+        """
+        def one(params, cache_row, tok, p):
+            expanded = jax.tree.map(
+                lambda c, ax: jnp.expand_dims(c, ax), cache_row, self.slot_axes)
+            logits, new_cache = self.api.decode_step(params, expanded, tok[None, :], p)
+            return logits[0], jax.tree.map(
+                lambda c, ax: jnp.squeeze(c, ax), new_cache, self.slot_axes)
+
+        logits, cache = jax.vmap(one, in_axes=(None, self.slot_axes, 0, 0),
+                                 out_axes=(0, self.slot_axes))(
+            params, cache, tokens, pos)
+        return logits, cache
+
+    def _step(self, finished: List[Request]) -> None:
+        toks = np.zeros((self.cfg.slots, 1), np.int32)
+        pos = np.zeros(self.cfg.slots, np.int32)
+        for s, req in enumerate(self.live):
+            if req is not None:
+                toks[s, 0] = req.generated[-1]
+                pos[s] = self.pos[s]
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(toks), jnp.asarray(pos))
+        logits = np.asarray(logits[:, 0], np.float32)           # (slots, V)
+        self.steps += 1
+        for s, req in enumerate(self.live):
+            if req is None:
+                continue
+            self.pos[s] += 1
+            if self.cfg.greedy:
+                nxt = int(np.argmax(logits[s]))
+            else:
+                self.key, sub = jax.random.split(self.key)
+                nxt = int(jax.random.categorical(
+                    sub, jnp.asarray(logits[s]) / self.cfg.temperature))
+            req.generated.append(nxt)
+            if req.done or self.pos[s] >= self.cfg.max_len - 1:
+                req.finished_at = time.time()
+                finished.append(req)
+                self.live[s] = None

@@ -1,0 +1,176 @@
+"""Optimizers and LR schedules (substrate — no optax offline).
+
+* ``adamw``     — f32 moments; standard for ≤34B archs.
+* ``adafactor`` — factored second moments (rank-1 row/col stats for ≥2-D
+  leaves), no first moment: the memory plan that lets the 1T kimi-k2 cell fit
+  v5e HBM (DESIGN.md §5 memory notes — PaLM-style large-scale practice).
+* ``make_schedule`` — wsd (minicpm's warmup-stable-decay), cosine, constant.
+
+All optimizers are pure (init/update) over pytrees and donate-friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Pytree], Pytree]
+    update: Callable[[Pytree, Pytree, Pytree, jnp.ndarray], Tuple[Pytree, Pytree]]
+    name: str = ""
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** c
+        bc2 = 1.0 - b2 ** c
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+            return new_p, m, v
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "count": count}
+
+    return Optimizer(init=init, update=update, name="adamw")
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments, no momentum)
+# ---------------------------------------------------------------------------
+
+
+def adafactor(eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay_rate: float = 0.8, weight_decay: float = 0.0) -> Optimizer:
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def leaf(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),       # row stats
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),  # col stats
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"stats": jax.tree.map(leaf, params,
+                                      is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        beta = 1.0 - c ** (-decay_rate)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(g.shape):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                r = (vr / denom)[..., None]
+                u = g * jax.lax.rsqrt(r * vc[..., None, :] + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_s
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_s = treedef.flatten_up_to(state["stats"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_s = treedef.unflatten([o[1] for o in out])
+        return new_p, {"stats": new_s, "count": count}
+
+    return Optimizer(init=init, update=update, name="adafactor")
+
+
+def get_optimizer(name: str) -> Optimizer:
+    return {"adamw": adamw, "adafactor": adafactor}[name]()
+
+
+# ---------------------------------------------------------------------------
+# LR schedules
+# ---------------------------------------------------------------------------
+
+
+def make_schedule(kind: str, peak_lr: float, total_steps: int,
+                  warmup: int = 0, decay_frac: float = 0.1) -> Callable:
+    """Returns step → lr.  ``wsd`` = warmup / stable / decay (MiniCPM)."""
+    warmup = max(warmup, 1)
+
+    def wsd(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        decay_start = total_steps * (1.0 - decay_frac)
+        warm = peak_lr * jnp.minimum((s + 1.0) / warmup, 1.0)
+        decay = peak_lr * jnp.maximum(
+            0.0, 1.0 - (s - decay_start) / jnp.maximum(total_steps - decay_start, 1.0))
+        return jnp.where(s < decay_start, warm, jnp.minimum(warm, decay))
+
+    def cosine(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum((s + 1.0) / warmup, 1.0)
+        prog = jnp.clip((s - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * 0.5 * (1.0 + jnp.cos(math.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+
+    def constant(step):
+        s = jnp.asarray(step, jnp.float32)
+        return peak_lr * jnp.minimum((s + 1.0) / warmup, 1.0)
+
+    return {"wsd": wsd, "cosine": cosine, "constant": constant}[kind]

@@ -1,0 +1,19 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real single CPU device (the dry-run sets its own flag in-process).
+Multi-device tests spawn subprocesses (see test_distributed_fw.py)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def tiny_problem():
+    """Small sparse classification problem shared across FW tests."""
+    from repro.data.synthetic import make_sparse_classification
+    X, y, w_true = make_sparse_classification(
+        n=300, d=1200, nnz_per_row=15, informative=25, seed=7)
+    return X, y, w_true
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,83 @@
+"""Privacy layer: accountant formulas, mechanism laws, budget enforcement."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dp.accountant import (
+    PrivacyAccountant, fw_noise_scale, per_step_epsilon)
+from repro.core.dp.mechanisms import (
+    em_logits, exponential_mechanism_probs, gumbel_argmax,
+    laplace_noisy_argmax)
+
+
+def test_per_step_epsilon_formula():
+    eps, delta, t = 1.0, 1e-6, 4000
+    got = per_step_epsilon(eps, delta, t)
+    assert got == pytest.approx(eps / math.sqrt(8 * t * math.log(1 / delta)))
+
+
+def test_advanced_composition_roundtrip():
+    """Composing T steps of ε' must return the target ε (paper §B.2)."""
+    eps, delta, t = 0.1, 1e-8, 400_000
+    eps_step = per_step_epsilon(eps, delta, t)
+    recomposed = 2 * eps_step * math.sqrt(2 * t * math.log(1 / delta))
+    assert recomposed == pytest.approx(eps)
+
+
+def test_noise_scale_matches_paper():
+    """b = λ·L·sqrt(8T log(1/δ)) / (N·ε)  (paper Alg 1)."""
+    b = fw_noise_scale(epsilon=1.0, delta=1e-6, steps=4000, lam=50.0,
+                       lipschitz=1.0, n_rows=20_242)
+    expect = 50.0 * 1.0 * math.sqrt(8 * 4000 * math.log(1e6)) / (20_242 * 1.0)
+    assert b == pytest.approx(expect)
+
+
+def test_accountant_budget_enforced():
+    acct = PrivacyAccountant(epsilon=1.0, delta=1e-6, total_steps=100)
+    acct.spend(100)
+    with pytest.raises(RuntimeError):
+        acct.spend(1)
+    assert acct.spent_epsilon() == pytest.approx(1.0)
+
+
+def test_accountant_serialization_roundtrip():
+    acct = PrivacyAccountant(epsilon=0.5, delta=1e-7, total_steps=50)
+    acct.spend(20)
+    acct2 = PrivacyAccountant.from_state(acct.to_state())
+    assert acct2.spent_steps == 20
+    assert acct2.remaining_steps == 30
+
+
+def test_gumbel_argmax_samples_em_law():
+    """Gumbel-max over EM logits must match the exponential mechanism's
+    softmax law (chi-square)."""
+    scores = jnp.asarray(np.random.default_rng(0).uniform(0, 1, 30), jnp.float32)
+    eps_step, sens = 0.8, 0.05
+    logits = em_logits(scores, eps_step, sens)
+    probs = np.asarray(exponential_mechanism_probs(scores, eps_step, sens))
+    keys = jax.random.split(jax.random.PRNGKey(1), 20_000)
+    draws = np.asarray(jax.vmap(lambda k: gumbel_argmax(k, logits))(keys))
+    counts = np.bincount(draws, minlength=30)
+    e = probs * len(draws)
+    m = e >= 5
+    chi2 = ((counts[m] - e[m]) ** 2 / e[m]).sum() / max(m.sum() - 1, 1)
+    assert chi2 < 1.5
+
+
+def test_laplace_noisy_max_prefers_max():
+    scores = jnp.zeros(20).at[7].set(5.0)
+    keys = jax.random.split(jax.random.PRNGKey(2), 500)
+    draws = np.asarray(jax.vmap(
+        lambda k: laplace_noisy_argmax(k, scores, 0.5))(keys))
+    assert (draws == 7).mean() > 0.9
+
+
+def test_dp_noise_decreases_with_n():
+    b_small = fw_noise_scale(epsilon=1.0, delta=1e-6, steps=100, lam=10.0,
+                             lipschitz=1.0, n_rows=1000)
+    b_large = fw_noise_scale(epsilon=1.0, delta=1e-6, steps=100, lam=10.0,
+                             lipschitz=1.0, n_rows=100_000)
+    assert b_large < b_small

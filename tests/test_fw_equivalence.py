@@ -1,0 +1,118 @@
+"""The paper's core claim: Alg 2 (sparse) ≡ Alg 1 (dense) — identical steps
+for the linear-consistency part, matching convergence overall, and the host
+(faithful) vs JAX (TPU-adapted) implementations take *identical* steps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fw_dense import FWConfig, dense_fw, dense_fw_flops
+from repro.core.fw_jax import SparseJaxConfig, sparse_fw_jax
+from repro.core.fw_sparse import sparse_fw
+from repro.core.sparse.formats import host_to_padded
+
+STEPS = 120
+LAM = 8.0
+
+
+@pytest.fixture(scope="module")
+def runs(tiny_problem):
+    X, y, _ = tiny_problem
+    yj = jnp.asarray(y, jnp.float32)
+    pcsr, pcsc = host_to_padded(X)
+    dense = dense_fw(jnp.asarray(X.to_dense(), jnp.float32), yj,
+                     FWConfig(lam=LAM, steps=STEPS, selection="argmax"))
+    padded = dense_fw(pcsr, yj, FWConfig(lam=LAM, steps=STEPS, selection="argmax"))
+    host2 = sparse_fw(X, y, lam=LAM, steps=STEPS, queue="fib_heap")
+    jax2 = sparse_fw_jax(pcsr, pcsc, yj,
+                         SparseJaxConfig(lam=LAM, steps=STEPS, queue="group_argmax"))
+    return dense, padded, host2, jax2
+
+
+def test_dense_vs_padded_identical(runs):
+    dense, padded, _, _ = runs
+    np.testing.assert_array_equal(np.asarray(dense.coords), np.asarray(padded.coords))
+    np.testing.assert_allclose(np.asarray(dense.w), np.asarray(padded.w), atol=1e-6)
+
+
+def test_host_alg2_vs_jax_alg2_identical_steps(runs):
+    """The faithful sequential Alg 2 and its TPU port must take the SAME steps
+    (both maintain the same lazily-refreshed state)."""
+    _, _, host2, jax2 = runs
+    np.testing.assert_array_equal(np.asarray(host2.coords), np.asarray(jax2.coords))
+    np.testing.assert_allclose(np.asarray(host2.w), np.asarray(jax2.w),
+                               atol=5e-5)
+
+
+def test_alg1_alg2_same_convergence(tiny_problem, runs):
+    """Gap traces converge to the same optimum (paper Fig. 1): early steps
+    identical at equal precision, final gaps within 40% relative (near-tie
+    divergence allowed, documented in DESIGN.md §2).  Alg 1 runs in f64 here
+    (benchmarks/host_alg1) so near-ties aren't broken by f32 rounding."""
+    from benchmarks.host_alg1 import host_alg1
+    X, y, _ = tiny_problem
+    a1 = host_alg1(X, y, lam=LAM, steps=STEPS)
+    _, _, host2, _ = runs
+    c1, c2 = np.asarray(a1.coords), np.asarray(host2.coords)
+    # identical until the lazy q̄ refresh can first matter (the first repeat
+    # touch of overlapping rows) — guaranteed for the first few steps only
+    assert (c1[:3] == c2[:3]).all(), "first iterations must match exactly"
+    # both collapse the duality gap...
+    for r in (a1, host2):
+        assert float(r.gaps[-1]) < float(r.gaps[0]) / 25.0
+    # ...and reach the same objective value (the paper's "identical accuracy")
+    def objective(w):
+        m = X.to_dense() @ np.asarray(w, np.float64)
+        return float(np.mean(np.log1p(np.exp(m)) - y * m))
+    o1, o2 = objective(a1.w), objective(host2.w)
+    assert abs(o1 - o2) / max(abs(o1), 1e-9) < 0.01, (o1, o2)
+
+
+def test_solution_sparsity(runs):
+    """FW guarantees ≤ T+1 nonzeros (paper §1)."""
+    dense, _, host2, jax2 = runs
+    for r in (dense, host2, jax2):
+        assert int(np.sum(np.asarray(r.w) != 0)) <= STEPS + 1
+
+
+def test_gap_decreases(runs):
+    dense, *_ = runs
+    gaps = np.asarray(dense.gaps)
+    assert gaps[-1] < gaps[0] * 0.25
+
+
+def test_l1_constraint_respected(runs):
+    """Every iterate stays inside the λ-ball (convex combination of vertices)."""
+    dense, _, host2, jax2 = runs
+    for r in (dense, host2, jax2):
+        assert float(np.abs(np.asarray(r.w)).sum()) <= LAM * (1 + 1e-5)
+
+
+def test_fw_flops_accounting_subadditive(tiny_problem):
+    """Alg 2's tracked FLOPs must undercut Alg 1's analytic count (Fig 2/4)."""
+    X, y, _ = tiny_problem
+    res = sparse_fw(X, y, lam=LAM, steps=STEPS, queue="fib_heap")
+    alg1 = dense_fw_flops(X.shape[0], X.shape[1], X.nnz, STEPS)
+    assert res.flops < alg1
+
+
+def test_dp_noisy_max_runs(tiny_problem):
+    X, y, _ = tiny_problem
+    yj = jnp.asarray(y, jnp.float32)
+    res = dense_fw(jnp.asarray(X.to_dense(), jnp.float32), yj,
+                   FWConfig(lam=LAM, steps=40, selection="noisy_max",
+                            epsilon=1.0, delta=1e-6))
+    assert np.isfinite(np.asarray(res.w)).all()
+    res_g = dense_fw(jnp.asarray(X.to_dense(), jnp.float32), yj,
+                     FWConfig(lam=LAM, steps=40, selection="gumbel",
+                              epsilon=1.0, delta=1e-6))
+    assert np.isfinite(np.asarray(res_g.w)).all()
+
+
+def test_dp_two_level_jax(tiny_problem):
+    X, y, _ = tiny_problem
+    pcsr, pcsc = host_to_padded(X)
+    res = sparse_fw_jax(pcsr, pcsc, jnp.asarray(y, jnp.float32),
+                        SparseJaxConfig(lam=LAM, steps=40, queue="two_level",
+                                        epsilon=1.0, delta=1e-6))
+    assert np.isfinite(np.asarray(res.w)).all()
+    assert int(np.sum(np.asarray(res.w) != 0)) <= 41

@@ -1,0 +1,151 @@
+"""Per-kernel allclose vs the pure-jnp oracles, swept over shapes/dtypes
+(interpret mode — CPU container, TPU target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.bsls_draw.ops import two_level_draw
+from repro.kernels.bsls_draw.ref import two_level_draw_ref
+from repro.kernels.coord_update.ops import coord_update
+from repro.kernels.coord_update.ref import coord_update_ref
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.spmv.kernel import ell_matvec_pallas, ell_rmatvec_pallas
+from repro.kernels.spmv.ref import ell_matvec_ref, ell_rmatvec_ref
+
+
+# ---------------------------------------------------------------------------
+# spmv
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,k,d", [(64, 5, 40), (300, 17, 1000), (1000, 64, 500)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ell_matvec(n, k, d, dtype, rng):
+    idx = jnp.asarray(rng.integers(0, d, (n, k)), jnp.int32)
+    val = jnp.asarray(rng.normal(size=(n, k)), dtype)
+    w = jnp.asarray(rng.normal(size=d), dtype)
+    got = ell_matvec_pallas(idx, val, w)
+    want = ell_matvec_ref(idx, val, w)
+    tol = 1e-5 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n,k,d", [(64, 5, 40), (512, 16, 300), (100, 33, 2000)])
+def test_ell_rmatvec(n, k, d, rng):
+    idx = jnp.asarray(rng.integers(0, d, (n, k)), jnp.int32)
+    val = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=n), jnp.float32)
+    got = ell_rmatvec_pallas(idx, val, q, d)
+    want = ell_rmatvec_ref(idx, val, q, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_spmv_vs_padded_csr(tiny_problem):
+    """Kernel path ≡ the PaddedCSR ops used by fw_dense."""
+    from repro.core.sparse.formats import host_to_padded
+    from repro.kernels.spmv.ops import ell_matvec, ell_rmatvec
+    X, y, _ = tiny_problem
+    pcsr, _ = host_to_padded(X)
+    w = jnp.asarray(np.random.default_rng(1).normal(size=X.shape[1]), jnp.float32)
+    np.testing.assert_allclose(np.asarray(ell_matvec(pcsr, w)),
+                               np.asarray(pcsr.matvec(w)), rtol=1e-5, atol=1e-5)
+    q = jnp.asarray(np.random.default_rng(2).normal(size=X.shape[0]), jnp.float32)
+    np.testing.assert_allclose(np.asarray(ell_rmatvec(pcsr, q)),
+                               np.asarray(pcsr.rmatvec(q)), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# bsls_draw
+# ---------------------------------------------------------------------------
+
+def test_two_level_draw_matches_ref(rng):
+    from repro.core.samplers.bsls_jax import tl_init
+    st = tl_init(jnp.asarray(rng.normal(0, 2, 200), jnp.float32))
+    for seed in range(5):
+        key = jax.random.PRNGKey(seed)
+        kg, km = jax.random.split(key)
+        gg = jax.random.gumbel(kg, st.c.shape, jnp.float32)
+        gm = jax.random.gumbel(km, (st.v.shape[1],), jnp.float32)
+        assert int(two_level_draw(st.c, st.v, key)) == int(
+            two_level_draw_ref(st.c, st.v, gg, gm))
+
+
+def test_two_level_draw_distribution(rng):
+    from repro.core.samplers.bsls_jax import tl_init
+    d = 120
+    st = tl_init(jnp.asarray(rng.normal(0, 1.5, d), jnp.float32))
+    keys = jax.random.split(jax.random.PRNGKey(0), 4000)
+    draws = np.array([int(two_level_draw(st.c, st.v, k)) for k in keys[:1500]])
+    p = np.asarray(jax.nn.softmax(st.v.reshape(-1)[:d]))
+    counts = np.bincount(draws, minlength=st.v.size)[:d]
+    e = p * len(draws)
+    m = e >= 5
+    chi2 = ((counts[m] - e[m]) ** 2 / e[m]).sum() / max(m.sum() - 1, 1)
+    assert chi2 < 1.6
+
+
+# ---------------------------------------------------------------------------
+# coord_update
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,kc,kr", [(100, 300, 17, 7), (200, 500, 37, 11),
+                                       (50, 64, 5, 3), (400, 1000, 130, 20)])
+def test_coord_update_matches_ref(n, d, kc, kr, rng):
+    vbar = jnp.asarray(rng.normal(size=n), jnp.float32)
+    qbar = jnp.asarray(jax.nn.sigmoid(vbar))
+    alpha = jnp.asarray(rng.normal(size=d), jnp.float32)
+    w = jnp.asarray(rng.normal(size=d) * 0.1, jnp.float32)
+    rows = jnp.asarray(rng.choice(n, kc, replace=False), jnp.int32)
+    x_col = jnp.asarray(rng.normal(size=kc), jnp.float32)
+    mask = jnp.asarray(rng.random(kc) < 0.8)
+    x_col = jnp.where(mask, x_col, 0.0)
+    row_idx = jnp.asarray(rng.integers(0, d, (kc, kr)), jnp.int32)
+    row_val = jnp.asarray(rng.normal(size=(kc, kr)), jnp.float32)
+    kw = dict(eta=0.05, d_tilde=-8.0, w_m=0.9, inv_n=1.0 / n)
+    ref = coord_update_ref(vbar, qbar, alpha, w, rows, x_col, mask,
+                           row_idx, row_val, **kw)
+    got = coord_update(vbar, qbar, alpha, w, rows, x_col, mask,
+                       row_idx, row_val, **kw)
+    for name, a, b in zip(("vbar", "qbar", "alpha"), ref[:3], got[:3]):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a), rtol=1e-5,
+                                   atol=1e-6, err_msg=name)
+    assert float(got[3]) == pytest.approx(float(ref[3]), abs=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,kv,hd,causal,window", [
+    (2, 128, 4, 2, 32, True, 0),
+    (1, 256, 8, 8, 16, True, 0),
+    (2, 128, 4, 1, 64, False, 0),
+    (1, 256, 6, 2, 32, True, 64),
+    (1, 128, 2, 2, 16, True, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_kernel(b, s, h, kv, hd, causal, window, dtype, rng):
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, hd)), dtype)
+    got = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 block_q=64, block_k=64)
+    want = attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 0.06
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_kernel_vs_training_flash(rng):
+    """Pallas kernel ≡ the pure-JAX custom-VJP flash used in training."""
+    from repro.models.flash import flash_attention
+    q = jnp.asarray(rng.normal(size=(2, 256, 4, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 256, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 256, 2, 32)), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=True, block_q=64, block_k=64)
+    want = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                               atol=2e-5)

@@ -1,0 +1,45 @@
+"""Loss layer: values, gradients (vs numeric diff), split-grad identity,
+Lipschitz bounds."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.losses import get_loss
+
+LOSSES = ["logistic", "squared"]
+
+
+@pytest.mark.parametrize("name", LOSSES)
+def test_grad_matches_numeric(name):
+    loss = get_loss(name)
+    m = jnp.linspace(-4, 4, 33)
+    y = jnp.asarray(np.random.default_rng(0).integers(0, 2, 33), jnp.float32)
+    eps = 1e-2  # f32 arithmetic: large step beats roundoff in central diff
+    num = (loss.value(m + eps, y) - loss.value(m - eps, y)) / (2 * eps)
+    np.testing.assert_allclose(loss.grad(m, y), num, atol=5e-3)
+
+
+@pytest.mark.parametrize("name", LOSSES)
+def test_split_grad_identity(name):
+    """dL/dm must equal h(m) − y — the decomposition Alg 1/2 exploit."""
+    loss = get_loss(name)
+    m = jnp.linspace(-6, 6, 41)
+    for yv in (0.0, 1.0):
+        y = jnp.full_like(m, yv)
+        np.testing.assert_allclose(loss.grad(m, y), loss.split_grad(m) - y,
+                                   atol=1e-6)
+
+
+@given(st.floats(-30, 30), st.integers(0, 1))
+@settings(max_examples=50, deadline=None)
+def test_logistic_grad_bounded_by_lipschitz(m, y):
+    loss = get_loss("logistic")
+    g = float(loss.grad(jnp.asarray(m), jnp.asarray(float(y))))
+    assert abs(g) <= loss.lipschitz + 1e-6
+
+
+def test_logistic_value_stable_large_margin():
+    loss = get_loss("logistic")
+    v = loss.value(jnp.asarray([1e4, -1e4]), jnp.asarray([0.0, 1.0]))
+    assert bool(jnp.all(jnp.isfinite(v)))

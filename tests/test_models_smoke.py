@@ -1,0 +1,168 @@
+"""Per-arch smoke tests (deliverable f): every assigned architecture
+instantiates at a reduced config and runs one forward/train step on CPU with
+finite outputs; decode ≡ parallel forward for every decoder arch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, smoke_config
+from repro.models.registry import get_model, input_specs, supported_cells
+
+
+def _smoke_batch(api, rng, b=2, s=16):
+    if api.cfg.family == "encdec":
+        return {
+            "frames": jnp.asarray(rng.normal(size=(b, s // 2, api.cfg.d_model)),
+                                  api.cfg.jdtype),
+            "tokens": jnp.asarray(rng.integers(1, 50, (b, s // 2)), jnp.int32),
+        }
+    return {"tokens": jnp.asarray(rng.integers(1, 50, (b, s)), jnp.int32)}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_loss_finite(arch, rng):
+    api = get_model(arch, smoke=True)
+    params = api.init(jax.random.PRNGKey(0))
+    loss = api.loss(params, _smoke_batch(api, rng))
+    assert np.isfinite(float(loss)), f"{arch} loss not finite"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_updates_and_finite(arch, rng):
+    from repro.train.optimizer import get_optimizer
+    from repro.train.trainer import TrainConfig, TrainState, make_train_step
+    api = get_model(arch, smoke=True)
+    opt = get_optimizer(api.cfg.optimizer)
+    params = api.init(jax.random.PRNGKey(0))
+    state = TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                       opt_state=opt.init(params))
+    step_fn = make_train_step(api.loss, TrainConfig(optimizer=api.cfg.optimizer))
+    new_state, metrics = jax.jit(step_fn)(state, _smoke_batch(api, rng))
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert float(metrics["skipped"]) == 0.0
+    # parameters actually moved
+    moved = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))),
+        state.params, new_state.params)
+    assert max(jax.tree.leaves(moved)) > 0.0
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if get_config(a).family != "encdec"])
+def test_decode_matches_forward(arch, rng):
+    """The serving path must agree with the parallel forward — the invariant
+    every KV-cache/state-cache layout is tested against."""
+    api = get_model(arch, smoke=True)
+    params = api.init(jax.random.PRNGKey(0))
+    toks = jnp.asarray(rng.integers(1, 80, (2, 10)), jnp.int32)
+    full = api.forward(params, toks)
+    cache = api.init_cache(2, 16)
+    for t in range(10):
+        logits, cache = api.decode_step(params, cache, toks[:, t:t + 1],
+                                        jnp.asarray(t, jnp.int32))
+    diff = float(jnp.abs(full[:, -1].astype(jnp.float32)
+                         - logits[:, 0].astype(jnp.float32)).max())
+    assert diff < 5e-4, f"{arch}: decode diverges from forward by {diff}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """The full (dry-run) configs carry the exact published hyperparameters.
+
+    seamless: the assignment's "12L" is 12 enc + 12 dec (enc-dec);
+    falcon-mamba: attention-free — n_heads/d_ff are structural placeholders
+    (1/0), the real capacity knobs are d_inner=2·d_model and ssm_state.
+    """
+    cfg = get_config(arch)
+    expected = {
+        "seamless-m4t-medium": (24, 1024, 16, 16, 4096, 256_206),
+        "falcon-mamba-7b": (64, 4096, 1, 1, 0, 65_024),
+        "llama3.2-1b": (16, 2048, 32, 8, 8192, 128_256),
+        "minicpm-2b": (40, 2304, 36, 36, 5760, 122_753),
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32_000),
+        "nemotron-4-15b": (32, 6144, 48, 8, 24_576, 256_000),
+        "chameleon-34b": (48, 8192, 64, 8, 22_016, 65_536),
+        "deepseek-v2-236b": (60, 5120, 128, 128, 1536, 102_400),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163_840),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256_000),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff if not cfg.n_experts else cfg.moe_d_ff, cfg.vocab)
+    assert got == expected, f"{arch}: {got} != {expected}"
+    if arch == "seamless-m4t-medium":
+        assert (cfg.enc_layers, cfg.dec_layers) == (12, 12)
+    if arch == "falcon-mamba-7b":
+        assert (cfg.d_inner, cfg.ssm_state) == (8192, 16)
+
+
+def test_moe_configs():
+    dsv2 = get_config("deepseek-v2-236b")
+    assert (dsv2.n_experts, dsv2.top_k, dsv2.n_shared_experts,
+            dsv2.kv_lora, dsv2.use_mla) == (160, 6, 2, 512, True)
+    kimi = get_config("kimi-k2-1t-a32b")
+    assert (kimi.n_experts, kimi.top_k) == (384, 8)
+    mamba = get_config("falcon-mamba-7b")
+    assert mamba.ssm_state == 16 and mamba.family == "ssm"
+
+
+def test_long_context_skips_documented():
+    """long_500k runs only for sub-quadratic archs (brief requirement)."""
+    runs_long = {a for a in ARCH_IDS if "long_500k" in supported_cells(a)}
+    assert runs_long == {"falcon-mamba-7b", "recurrentgemma-2b"}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_input_specs_are_abstract(arch):
+    for shape in supported_cells(arch):
+        specs = input_specs(arch, shape)
+        for leaf in jax.tree.leaves(specs):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+@pytest.mark.parametrize("arch", ["falcon-mamba-7b", "recurrentgemma-2b"])
+def test_state_caches_constant_memory(arch):
+    """SSM/hybrid decode caches must not grow with context length — the
+    property that makes long_500k feasible."""
+    api = get_model(arch, smoke=True)
+    c_small = jax.eval_shape(lambda: api.init_cache(2, 128))
+    c_large = jax.eval_shape(lambda: api.init_cache(2, 4096))
+    def total(c):
+        return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(c))
+    if arch == "falcon-mamba-7b":
+        assert total(c_small) == total(c_large)
+    else:  # rglru: LRU/conv states constant; local-attn ring ≤ window
+        assert total(c_large) <= total(c_small) * (
+            api.cfg.window / 128 + 2)
+
+
+def test_param_count_analytic_close():
+    """Analytic param_count within 20% of actual init (catches config drift)."""
+    for arch in ["tinyllama-1.1b", "llama3.2-1b"]:
+        api = get_model(arch, smoke=True)
+        params = api.init(jax.random.PRNGKey(0))
+        actual = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+        # smoke config analytic count
+        analytic = api.cfg.param_count()
+        assert abs(actual - analytic) / actual < 0.2, (arch, actual, analytic)
+
+
+def test_moe_local_dispatch_equivalent():
+    """Pod-scale locality-aware MoE dispatch ≡ global dispatch when capacity
+    doesn't bind (the §Perf fix for the 43–86 TB/step all-reduce storm)."""
+    import dataclasses
+    import jax
+    from repro.models import common as cm
+    cfg = smoke_config("deepseek-v2-236b")
+    p = cm.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, cfg.d_model), jnp.float32)
+    y_global, _ = cm.moe_apply(p, x, cfg, capacity=32)
+    cfg_local = dataclasses.replace(cfg, moe_local_groups=4)
+    y_local, _ = cm.moe_apply(p, x, cfg_local, capacity=8)
+    np.testing.assert_array_equal(np.asarray(y_global), np.asarray(y_local))
+    # scatter-side combine ≡ gather-side, including under capacity drops
+    cfg_scat = dataclasses.replace(cfg, moe_combine="scatter")
+    y_drop_g, _ = cm.moe_apply(p, x, cfg, capacity=9)
+    y_drop_s, _ = cm.moe_apply(p, x, cfg_scat, capacity=9)
+    np.testing.assert_array_equal(np.asarray(y_drop_g), np.asarray(y_drop_s))

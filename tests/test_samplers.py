@@ -1,0 +1,146 @@
+"""Queue/sampler layer: Fibonacci heap exact-argmax invariant (property),
+BSLS law-exactness (chi-square), two-level JAX sampler law + update
+exactness, group-argmax lazy-bound invariant (property)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.samplers.bsls import BSLSSampler
+from repro.core.samplers.bsls_jax import (
+    tl_exact_probs, tl_init, tl_sample, tl_update)
+from repro.core.samplers.fib_heap import FibHeapQueue
+from repro.core.samplers.group_argmax import ga_get_next, ga_init, ga_update
+
+
+# ---------------------------------------------------------------------------
+# Fibonacci heap (Alg 3)
+# ---------------------------------------------------------------------------
+
+@given(st.data())
+@settings(max_examples=30, deadline=None)
+def test_fib_heap_returns_exact_argmax(data):
+    """Alg 3 invariant: despite stale (over-estimating) priorities, getNext
+    returns the exact argmax of |α| after arbitrary update sequences."""
+    d = data.draw(st.integers(4, 40))
+    alpha = np.array(data.draw(st.lists(
+        st.floats(-10, 10, allow_nan=False), min_size=d, max_size=d)))
+    q = FibHeapQueue(d, lambda j: abs(alpha[j]))
+    q.add_all(np.abs(alpha))
+    n_rounds = data.draw(st.integers(1, 5))
+    for _ in range(n_rounds):
+        ups = data.draw(st.lists(
+            st.tuples(st.integers(0, d - 1), st.floats(-10, 10, allow_nan=False)),
+            min_size=0, max_size=10))
+        for i, v in ups:
+            alpha[i] = v
+            q.update(i, abs(v))
+        j = q.get_next()
+        assert abs(alpha[j]) == pytest.approx(np.abs(alpha).max())
+
+
+def test_fib_heap_pop_count_bounded(tiny_problem):
+    """Fig 3: pops per getNext stay ≪ D."""
+    from repro.core.fw_sparse import sparse_fw
+    X, y, _ = tiny_problem
+    res = sparse_fw(X, y, lam=8.0, steps=80, queue="fib_heap")
+    nnz = max(res.nnz, 1)
+    assert res.pops / 80 <= max(3.0 * nnz, 50)
+
+
+# ---------------------------------------------------------------------------
+# BSLS (Alg 4) — law exactness
+# ---------------------------------------------------------------------------
+
+def _chi2_ratio(draws, probs):
+    counts = np.bincount(draws, minlength=probs.shape[0])[: probs.shape[0]]
+    e = probs * len(draws)
+    m = e >= 5
+    return float(((counts[m] - e[m]) ** 2 / e[m]).sum() / max(m.sum() - 1, 1))
+
+
+def test_bsls_matches_exponential_mechanism():
+    rng = np.random.default_rng(1)
+    s = BSLSSampler(rng.normal(0, 2, 150), seed=9)
+    draws = np.array([s.sample() for _ in range(25_000)])
+    assert _chi2_ratio(draws, s.exact_probs()) < 1.5
+
+
+def test_bsls_after_updates():
+    rng = np.random.default_rng(2)
+    s = BSLSSampler(rng.normal(0, 2, 120), seed=3)
+    for _ in range(200):
+        s.update(int(rng.integers(0, 120)), float(rng.normal(0, 2)))
+    draws = np.array([s.sample() for _ in range(25_000)])
+    assert _chi2_ratio(draws, s.exact_probs()) < 1.5
+
+
+def test_bsls_sublinear_cost():
+    d = 4096
+    rng = np.random.default_rng(3)
+    s = BSLSSampler(rng.normal(0, 1, d), seed=4)
+    for _ in range(200):
+        s.sample()
+    # O(√D log D): far below a linear scan
+    assert s.cost_per_draw() < d / 4
+
+
+def test_bsls_extreme_weight_range():
+    """log-sum-exp path must survive 4+ orders of magnitude (paper §3.3)."""
+    v = np.array([-500.0, -100.0, 0.0, 50.0, 200.0] + [-300.0] * 45)
+    s = BSLSSampler(v, seed=5)
+    draws = [s.sample() for _ in range(500)]
+    assert all(d_ == 4 for d_ in draws)  # weight 200 dominates utterly
+
+
+# ---------------------------------------------------------------------------
+# Two-level JAX sampler (TPU adaptation)
+# ---------------------------------------------------------------------------
+
+def test_two_level_law():
+    rng = np.random.default_rng(4)
+    st_ = tl_init(jnp.asarray(rng.normal(0, 2, 300), jnp.float32))
+    keys = jax.random.split(jax.random.PRNGKey(0), 25_000)
+    draws = np.asarray(jax.vmap(lambda k: tl_sample(st_, k))(keys))
+    assert _chi2_ratio(draws, np.asarray(tl_exact_probs(st_))) < 1.5
+
+
+def test_two_level_update_exact():
+    rng = np.random.default_rng(5)
+    d = 77
+    vals = rng.normal(0, 1, d)
+    st_ = tl_init(jnp.asarray(vals, jnp.float32))
+    idx = jnp.asarray([3, 50, 76, 200], jnp.int32)      # 200 = padding (> d)
+    new = jnp.asarray([5.0, -2.0, 1.5, 99.0], jnp.float32)
+    st2 = tl_update(st_, idx, new)
+    vals[[3, 50, 76]] = [5.0, -2.0, 1.5]
+    np.testing.assert_allclose(
+        np.asarray(st2.v.reshape(-1)[:d]), vals, rtol=1e-6)
+    # group sums must equal exact recomputation
+    ref = tl_init(jnp.asarray(vals, jnp.float32))
+    np.testing.assert_allclose(np.asarray(st2.c), np.asarray(ref.c), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Group-argmax (TPU form of Alg 3)
+# ---------------------------------------------------------------------------
+
+@given(st.data())
+@settings(max_examples=30, deadline=None)
+def test_group_argmax_exact_under_updates(data):
+    d = data.draw(st.integers(3, 60))
+    pri = np.abs(np.array(data.draw(st.lists(
+        st.floats(0, 10, allow_nan=False), min_size=d, max_size=d))))
+    state = ga_init(jnp.asarray(pri, jnp.float32))
+    for _ in range(data.draw(st.integers(1, 4))):
+        k = data.draw(st.integers(1, 6))
+        idx = np.array([data.draw(st.integers(0, d - 1)) for _ in range(k)])
+        val = np.abs(np.array([data.draw(st.floats(0, 10, allow_nan=False))
+                               for _ in range(k)]))
+        for i, v in zip(idx, val):
+            pri[i] = v
+        state = ga_update(state, jnp.asarray(idx, jnp.int32),
+                          jnp.asarray(val, jnp.float32))
+        j, state = ga_get_next(state)
+        assert pri[int(j)] == pytest.approx(pri.max(), rel=1e-6)

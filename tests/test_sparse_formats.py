@@ -1,0 +1,72 @@
+"""Sparse containers: host CSR/CSC exactness, padded layouts vs dense,
+property-based COO roundtrips."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sparse.formats import (
+    HostCSR, coo_to_host, dense_to_host, dense_to_padded, host_to_padded)
+
+
+def _random_dense(rng, n, d, density=0.2):
+    x = rng.normal(size=(n, d))
+    x[rng.random((n, d)) > density] = 0.0
+    return x
+
+
+def test_host_roundtrip(rng):
+    x = _random_dense(rng, 23, 17)
+    csr = dense_to_host(x)
+    np.testing.assert_allclose(csr.to_dense(), x)
+    np.testing.assert_allclose(csr.tocsc().to_dense(), x)
+
+
+def test_host_matvec_rmatvec(rng):
+    x = _random_dense(rng, 31, 11)
+    csr = dense_to_host(x)
+    w = rng.normal(size=11)
+    q = rng.normal(size=31)
+    np.testing.assert_allclose(csr.matvec(w), x @ w, atol=1e-10)
+    np.testing.assert_allclose(csr.rmatvec(q), x.T @ q, atol=1e-10)
+
+
+def test_padded_matvec_rmatvec(rng):
+    x = _random_dense(rng, 40, 25)
+    pcsr, pcsc = dense_to_padded(x)
+    w = jnp.asarray(rng.normal(size=25), jnp.float32)
+    q = jnp.asarray(rng.normal(size=40), jnp.float32)
+    np.testing.assert_allclose(pcsr.matvec(w), x @ np.asarray(w), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(pcsr.rmatvec(q), x.T @ np.asarray(q), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(pcsr.to_dense(), x, atol=1e-6)
+
+
+def test_padded_csc_col(rng):
+    x = _random_dense(rng, 12, 9)
+    _, pcsc = dense_to_padded(x)
+    for j in range(9):
+        idx, val, mask = pcsc.col(j)
+        got = np.zeros(12)
+        got[np.asarray(idx)[np.asarray(mask)]] = np.asarray(val)[np.asarray(mask)]
+        np.testing.assert_allclose(got, x[:, j], atol=1e-6)
+
+
+@given(st.lists(
+    st.tuples(st.integers(0, 7), st.integers(0, 9),
+              st.floats(-5, 5, allow_nan=False).filter(lambda v: abs(v) > 1e-9)),
+    min_size=0, max_size=60))
+@settings(max_examples=40, deadline=None)
+def test_coo_to_host_sums_duplicates(triplets):
+    dense = np.zeros((8, 10))
+    for r, c, v in triplets:
+        dense[r, c] += v
+    rows = np.array([t[0] for t in triplets], np.int64)
+    cols = np.array([t[1] for t in triplets], np.int64)
+    vals = np.array([t[2] for t in triplets])
+    csr = coo_to_host(rows, cols, vals, (8, 10))
+    np.testing.assert_allclose(csr.to_dense(), dense, atol=1e-9)
+
+
+def test_padding_overhead_reported(tiny_problem):
+    X, _, _ = tiny_problem
+    pcsr, _ = host_to_padded(X)
+    assert pcsr.padding_overhead >= 1.0
