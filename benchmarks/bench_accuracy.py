@@ -10,24 +10,25 @@ from typing import Dict
 
 import numpy as np
 
-from benchmarks.common import accuracy_auc, load_problem, sparsity_pct
-from repro.core.fw_sparse import sparse_fw
+from benchmarks.common import accuracy_auc, load_problem, run_backend, sparsity_pct
 
 
 def run(datasets=("rcv1", "news20", "url"), steps: int = 2000,
-        lam: float = 200.0, epsilon: float = 0.1) -> Dict:
+        lam: float = 200.0, epsilon: float = 0.1,
+        backend: str = "host_sparse") -> Dict:
     out = {"table": "4",
            "claim": "non-trivial accuracy at ε=0.1 via many cheap iterations",
-           "datasets": {}}
+           "backend": backend, "datasets": {}}
     for name in datasets:
         prob = load_problem(name)
         delta = 1.0 / prob.X.shape[0] ** 2
-        r = sparse_fw(prob.X, prob.y, lam=lam, steps=steps, queue="bsls",
-                      epsilon=epsilon, delta=delta)
-        acc, auc = accuracy_auc(prob.X, prob.y, r.w)
+        r = run_backend(prob, backend, lam=lam, steps=steps, queue="bsls",
+                        epsilon=epsilon, delta=delta)
+        acc, auc = accuracy_auc(prob.X, prob.y, np.asarray(r.w))
         # non-private reference ceiling at the same budget
-        r_np = sparse_fw(prob.X, prob.y, lam=lam, steps=steps, queue="fib_heap")
-        acc_np, _ = accuracy_auc(prob.X, prob.y, r_np.w)
+        r_np = run_backend(prob, backend, lam=lam, steps=steps,
+                           queue="fib_heap")
+        acc_np, _ = accuracy_auc(prob.X, prob.y, np.asarray(r_np.w))
         out["datasets"][name] = {
             "epsilon": epsilon, "steps": steps, "lambda": lam,
             "accuracy_pct": round(100 * acc, 2),

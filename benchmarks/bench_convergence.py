@@ -8,21 +8,21 @@ from typing import Dict
 
 import numpy as np
 
-from benchmarks.common import load_problem
+from benchmarks.common import load_problem, run_backend
 from benchmarks.host_alg1 import host_alg1
-from repro.core.fw_sparse import sparse_fw
 
 
-def run(datasets=("rcv1", "news20"), steps: int = 300, lam: float = 50.0) -> Dict:
+def run(datasets=("rcv1", "news20"), steps: int = 300, lam: float = 50.0,
+        backend: str = "host_sparse") -> Dict:
     out = {"figure": "1", "claim": "Alg2 converges to the same solution as Alg1",
-           "datasets": {}}
+           "alg2_backend": backend, "datasets": {}}
     for name in datasets:
         prob = load_problem(name)
         r1 = host_alg1(prob.X, prob.y, lam=lam, steps=steps)
-        r2 = sparse_fw(prob.X, prob.y, lam=lam, steps=steps, queue="fib_heap")
+        r2 = run_backend(prob, backend, lam=lam, steps=steps, queue="fib_heap")
         g1, g2 = np.asarray(r1.gaps), np.asarray(r2.gaps)
-        same_prefix = int(np.argmax(r1.coords != r2.coords)) if \
-            (r1.coords != r2.coords).any() else steps
+        c1, c2 = np.asarray(r1.coords), np.asarray(r2.coords)
+        same_prefix = int(np.argmax(c1 != c2)) if (c1 != c2).any() else steps
         rel_final = abs(g1[-1] - g2[-1]) / max(abs(g1[-1]), 1e-12)
         out["datasets"][name] = {
             "steps": steps,

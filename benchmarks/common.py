@@ -57,3 +57,17 @@ def accuracy_auc(X: HostCSR, y: np.ndarray, w: np.ndarray) -> Tuple[float, float
 def sparsity_pct(w: np.ndarray) -> float:
     """Paper Table 4 convention: % of coordinates that are zero."""
     return 100.0 * float(np.mean(np.asarray(w) == 0.0))
+
+
+def run_backend(prob: BenchProblem, backend: str, **cfg):
+    """Run an Alg-2-style solve on a bench problem through the solver registry.
+
+    ``cfg`` fields are FWConfig fields (lam, steps, queue, epsilon, delta...).
+    Benches that only need weights/gaps/coords should go through here so
+    ``benchmarks.run --backend`` can retarget them onto any registered engine;
+    benches that read the host engine's audit counters (flops, heap pops)
+    call ``repro.core.fw_sparse.sparse_fw`` directly and are pinned to the
+    host backend by construction (see docs/BENCHMARKS.md).
+    """
+    from repro.core.solvers import FWConfig, solve
+    return solve(prob.X, prob.y, FWConfig(backend=backend, **cfg))

@@ -7,16 +7,53 @@ bytes + roofline terms:
   dense      α-delta psum over the data axis (D/B floats · T iters)
   topk_k     error-feedback top-k all_gather (2k floats · rows · T)
 
+Also profiles the single-device solver backends through the registry
+(``--local-backends jax_dense jax_sparse``): per-iteration wall clock of each
+engine on a CPU twin of the dataset, so the collective model above can be
+combined with measured per-shard compute.
+
 Run inside the dry-run device environment:
   PYTHONPATH=src python -m benchmarks.perf_lasso
 """
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
+import argparse  # noqa: E402
 import json  # noqa: E402
+import time  # noqa: E402
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
+
+
+def profile_local_backends(backends, dataset: str = "kdda", steps: int = 30):
+    """Wall-clock per FW iteration for each registry backend on a CPU twin.
+
+    Data coercion (e.g. host_to_padded) is hoisted out of the timed window,
+    and a warmup solve absorbs trace + XLA compile (steps is jit-static, so
+    the warmup must use the identical config to hit the jit cache) — the
+    reported ms/iter is solver iterations only.
+    """
+    from benchmarks.common import load_problem
+    from repro.core.solvers import FWConfig, get_backend, resolve_queue
+
+    prob = load_problem(dataset)
+    out = {}
+    for name in backends:
+        backend = get_backend(name)
+        cfg = resolve_queue(backend, FWConfig(backend=name, lam=50.0,
+                                              steps=steps))
+        data = backend.prepare(prob.X)
+        r = backend.fn(data, prob.y, cfg)           # warmup (compile)
+        _ = float(jnp.sum(r.w))
+        t0 = time.time()
+        r = backend.fn(data, prob.y, cfg)
+        _ = float(jnp.sum(r.w))                     # block on device work
+        per_iter_ms = (time.time() - t0) / steps * 1e3
+        out[name] = {"steps": steps, "per_iter_ms": round(per_iter_ms, 2),
+                     "final_gap": float(r.gaps[-1])}
+        print(f"[local] {name}: {per_iter_ms:.2f} ms/iter", flush=True)
+    return out
 
 
 def run(dataset: str = "kdda", steps: int = 50):
@@ -58,6 +95,22 @@ def run(dataset: str = "kdda", steps: int = 50):
 
 
 if __name__ == "__main__":
-    out = run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="kdda")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--local-backends", nargs="*", default=(),
+                    help="registry backends to wall-clock profile locally "
+                         "(e.g. jax_dense jax_sparse host_sparse)")
+    ap.add_argument("--local-steps", type=int, default=30,
+                    help="FW iterations for the local backend profile")
+    ap.add_argument("--skip-mesh", action="store_true",
+                    help="only run the local backend profile")
+    args = ap.parse_args()
+    out = {}
+    if args.local_backends:
+        out["local_backends"] = profile_local_backends(
+            args.local_backends, dataset=args.dataset, steps=args.local_steps)
+    if not args.skip_mesh:
+        out["mesh"] = run(dataset=args.dataset, steps=args.steps)
     with open("perf_lasso.json", "w") as f:
         json.dump(out, f, indent=1)

@@ -7,8 +7,12 @@
   Table 4  bench_accuracy      accuracy/AUC/sparsity at ε = 0.1
   §Roofline roofline_table     three-term model from dryrun_results.json
 
-``python -m benchmarks.run [--fast] [--only NAME]`` — results to
-bench_results.json + stdout summary.
+``python -m benchmarks.run [--fast] [--only NAME] [--backend B]`` — results
+to BENCH_<name>.json per bench + aggregate bench_results.json + stdout
+summary.  ``--backend`` retargets the Alg-2 side of the registry-aware
+benches (fig1 convergence, table4 accuracy) onto any engine from
+``repro.core.solvers.available_backends()``; the FLOP/heap-audit benches are
+pinned to the host engine (see docs/BENCHMARKS.md).
 """
 from __future__ import annotations
 
@@ -24,17 +28,24 @@ def main():
     ap.add_argument("--only", default=None)
     ap.add_argument("--out", default="bench_results.json")
     ap.add_argument("--dryrun-json", default="dryrun_results.json")
+    ap.add_argument("--backend", default="host_sparse",
+                    help="solver registry backend for the Alg-2 side of "
+                         "registry-aware benches")
     args = ap.parse_args()
 
     from benchmarks import (bench_accuracy, bench_convergence, bench_flops,
                             bench_heap_pops, bench_scaling, bench_speedup,
                             roofline_table)
+    from repro.core.solvers import available_backends
+
+    if args.backend not in available_backends():
+        ap.error(f"--backend {args.backend!r} not in {available_backends()}")
 
     fast = args.fast
     suite = {
         "fig1_convergence": lambda: bench_convergence.run(
             datasets=("rcv1",) if fast else ("rcv1", "news20"),
-            steps=150 if fast else 300),
+            steps=150 if fast else 300, backend=args.backend),
         "fig2_4_flops": lambda: bench_flops.run(
             datasets=("rcv1",) if fast else ("rcv1", "news20", "kdda"),
             steps=150 if fast else 300),
@@ -47,7 +58,7 @@ def main():
             steps=100 if fast else 200),
         "table4_accuracy": lambda: bench_accuracy.run(
             datasets=("rcv1",) if fast else ("rcv1", "news20", "url"),
-            steps=800 if fast else 2000),
+            steps=800 if fast else 2000, backend=args.backend),
         "scaling_beyond": lambda: bench_scaling.run(
             d_values=(10_000, 100_000) if fast else
             (10_000, 100_000, 400_000, 800_000),
@@ -63,8 +74,10 @@ def main():
         try:
             results[name] = fn()
             results[name]["bench_seconds"] = round(time.time() - t0, 1)
-            print(f"[bench] {name} done in {results[name]['bench_seconds']}s",
-                  flush=True)
+            with open(f"BENCH_{name}.json", "w") as f:
+                json.dump(results[name], f, indent=1)
+            print(f"[bench] {name} done in {results[name]['bench_seconds']}s "
+                  f"→ BENCH_{name}.json", flush=True)
         except Exception as e:  # noqa: BLE001
             failures.append({"bench": name, "error": str(e)})
             traceback.print_exc()

@@ -16,13 +16,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fw_jax import SparseJaxConfig, sparse_fw_jax
-from repro.core.sparse.formats import dense_to_host, host_to_padded
+from repro.core.solvers import FWConfig, available_backends, solve
+from repro.core.sparse.formats import dense_to_host
 from repro.data.synthetic import lm_batches
 from repro.models.registry import get_model
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="tinyllama-1.1b")
+ap.add_argument("--backend", default="jax_dense", choices=available_backends())
 ap.add_argument("--rows", type=int, default=512)
 ap.add_argument("--features", type=int, default=4096)
 ap.add_argument("--epsilon", type=float, default=1.0)
@@ -55,12 +56,12 @@ w_star[rng.choice(args.features, 32, replace=False)] = rng.normal(0, 2, 32)
 margins = X.to_dense() @ w_star
 y = (margins > np.median(margins)).astype(np.float64)
 
-# 4. DP Frank-Wolfe LASSO head.
-pcsr, pcsc = host_to_padded(X)
-cfg = SparseJaxConfig(lam=20.0, steps=args.steps, epsilon=args.epsilon,
-                      delta=1.0 / args.rows ** 2, queue="two_level")
+# 4. DP Frank-Wolfe LASSO head, through the solver registry.
+cfg = FWConfig(backend=args.backend, lam=20.0, steps=args.steps,
+               epsilon=args.epsilon, delta=1.0 / args.rows ** 2,
+               queue="two_level")
 t0 = time.time()
-res = sparse_fw_jax(pcsr, pcsc, jnp.asarray(y, jnp.float32), cfg)
+res = solve(X, y, cfg)
 w = np.asarray(res.w)
 pred = X.to_dense() @ w > 0
 acc = (pred == (y > 0.5)).mean()

@@ -1,9 +1,13 @@
 """Core library: the paper's sparse-aware DP Frank-Wolfe, in JAX.
 
 Public API:
-  * ``FWConfig`` / ``dense_fw``        — Algorithm 1 (standard, baseline)
+  * ``solvers.solve`` / ``FWConfig`` / ``FWResult`` — the unified engine; all
+    implementations below are registered backends (dense | jax_dense |
+    host_sparse | jax_sparse)
+  * ``dense_fw``                       — Algorithm 1 (standard, baseline)
   * ``sparse_fw``                      — Algorithm 2 (faithful host, exact FLOP audit)
   * ``SparseJaxConfig`` / ``sparse_fw_jax`` — Algorithm 2, TPU-adapted scan
+  * ``solvers.jax_sparse``             — Algorithm 2 through the Pallas kernels
   * samplers: ``FibHeapQueue`` (Alg 3), ``BSLSSampler`` (Alg 4),
     two-level TPU sampler, lazy group-argmax
   * DP: ``PrivacyAccountant``, ``fw_noise_scale``, mechanisms
@@ -12,3 +16,4 @@ from repro.core.fw_dense import FWConfig, FWResult, dense_fw, dense_fw_flops  # 
 from repro.core.fw_jax import SparseJaxConfig, sparse_fw_jax  # noqa: F401
 from repro.core.fw_sparse import SparseFWResult, sparse_fw  # noqa: F401
 from repro.core.losses import LOGISTIC, SQUARED, Loss, get_loss  # noqa: F401
+from repro.core.solvers import available_backends, solve  # noqa: F401

@@ -16,52 +16,16 @@ Selection rules:
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Optional, Union
+from typing import Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.losses import Loss, get_loss
 from repro.core.dp.accountant import fw_noise_scale, per_step_epsilon
+from repro.core.solvers.config import FWConfig, FWResult  # noqa: F401  (canonical home; re-exported for compat)
 from repro.core.sparse.formats import PaddedCSR
 
 Design = Union[jnp.ndarray, PaddedCSR]
-
-
-@dataclasses.dataclass(frozen=True)
-class FWConfig:
-    lam: float = 50.0            # L1 radius λ (paper default for speed runs)
-    steps: int = 4000            # T (paper default)
-    loss: str = "logistic"
-    selection: str = "argmax"    # argmax | noisy_max | gumbel
-    epsilon: float = 1.0
-    delta: float = 1e-6
-    seed: int = 0
-
-    def loss_fn(self) -> Loss:
-        return get_loss(self.loss)
-
-
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass
-class FWResult:
-    w: jnp.ndarray          # final iterate (D,)
-    gaps: jnp.ndarray       # FW gap g_t per iteration (T,)
-    coords: jnp.ndarray     # selected coordinate per iteration (T,)
-    losses: jnp.ndarray     # mean loss per iteration (T,)
-
-    def tree_flatten(self):
-        return (self.w, self.gaps, self.coords, self.losses), None
-
-    @classmethod
-    def tree_unflatten(cls, _, leaves):
-        return cls(*leaves)
-
-    @property
-    def nnz(self) -> jnp.ndarray:
-        return jnp.sum(self.w != 0)
 
 
 def _matvec(X: Design, w: jnp.ndarray) -> jnp.ndarray:

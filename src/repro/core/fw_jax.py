@@ -18,16 +18,13 @@ driver), and dry-run on the production mesh.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple, Union
-
 import jax
 import jax.numpy as jnp
 
-from repro.core.dp.accountant import fw_noise_scale, per_step_epsilon
+from repro.core.dp.accountant import per_step_epsilon
 from repro.core.fw_dense import FWConfig, FWResult
-from repro.core.losses import get_loss
-from repro.core.samplers.bsls_jax import TwoLevelSamplerState, tl_init, tl_sample, tl_update
-from repro.core.samplers.group_argmax import GroupArgmaxState, ga_get_next, ga_init, ga_update
+from repro.core.samplers.bsls_jax import tl_init, tl_sample, tl_update
+from repro.core.samplers.group_argmax import ga_get_next, ga_init, ga_update
 from repro.core.sparse.formats import PaddedCSC, PaddedCSR
 
 

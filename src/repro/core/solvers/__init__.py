@@ -1,0 +1,18 @@
+"""Unified Frank-Wolfe solver engine (DESIGN.md §4).
+
+One API over every implementation of the paper's algorithms:
+
+    from repro.core.solvers import FWConfig, solve
+    res = solve(X, y, FWConfig(backend="jax_sparse", lam=30.0, steps=500))
+    print(res.nnz, res.gaps[-1])
+
+Backends (``available_backends()``): ``dense`` (Alg 1), ``jax_dense`` (Alg 2,
+pure-jnp device scan), ``host_sparse`` (Alg 2, faithful host loop),
+``jax_sparse`` (Alg 2 through the Pallas kernels).  New backends register via
+``register``.
+"""
+from repro.core.solvers.config import FWConfig, FWResult  # noqa: F401
+from repro.core.solvers.registry import (QUEUE_ALIASES, Backend,  # noqa: F401
+                                         available_backends, backend_doc,
+                                         get_backend, register, resolve_queue,
+                                         solve)

@@ -1,0 +1,70 @@
+"""The four builtin solver backends (DESIGN.md §4).
+
+  dense        Alg 1 — dense-work FW, one lax.scan (repro.core.fw_dense).
+               Accepts a dense device matrix or a PaddedCSR.
+  jax_dense    Alg 2 state machine on device, dense vector updates: the pure
+               jnp scan from repro.core.fw_jax (full-width scatter/logsumexp
+               refreshes each iteration).
+  host_sparse  Alg 2 faithful sequential host implementation with exact FLOP
+               accounting (repro.core.fw_sparse; queues = Alg 3 / Alg 4 /
+               ablations).
+  jax_sparse   Alg 2 on device through the Pallas kernels (spmv /
+               coord_update / bsls_draw) — the production sparse path.
+
+Each adapter normalizes its engine's native signature/result onto the shared
+``(data, y, FWConfig) -> FWResult`` contract.  Imported lazily by
+``registry._ensure_builtins``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.solvers.config import FWConfig, FWResult
+from repro.core.solvers.registry import QUEUE_ALIASES, register
+
+
+@register("dense", data_format="dense", queues=QUEUE_ALIASES["selection"],
+          default_queue=None,
+          doc="Alg 1 baseline: dense-work FW (O(nnz + D)/iter), device scan")
+def _dense_backend(data, y, config: FWConfig) -> FWResult:
+    from repro.core.fw_dense import dense_fw_jit
+    if config.queue is not None:  # queue name chosen → translate to selection
+        config = dataclasses.replace(config, selection=config.queue, queue=None)
+    return dense_fw_jit(data, jnp.asarray(y, jnp.float32), config)
+
+
+@register("jax_dense", data_format="padded", queues=QUEUE_ALIASES["device"],
+          default_queue="group_argmax",
+          doc="Alg 2 device scan, dense vector updates (pure jnp, no kernels)")
+def _jax_dense_backend(data, y, config: FWConfig) -> FWResult:
+    from repro.core.fw_jax import sparse_fw_jax_jit
+    pcsr, pcsc = data
+    return sparse_fw_jax_jit(pcsr, pcsc, jnp.asarray(y, jnp.float32), config)
+
+
+@register("host_sparse", data_format="host", queues=QUEUE_ALIASES["host"],
+          default_queue="fib_heap",
+          doc="Alg 2 faithful host loop (Alg 3/4 queues, exact FLOP audit)")
+def _host_sparse_backend(data, y, config: FWConfig) -> FWResult:
+    from repro.core.fw_sparse import sparse_fw
+    res = sparse_fw(
+        data, np.asarray(y, np.float64), lam=config.lam, steps=config.steps,
+        loss=config.loss, queue=config.queue, epsilon=config.epsilon,
+        delta=config.delta, seed=config.seed)
+    gaps = jnp.asarray(res.gaps, jnp.float32)
+    return FWResult(w=jnp.asarray(res.w, jnp.float32), gaps=gaps,
+                    coords=jnp.asarray(res.coords, jnp.int32),
+                    losses=jnp.zeros_like(gaps))
+
+
+@register("jax_sparse", data_format="padded", queues=QUEUE_ALIASES["device"],
+          default_queue="group_argmax",
+          doc="Alg 2 device scan through the Pallas kernels "
+              "(spmv + coord_update + bsls_draw)")
+def _jax_sparse_backend(data, y, config: FWConfig) -> FWResult:
+    from repro.core.solvers.jax_sparse import jax_sparse_fw_jit
+    pcsr, pcsc = data
+    return jax_sparse_fw_jit(pcsr, pcsc, jnp.asarray(y, jnp.float32), config)

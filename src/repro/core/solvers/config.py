@@ -1,0 +1,71 @@
+"""Shared solver configuration/result types (DESIGN.md §4).
+
+``FWConfig`` is the single configuration dataclass every registered backend
+consumes, and ``FWResult`` the single result pytree every backend returns.
+Both classes used to live in ``repro.core.fw_dense``; they are defined here
+so the registry, the backends, and user code all share one vocabulary, and
+re-exported from ``fw_dense`` for backward compatibility.
+
+The config is a frozen (hashable) dataclass so it can ride through ``jax.jit``
+as a static argument — every field is a Python scalar.
+
+Queue vs. selection: Algorithm 1 (the ``dense`` backend) names its coordinate
+rule ``selection`` (argmax | noisy_max | gumbel); the sparse backends name
+theirs ``queue`` (fib_heap | bsls | ... on host, two_level | group_argmax on
+device).  ``FWConfig`` carries both; ``queue=None`` means "this backend's
+non-private default".  The registry translates equivalent names between
+backends (see ``registry.QUEUE_ALIASES``) so one config can be re-targeted by
+changing only ``backend=``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import Loss, get_loss
+
+
+@dataclasses.dataclass(frozen=True)
+class FWConfig:
+    """One Frank-Wolfe run, declaratively.
+
+    ``repro.core.solvers.solve(X, y, FWConfig(backend=...))`` is the single
+    entry point; see ``registry.available_backends()`` for the choices.
+    """
+
+    backend: str = "dense"       # dense | jax_dense | host_sparse | jax_sparse
+    lam: float = 50.0            # L1 radius λ (paper default for speed runs)
+    steps: int = 4000            # T (paper default)
+    loss: str = "logistic"
+    selection: str = "argmax"    # Alg-1 rule: argmax | noisy_max | gumbel
+    queue: Optional[str] = None  # Alg-2 rule; None → backend non-private default
+    epsilon: float = 1.0
+    delta: float = 1e-6
+    seed: int = 0
+    interpret: bool = True       # Pallas interpret mode (True on CPU containers)
+
+    def loss_fn(self) -> Loss:
+        return get_loss(self.loss)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FWResult:
+    w: jnp.ndarray          # final iterate (D,)
+    gaps: jnp.ndarray       # FW gap g_t per iteration (T,)
+    coords: jnp.ndarray     # selected coordinate per iteration (T,)
+    losses: jnp.ndarray     # mean loss per iteration (T,); zeros if untracked
+
+    def tree_flatten(self):
+        return (self.w, self.gaps, self.coords, self.losses), None
+
+    @classmethod
+    def tree_unflatten(cls, _, leaves):
+        return cls(*leaves)
+
+    @property
+    def nnz(self) -> jnp.ndarray:
+        return jnp.sum(self.w != 0)

@@ -1,0 +1,129 @@
+"""``jax_sparse`` backend — Algorithm 2 as one device-resident kernel pipeline.
+
+This is the paper's fast iteration finally wired end-to-end through the
+Pallas kernels (DESIGN.md §5):
+
+  * setup           — ``kernels/spmv`` ELL rmatvec builds ȳ and α₀ from the
+                      padded CSR (one O(nnz) sweep each);
+  * line 15 select  — ``kernels/bsls_draw`` two-level exponential-mechanism
+                      draw (big step over √D group masses in XLA, little step
+                      as the scalar-prefetch Pallas kernel that DMAs only the
+                      winning group's row), or the lazy group-argmax for the
+                      non-private queue;
+  * lines 22-28     — ``kernels/coord_update`` fused sweep: one VMEM-resident
+                      pass updates v̄, q̄, α and returns the g̃ increment,
+                      instead of the four separate scatter/gather passes the
+                      pure-jnp ``fw_jax`` path emits.
+
+The T-iteration loop is a single ``lax.scan``, so the whole optimization
+lowers to one XLA while-loop with the kernels inlined — jit/pjit-compilable
+and droppable onto the production mesh.  On CPU containers the kernels run in
+interpret mode (``config.interpret=True``, the default); on TPU pass
+``interpret=False``.
+
+State representation (w_m-rescaling) is identical to ``fw_sparse``/``fw_jax``
+— see DESIGN.md §2 — so the non-private path takes the *same steps* as both,
+which the cross-backend parity test asserts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dp.accountant import per_step_epsilon
+from repro.core.samplers.bsls_jax import tl_init, tl_update
+from repro.core.samplers.group_argmax import ga_get_next, ga_init, ga_update
+from repro.core.solvers.config import FWConfig, FWResult
+from repro.core.sparse.formats import PaddedCSC, PaddedCSR
+from repro.kernels.bsls_draw.ops import two_level_draw
+from repro.kernels.coord_update.ops import coord_update
+from repro.kernels.coord_update.ref import coord_update_ref
+from repro.kernels.spmv.ops import ell_rmatvec
+
+
+def jax_sparse_fw(
+    pcsr: PaddedCSR, pcsc: PaddedCSC, y: jnp.ndarray, config: FWConfig
+) -> FWResult:
+    n, d = pcsr.shape
+    lam = config.lam
+    loss = config.loss_fn()
+    h = loss.split_grad
+    interp = config.interpret
+    private = config.queue == "two_level"
+    # The fused kernel hardwires logistic h = σ; other losses fall back to the
+    # jnp oracle (same math, unfused).
+    fused = config.loss == "logistic"
+    if private:
+        eps_step = per_step_epsilon(config.epsilon, config.delta, config.steps)
+        em_scale = eps_step * n / (2.0 * loss.lipschitz)
+    else:
+        em_scale = 1.0  # priorities are raw |α|
+
+    dtype = pcsr.values.dtype
+    inv_n = 1.0 / n
+
+    # ---- setup: ȳ and the w=0 gradient, via the spmv kernel -----------------
+    ybar = ell_rmatvec(pcsr, y, interpret=interp) / n
+    vbar0 = jnp.zeros(n, dtype)
+    qbar0 = h(vbar0)
+    alpha0 = ell_rmatvec(pcsr, qbar0, interpret=interp) / n - ybar
+
+    if private:
+        sampler0 = tl_init(jnp.abs(alpha0) * em_scale)
+    else:
+        sampler0 = ga_init(jnp.abs(alpha0))
+
+    def step(carry, t):
+        w, w_m, g_tilde, vbar, qbar, alpha, sampler, key = carry
+        key, sel_key = jax.random.split(key)
+        # ---- line 15: select coordinate -------------------------------------
+        if private:
+            j = two_level_draw(sampler.c, sampler.v, sel_key, interpret=interp)
+            sampler_after_sel = sampler
+        else:
+            j, sampler_after_sel = ga_get_next(sampler)
+        j = jnp.minimum(j, d - 1)
+        a_j = alpha[j]
+        # ---- lines 16-21 -----------------------------------------------------
+        d_tilde = -lam * jnp.sign(a_j)
+        d_tilde = jnp.where(a_j == 0, lam, d_tilde)
+        gap = g_tilde - d_tilde * a_j
+        eta = 2.0 / (t + 2.0)
+        w_m = w_m * (1.0 - eta)
+        w = w.at[j].add(eta * d_tilde / w_m)
+        g_tilde = g_tilde * (1.0 - eta) + eta * d_tilde * a_j
+        # ---- lines 22-28: one fused VMEM sweep ------------------------------
+        rows, xvals, mask = pcsc.col(j)                  # (Kc,)
+        row_idx = pcsr.indices[rows]                     # (Kc, Kr)
+        row_val = pcsr.values[rows]                      # (Kc, Kr) — 0 at padding
+        if fused:
+            vbar, qbar, alpha, g_delta = coord_update(
+                vbar, qbar, alpha, w, rows, xvals, mask, row_idx, row_val,
+                eta=eta, d_tilde=d_tilde, w_m=w_m, inv_n=inv_n,
+                interpret=interp)
+        else:
+            vbar, qbar, alpha, g_delta = coord_update_ref(
+                vbar, qbar, alpha, w, rows, xvals, mask, row_idx, row_val,
+                eta=eta, d_tilde=d_tilde, w_m=w_m, inv_n=inv_n, h=h)
+        g_tilde = g_tilde + g_delta
+        # ---- line 29: refresh queue priorities for touched coordinates ------
+        flat_idx = row_idx.reshape(-1)
+        fresh = jnp.abs(alpha[flat_idx]) * (em_scale if private else 1.0)
+        if private:
+            sampler = tl_update(sampler_after_sel, flat_idx, fresh)
+        else:
+            sampler = ga_update(sampler_after_sel, flat_idx, fresh)
+        return (w, w_m, g_tilde, vbar, qbar, alpha, sampler, key), (gap, j)
+
+    carry0 = (
+        jnp.zeros(d, dtype), jnp.asarray(1.0, dtype), jnp.asarray(0.0, dtype),
+        vbar0, qbar0, alpha0, sampler0, jax.random.PRNGKey(config.seed),
+    )
+    ts = jnp.arange(1, config.steps + 1, dtype=dtype)
+    (w, w_m, *_), (gaps, coords) = jax.lax.scan(step, carry0, ts)
+    w_true = w * w_m
+    return FWResult(w=w_true, gaps=gaps, coords=coords,
+                    losses=jnp.zeros_like(gaps))
+
+
+jax_sparse_fw_jit = jax.jit(jax_sparse_fw, static_argnames=("config",))

@@ -1,0 +1,204 @@
+"""Backend registry — the single entry point for every Frank-Wolfe solver.
+
+    from repro.core.solvers import FWConfig, solve
+    result = solve(X, y, FWConfig(backend="jax_sparse", lam=30.0, steps=500))
+
+Backends register themselves with :func:`register`; the builtin four
+(``dense``, ``jax_dense``, ``host_sparse``, ``jax_sparse``) are attached
+lazily on first lookup so importing this module never drags in every solver
+(and so ``fw_dense`` can import ``solvers.config`` without a cycle).
+
+Each backend declares which data layout it consumes (``dense`` | ``host`` |
+``padded``); :func:`solve` coerces the user's ``X`` — a ``HostCSR``, a dense
+numpy/JAX matrix, or a pre-built ``(PaddedCSR, PaddedCSC)`` pair — into that
+layout once, up front.  Queue names are translated between backends via
+``QUEUE_ALIASES`` so the same ``FWConfig`` can be re-targeted by changing
+only ``backend=`` (DESIGN.md §4 documents the name map).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Mapping, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.solvers.config import FWConfig, FWResult
+from repro.core.sparse.formats import (HostCSR, PaddedCSC, PaddedCSR,
+                                       dense_to_host, host_to_padded)
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """A registered solver: adapter fn + the data layout and queues it speaks."""
+
+    name: str
+    fn: Callable  # (data, y, config) -> FWResult
+    data_format: str                 # dense | host | padded
+    queues: Mapping[str, str]        # accepted queue name -> native name
+    default_queue: Optional[str]     # used when config.queue is None
+    doc: str = ""
+
+    def prepare(self, X):
+        """Coerce ``X`` into this backend's data layout (what solve() does
+        internally); use it to hoist conversion out of timed/hot loops."""
+        return _COERCE[self.data_format](X)
+
+
+_REGISTRY: Dict[str, Backend] = {}
+_BUILTINS_LOADED = False
+
+# Equivalent coordinate-selection rules across implementations: left column is
+# what the user may write, per-backend maps pick the native realization.
+# (fib_heap ≡ group_argmax ≡ argmax: exact max of |α|.  bsls ≡ two_level ≡
+# gumbel: the DP exponential mechanism.)
+QUEUE_ALIASES: Mapping[str, Mapping[str, str]] = {
+    "host": {
+        "fib_heap": "fib_heap", "argmax": "argmax", "noisy_max": "noisy_max",
+        "bsls": "bsls", "group_argmax": "fib_heap", "two_level": "bsls",
+        "gumbel": "bsls",
+    },
+    "device": {
+        "two_level": "two_level", "group_argmax": "group_argmax",
+        "bsls": "two_level", "gumbel": "two_level",
+        "fib_heap": "group_argmax", "argmax": "group_argmax",
+    },
+    # Alg 1 has no queue; queue names map onto its `selection` rule.
+    "selection": {
+        "argmax": "argmax", "fib_heap": "argmax", "group_argmax": "argmax",
+        "noisy_max": "noisy_max",
+        "gumbel": "gumbel", "bsls": "gumbel", "two_level": "gumbel",
+    },
+}
+
+
+def register(name: str, *, data_format: str, queues: Mapping[str, str],
+             default_queue: Optional[str], doc: str = "") -> Callable:
+    """Decorator: add ``fn(data, y, config) -> FWResult`` under ``name``."""
+
+    def deco(fn: Callable) -> Callable:
+        _REGISTRY[name] = Backend(name=name, fn=fn, data_format=data_format,
+                                  queues=queues, default_queue=default_queue,
+                                  doc=doc)
+        return fn
+
+    return deco
+
+
+def _ensure_builtins() -> None:
+    global _BUILTINS_LOADED
+    if not _BUILTINS_LOADED:
+        import repro.core.solvers.backends  # noqa: F401  (registers on import)
+        _BUILTINS_LOADED = True
+
+
+def available_backends() -> Tuple[str, ...]:
+    _ensure_builtins()
+    return tuple(sorted(_REGISTRY))
+
+
+def get_backend(name: str) -> Backend:
+    _ensure_builtins()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown solver backend {name!r}; available: "
+            f"{', '.join(available_backends())}") from None
+
+
+def backend_doc(name: str) -> str:
+    return get_backend(name).doc
+
+
+# ---------------------------------------------------------------------------
+# data coercion
+# ---------------------------------------------------------------------------
+
+
+def _is_padded_pair(X) -> bool:
+    return (isinstance(X, tuple) and len(X) == 2
+            and isinstance(X[0], PaddedCSR) and isinstance(X[1], PaddedCSC))
+
+
+def as_host_csr(X) -> HostCSR:
+    if isinstance(X, HostCSR):
+        return X
+    if _is_padded_pair(X):
+        # O(nnz) rebuild from the padded lanes — never materialize N×D.
+        pcsr = X[0]
+        idx = np.asarray(pcsr.indices)
+        val = np.asarray(pcsr.values, np.float64)
+        nnz = np.asarray(pcsr.nnz)
+        lane = np.arange(idx.shape[1])[None, :]
+        mask = lane < nnz[:, None]
+        rows = np.broadcast_to(np.arange(idx.shape[0])[:, None], idx.shape)
+        from repro.core.sparse.formats import coo_to_host
+        return coo_to_host(rows[mask], idx[mask], val[mask], pcsr.shape)
+    if isinstance(X, (np.ndarray, jnp.ndarray)) and np.ndim(X) == 2:
+        return dense_to_host(np.asarray(X))
+    raise TypeError("X must be a HostCSR, a 2-D matrix, or a (PaddedCSR, "
+                    f"PaddedCSC) pair; got {type(X).__name__}")
+
+
+def as_dense_jax(X) -> jnp.ndarray:
+    if isinstance(X, HostCSR):
+        return jnp.asarray(X.to_dense(), jnp.float32)
+    if _is_padded_pair(X):
+        return X[0]  # fw_dense consumes PaddedCSR natively
+    if isinstance(X, PaddedCSR):
+        return X
+    if np.ndim(X) == 2:
+        return jnp.asarray(X, jnp.float32)
+    raise TypeError("X must be a HostCSR, a 2-D matrix, or a (PaddedCSR, "
+                    f"PaddedCSC) pair; got {type(X).__name__}")
+
+
+def as_padded(X) -> Tuple[PaddedCSR, PaddedCSC]:
+    if _is_padded_pair(X):
+        return X
+    if isinstance(X, HostCSR):
+        return host_to_padded(X)
+    if isinstance(X, (np.ndarray, jnp.ndarray)) and np.ndim(X) == 2:
+        return host_to_padded(dense_to_host(np.asarray(X)))
+    raise TypeError("X must be a HostCSR, a 2-D matrix, or a (PaddedCSR, "
+                    f"PaddedCSC) pair; got {type(X).__name__}")
+
+
+_COERCE = {"dense": as_dense_jax, "host": as_host_csr, "padded": as_padded}
+
+
+# ---------------------------------------------------------------------------
+# solve
+# ---------------------------------------------------------------------------
+
+
+def resolve_queue(backend: Backend, config: FWConfig) -> FWConfig:
+    """Fill in / translate ``config.queue`` for ``backend`` (see QUEUE_ALIASES)."""
+    if config.queue is None:
+        return dataclasses.replace(config, queue=backend.default_queue)
+    try:
+        native = backend.queues[config.queue]
+    except KeyError:
+        raise ValueError(
+            f"backend {backend.name!r} does not support queue "
+            f"{config.queue!r}; accepted: {', '.join(sorted(backend.queues))}"
+        ) from None
+    return dataclasses.replace(config, queue=native)
+
+
+def solve(X, y, config: Optional[FWConfig] = None, **overrides) -> FWResult:
+    """Run the configured Frank-Wolfe backend on (X, y).
+
+    ``X``: HostCSR, dense (N, D) numpy/JAX matrix, or a pre-built
+    ``(PaddedCSR, PaddedCSC)`` pair.  ``y``: (N,) labels in {0, 1}.
+    Keyword overrides are applied on top of ``config``
+    (``solve(X, y, backend="jax_sparse", steps=100)``).
+    """
+    config = config or FWConfig()
+    if overrides:
+        config = dataclasses.replace(config, **overrides)
+    backend = get_backend(config.backend)
+    config = resolve_queue(backend, config)
+    data = _COERCE[backend.data_format](X)
+    return backend.fn(data, y, config)

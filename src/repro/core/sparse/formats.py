@@ -139,7 +139,9 @@ def coo_to_host(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray, shape: Sha
                 while k < rows.size and rows[k] == rows[i] and cols[k] == cols[i]:
                     acc += vals[k]
                     k += 1
-                out_r.append(rows[i]); out_c.append(cols[i]); out_v.append(acc)
+                out_r.append(rows[i])
+                out_c.append(cols[i])
+                out_v.append(acc)
                 i = k
             rows = np.array(out_r, dtype=np.int64)
             cols = np.array(out_c, dtype=np.int64)

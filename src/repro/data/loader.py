@@ -8,11 +8,9 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Any, Callable, Iterator, Optional
+from typing import Any, Iterator, Optional
 
 import jax
-import numpy as np
-
 
 class ShardedLoader:
     def __init__(self, it: Iterator, sharding: Optional[Any] = None,

@@ -10,7 +10,6 @@
 """
 from __future__ import annotations
 
-import math
 from typing import Dict, Iterator, Optional, Tuple
 
 import numpy as np

@@ -36,8 +36,7 @@ a jitted scan over T iterations whose ``.lower().compile()`` on the 16×16 and
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

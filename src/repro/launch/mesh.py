@@ -20,8 +20,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=axis_types)
+    if hasattr(jax.sharding, "AxisType"):  # jax ≥ 0.5 explicit-axis-type API
+        axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+        return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return jax.make_mesh(shape, axes)
 
 
 def batch_axes(mesh) -> tuple:

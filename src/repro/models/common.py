@@ -12,7 +12,6 @@ reference for the Pallas flash kernel in ``repro/kernels/flash_attention``.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional
 
 import jax

@@ -8,7 +8,6 @@ here so dry-run reports can show both the true and padded shapes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import jax.numpy as jnp
 

@@ -10,8 +10,6 @@ self-attention KV cache plus the fixed cross K/V.
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -10,8 +10,6 @@ cell.  Decode carries (conv window, ssm state) — O(1) per token, no KV cache.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config, smoke_config
-from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.models.config import SHAPES, ModelConfig
 
 
 @dataclasses.dataclass(frozen=True)

@@ -13,7 +13,6 @@ mamba, state (B, d_rnn)).  Local attention uses a ring-buffer KV cache of
 from __future__ import annotations
 
 import math
-from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

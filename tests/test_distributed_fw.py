@@ -4,7 +4,6 @@ import json
 import subprocess
 import sys
 
-import numpy as np
 import pytest
 
 SCRIPT = r"""
@@ -19,8 +18,11 @@ from repro.distributed.fw_shard import DistFWConfig, distributed_fw
 
 X, y, _ = make_sparse_classification(n=120, d=400, nnz_per_row=10,
                                      informative=15, seed=5)
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+if hasattr(jax.sharding, "AxisType"):
+    mesh = jax.make_mesh((2, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+else:
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
 blocks = build_block_sparse(X, 2, 2)
 y_pad = jnp.zeros(blocks.padded[0], jnp.float32).at[:len(y)].set(
     jnp.asarray(y, jnp.float32))

@@ -1,0 +1,136 @@
+"""Unified solver engine: registry behavior + cross-backend parity.
+
+Parity logic (DESIGN.md §4): on a *dense* design matrix every iteration
+touches every row, so Algorithm 2's lazy q̄ refresh never goes stale and all
+four backends must take identical steps — dense (Alg 1), jax_dense,
+host_sparse and jax_sparse agree on coords exactly and on weights/gaps to
+float tolerance.  On a genuinely sparse problem Alg 1 may diverge from Alg 2
+at near-ties (lazy refresh, paper Fig 1), but the three Alg-2 backends are
+the *same* state machine and must still agree with each other.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.solvers import (FWConfig, available_backends, get_backend,
+                                resolve_queue, solve)
+
+ALL_BACKENDS = ("dense", "jax_dense", "host_sparse", "jax_sparse")
+ALG2_BACKENDS = ("jax_dense", "host_sparse", "jax_sparse")
+
+
+@pytest.fixture(scope="module")
+def dense_problem():
+    rng = np.random.default_rng(3)
+    n, d = 80, 48
+    X = rng.normal(size=(n, d)) / np.sqrt(d)
+    w_star = np.zeros(d)
+    w_star[rng.choice(d, 8, replace=False)] = rng.normal(0, 2, 8)
+    y = (X @ w_star + 0.1 * rng.normal(size=n) > 0).astype(np.float64)
+    return X, y
+
+
+@pytest.fixture(scope="module")
+def dense_runs(dense_problem):
+    X, y = dense_problem
+    cfg = FWConfig(lam=6.0, steps=80)
+    return {b: solve(X, y, dataclasses.replace(cfg, backend=b))
+            for b in ALL_BACKENDS}
+
+
+def test_registry_lists_all_builtins():
+    assert set(ALL_BACKENDS) <= set(available_backends())
+
+
+def test_registry_rejects_unknown_backend(dense_problem):
+    X, y = dense_problem
+    with pytest.raises(ValueError, match="unknown solver backend"):
+        solve(X, y, FWConfig(backend="quantum_annealer", steps=2))
+    with pytest.raises(ValueError):
+        get_backend("nope")
+
+
+def test_registry_rejects_unknown_queue(dense_problem):
+    X, y = dense_problem
+    with pytest.raises(ValueError, match="does not support queue"):
+        solve(X, y, FWConfig(backend="jax_sparse", queue="bogus", steps=2))
+
+
+def test_queue_alias_translation():
+    # one config, retargeted across backends, resolves to the native names
+    cfg = FWConfig(queue="bsls")
+    assert resolve_queue(get_backend("host_sparse"), cfg).queue == "bsls"
+    assert resolve_queue(get_backend("jax_sparse"), cfg).queue == "two_level"
+    cfg = FWConfig(queue="fib_heap")
+    assert resolve_queue(get_backend("jax_dense"), cfg).queue == "group_argmax"
+    assert resolve_queue(get_backend("dense"), cfg).queue == "argmax"
+
+
+def test_all_backends_parity_on_dense_problem(dense_runs):
+    """Acceptance: non-private weights and gaps agree within 1e-4 (4 ways)."""
+    ref = dense_runs["dense"]
+    for b in ALL_BACKENDS:
+        r = dense_runs[b]
+        np.testing.assert_array_equal(
+            np.asarray(r.coords), np.asarray(ref.coords),
+            err_msg=f"{b}: coordinate sequence diverged from dense")
+        np.testing.assert_allclose(np.asarray(r.w), np.asarray(ref.w),
+                                   atol=1e-4, err_msg=f"{b}: weights")
+        np.testing.assert_allclose(np.asarray(r.gaps), np.asarray(ref.gaps),
+                                   atol=1e-4, err_msg=f"{b}: gaps")
+
+
+def test_all_backends_shrink_gap(dense_runs):
+    for b, r in dense_runs.items():
+        gaps = np.asarray(r.gaps)
+        assert gaps[-1] < gaps[0] / 20.0, b
+
+
+def test_alg2_backends_identical_on_sparse_problem(tiny_problem):
+    """The three Alg-2 engines are one state machine: same steps on real
+    sparse data, where Alg 1 may legitimately diverge (lazy q̄ refresh)."""
+    X, y, _ = tiny_problem
+    cfg = FWConfig(lam=8.0, steps=60)
+    runs = {b: solve(X, y, dataclasses.replace(cfg, backend=b))
+            for b in ALG2_BACKENDS}
+    ref = runs["host_sparse"]
+    for b in ALG2_BACKENDS:
+        r = runs[b]
+        np.testing.assert_array_equal(np.asarray(r.coords),
+                                      np.asarray(ref.coords), err_msg=b)
+        np.testing.assert_allclose(np.asarray(r.w), np.asarray(ref.w),
+                                   atol=1e-4, err_msg=b)
+        np.testing.assert_allclose(np.asarray(r.gaps), np.asarray(ref.gaps),
+                                   atol=1e-4, err_msg=b)
+    # Alg 1 still collapses the gap toward the same optimum (paper Fig 1)
+    dense = solve(X, y, dataclasses.replace(cfg, backend="dense"))
+    assert float(dense.gaps[-1]) < float(dense.gaps[0]) / 4.0
+    assert float(ref.gaps[-1]) < float(ref.gaps[0]) / 4.0
+
+
+def test_private_queues_run_everywhere(tiny_problem):
+    """queue='bsls' retargets to each backend's DP exponential mechanism."""
+    X, y, _ = tiny_problem
+    for b in ALL_BACKENDS:
+        r = solve(X, y, FWConfig(backend=b, lam=8.0, steps=20, queue="bsls",
+                                 epsilon=1.0, delta=1e-6))
+        w = np.asarray(r.w)
+        assert np.isfinite(w).all(), b
+        assert int((w != 0).sum()) <= 21, b
+
+
+def test_solve_accepts_padded_pair(tiny_problem):
+    from repro.core.sparse.formats import host_to_padded
+    X, y, _ = tiny_problem
+    pair = host_to_padded(X)
+    direct = solve(X, y, FWConfig(backend="jax_sparse", lam=8.0, steps=25))
+    padded = solve(pair, y, FWConfig(backend="jax_sparse", lam=8.0, steps=25))
+    np.testing.assert_array_equal(np.asarray(direct.coords),
+                                  np.asarray(padded.coords))
+
+
+def test_solve_kwarg_overrides(dense_problem):
+    X, y = dense_problem
+    r = solve(X, y, backend="host_sparse", lam=6.0, steps=10)
+    assert np.asarray(r.gaps).shape == (10,)

@@ -2,10 +2,13 @@
 property-based COO roundtrips."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.sparse.formats import (
-    HostCSR, coo_to_host, dense_to_host, dense_to_padded, host_to_padded)
+    coo_to_host, dense_to_host, dense_to_padded, host_to_padded)
 
 
 def _random_dense(rng, n, d, density=0.2):
