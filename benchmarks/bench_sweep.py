@@ -1,0 +1,69 @@
+"""Sweep bench — sequential ``solve()`` vs batched ``solve_many()``.
+
+The paper's experiments (and any real deployment) fit a grid of (λ, ε)
+problems over one design matrix.  This bench times both paths end-to-end on
+the paper's sparsity regimes — the API a user would actually call, so the
+sequential side pays per-call coercion/compile exactly as a naive loop does,
+and the batched side pays one coercion + one vmapped compile.
+
+Output row per dataset: grid shape, wall-clock for both paths, speedup, and
+a parity audit (max |Δw| between the batched and sequential solutions on
+identical keys — must sit at float tolerance, it is the same state machine).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def run(datasets=("rcv1", "news20"), lams=(10.0, 20.0, 40.0, 80.0),
+        epsilons=(0.5, 2.0), steps: int = 60, backend: str = "jax_sparse"):
+    from benchmarks.common import load_problem
+    from repro.core.solvers import FWConfig, grid, solve, solve_many
+
+    out = {"grid": {"lam": list(lams), "epsilon": list(epsilons)},
+           "steps": steps, "backend": backend, "datasets": {}}
+    for name in datasets:
+        prob = load_problem(name)
+        configs = grid(FWConfig(backend=backend, steps=steps, queue="bsls",
+                                delta=1e-6),
+                       lam=lams, epsilon=epsilons)
+
+        t0 = time.time()
+        batched = solve_many(prob.X, prob.y, configs)
+        _ = [np.asarray(r.w) for r in batched]       # block on device work
+        batched_s = time.time() - t0
+
+        t0 = time.time()
+        seq = [solve(prob.X, prob.y, c) for c in configs]
+        _ = [np.asarray(r.w) for r in seq]
+        sequential_s = time.time() - t0
+
+        max_w_dev = max(
+            float(np.max(np.abs(np.asarray(b.w) - np.asarray(s.w))))
+            for b, s in zip(batched, seq))
+        coords_equal = all(
+            np.array_equal(np.asarray(b.coords), np.asarray(s.coords))
+            for b, s in zip(batched, seq))
+        row = {
+            "n": prob.X.shape[0], "d": prob.X.shape[1],
+            "density": prob.X.nnz / (prob.X.shape[0] * prob.X.shape[1]),
+            "configs": len(configs),
+            "sequential_s": round(sequential_s, 2),
+            "batched_s": round(batched_s, 2),
+            "sweep_speedup": round(sequential_s / max(batched_s, 1e-9), 2),
+            "max_w_dev": max_w_dev,
+            "pass_parity": bool(coords_equal and max_w_dev < 1e-4),
+        }
+        out["datasets"][name] = row
+        print(f"[sweep] {name}: {len(configs)} cfgs  "
+              f"seq {sequential_s:.1f}s  batched {batched_s:.1f}s  "
+              f"({row['sweep_speedup']}x)  parity={row['pass_parity']}",
+              flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

@@ -10,7 +10,10 @@ bytes + roofline terms:
 Also profiles the single-device solver backends through the registry
 (``--local-backends jax_dense jax_sparse``): per-iteration wall clock of each
 engine on a CPU twin of the dataset, so the collective model above can be
-combined with measured per-shard compute.
+combined with measured per-shard compute.  ``--sweep-grid N`` additionally
+profiles an N-config λ/ε sweep two ways — sequential ``solve()`` loop vs one
+vmapped ``solve_many()`` batch — the multi-tenant traffic shape the fit
+service drains (DESIGN.md §6).
 
 Run inside the dry-run device environment:
   PYTHONPATH=src python -m benchmarks.perf_lasso
@@ -53,6 +56,49 @@ def profile_local_backends(backends, dataset: str = "kdda", steps: int = 30):
         out[name] = {"steps": steps, "per_iter_ms": round(per_iter_ms, 2),
                      "final_gap": float(r.gaps[-1])}
         print(f"[local] {name}: {per_iter_ms:.2f} ms/iter", flush=True)
+    return out
+
+
+def profile_sweep(grid_size: int, dataset: str = "kdda", steps: int = 30):
+    """Sequential vs batched wall clock on an N-config λ/ε grid.
+
+    Both sides re-use a hot jit cache (warmup run excluded) so the number is
+    steady-state serving throughput, not compile time.  The sequential side
+    still re-enters the registry per config — per-call coercion included —
+    because that is what a naive sweep loop pays.
+    """
+    from benchmarks.common import load_problem
+    from repro.core.solvers import FWConfig, grid, solve, solve_many
+
+    prob = load_problem(dataset)
+    lams = tuple(10.0 * (1 + i) for i in range((grid_size + 1) // 2))
+    configs = grid(FWConfig(backend="jax_sparse", steps=steps, queue="bsls"),
+                   lam=lams, epsilon=(0.5, 2.0))[:grid_size]
+    assert len(configs) == grid_size
+
+    warm = solve_many(prob.X, prob.y, configs)      # warmup (compile)
+    jax.block_until_ready([r.w for r in warm])
+    t0 = time.time()
+    res = solve_many(prob.X, prob.y, configs)
+    _ = [float(jnp.sum(r.w)) for r in res]
+    batched_s = time.time() - t0
+
+    # warm every config: FWConfig is a static jit argument, so each distinct
+    # (λ, ε) is its own cache entry — warming only configs[0] would leave
+    # N-1 compiles inside the timed window
+    for c in configs:
+        solve(prob.X, prob.y, c).w.block_until_ready()
+    t0 = time.time()
+    for c in configs:
+        _ = float(jnp.sum(solve(prob.X, prob.y, c).w))
+    sequential_s = time.time() - t0
+
+    out = {"dataset": dataset, "configs": len(configs), "steps": steps,
+           "sequential_s": round(sequential_s, 2),
+           "batched_s": round(batched_s, 2),
+           "sweep_speedup": round(sequential_s / max(batched_s, 1e-9), 2)}
+    print(f"[sweep] {len(configs)} cfgs: seq {sequential_s:.1f}s, "
+          f"batched {batched_s:.1f}s ({out['sweep_speedup']}x)", flush=True)
     return out
 
 
@@ -103,13 +149,19 @@ if __name__ == "__main__":
                          "(e.g. jax_dense jax_sparse host_sparse)")
     ap.add_argument("--local-steps", type=int, default=30,
                     help="FW iterations for the local backend profile")
+    ap.add_argument("--sweep-grid", type=int, default=0,
+                    help="profile an N-config λ/ε sweep: sequential solve() "
+                         "vs one batched solve_many()")
     ap.add_argument("--skip-mesh", action="store_true",
-                    help="only run the local backend profile")
+                    help="only run the local profiles")
     args = ap.parse_args()
     out = {}
     if args.local_backends:
         out["local_backends"] = profile_local_backends(
             args.local_backends, dataset=args.dataset, steps=args.local_steps)
+    if args.sweep_grid:
+        out["sweep"] = profile_sweep(
+            args.sweep_grid, dataset=args.dataset, steps=args.local_steps)
     if not args.skip_mesh:
         out["mesh"] = run(dataset=args.dataset, steps=args.steps)
     with open("perf_lasso.json", "w") as f:

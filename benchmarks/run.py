@@ -5,6 +5,7 @@
   Fig 3    bench_heap_pops     heap pops / ‖w*‖₀
   Table 3  bench_speedup       DP wall-clock speedup (Alg 2+4, ablation)
   Table 4  bench_accuracy      accuracy/AUC/sparsity at ε = 0.1
+  (sweeps) bench_sweep         sequential solve() vs batched solve_many()
   §Roofline roofline_table     three-term model from dryrun_results.json
 
 ``python -m benchmarks.run [--fast] [--only NAME] [--backend B]`` — results
@@ -28,24 +29,27 @@ def main():
     ap.add_argument("--only", default=None)
     ap.add_argument("--out", default="bench_results.json")
     ap.add_argument("--dryrun-json", default="dryrun_results.json")
-    ap.add_argument("--backend", default="host_sparse",
+    ap.add_argument("--backend", default=None,
                     help="solver registry backend for the Alg-2 side of "
-                         "registry-aware benches")
+                         "registry-aware benches (default: host_sparse; the "
+                         "sweep bench defaults to jax_sparse, the only "
+                         "engine with a batched fast path)")
     args = ap.parse_args()
 
     from benchmarks import (bench_accuracy, bench_convergence, bench_flops,
                             bench_heap_pops, bench_scaling, bench_speedup,
-                            roofline_table)
+                            bench_sweep, roofline_table)
     from repro.core.solvers import available_backends
 
-    if args.backend not in available_backends():
+    if args.backend is not None and args.backend not in available_backends():
         ap.error(f"--backend {args.backend!r} not in {available_backends()}")
+    alg2_backend = args.backend or "host_sparse"
 
     fast = args.fast
     suite = {
         "fig1_convergence": lambda: bench_convergence.run(
             datasets=("rcv1",) if fast else ("rcv1", "news20"),
-            steps=150 if fast else 300, backend=args.backend),
+            steps=150 if fast else 300, backend=alg2_backend),
         "fig2_4_flops": lambda: bench_flops.run(
             datasets=("rcv1",) if fast else ("rcv1", "news20", "kdda"),
             steps=150 if fast else 300),
@@ -58,7 +62,12 @@ def main():
             steps=100 if fast else 200),
         "table4_accuracy": lambda: bench_accuracy.run(
             datasets=("rcv1",) if fast else ("rcv1", "news20", "url"),
-            steps=800 if fast else 2000, backend=args.backend),
+            steps=800 if fast else 2000, backend=alg2_backend),
+        "sweep": lambda: bench_sweep.run(
+            datasets=("rcv1", "news20"),
+            lams=(10.0, 20.0, 40.0, 80.0), epsilons=(0.5, 2.0),
+            steps=40 if fast else 120,
+            backend=args.backend or "jax_sparse"),
         "scaling_beyond": lambda: bench_scaling.run(
             d_values=(10_000, 100_000) if fast else
             (10_000, 100_000, 400_000, 800_000),
@@ -93,7 +102,7 @@ def main():
                           if k.startswith("pass") or k.endswith("gt1")}
                 keys = [k for k in ("flops_reduction_total", "speedup_alg2+4",
                                     "accuracy_pct", "pops_over_nnz_ratio",
-                                    "final_gap_rel_diff") if k in row]
+                                    "final_gap_rel_diff", "sweep_speedup") if k in row]
                 kv = {k: row[k] for k in keys}
                 for eps_k in ("eps_1.0", "eps_0.1"):
                     if eps_k in row:

@@ -10,7 +10,16 @@ Backends (``available_backends()``): ``dense`` (Alg 1), ``jax_dense`` (Alg 2,
 pure-jnp device scan), ``host_sparse`` (Alg 2, faithful host loop),
 ``jax_sparse`` (Alg 2 through the Pallas kernels).  New backends register via
 ``register``.
+
+Sweeps — many (λ, ε) problems over one design matrix — go through
+``solve_many``/``grid`` (solvers.batched): compatible ``jax_sparse`` configs
+run as one jitted vmapped scan, everything else drains sequentially on
+shared coerced data:
+
+    results = solve_many(X, y, grid(lam=(10., 30.), epsilon=(0.1, 1.0),
+                                    backend="jax_sparse", queue="bsls"))
 """
+from repro.core.solvers.batched import grid, solve_many  # noqa: F401
 from repro.core.solvers.config import FWConfig, FWResult  # noqa: F401
 from repro.core.solvers.registry import (QUEUE_ALIASES, Backend,  # noqa: F401
                                          available_backends, backend_doc,

@@ -1,0 +1,172 @@
+"""Batched multi-problem solving — vmapped λ/ε sweeps (DESIGN.md §6).
+
+Real deployments never fit one (λ, ε) problem: they sweep regularization ×
+privacy grids over the *same* design matrix.  Run sequentially, every problem
+re-pays the O(NS) setup (data coercion, ȳ/α₀ spmv sweeps) and its own chain
+of kernel launches.  ``solve_many`` amortizes all of it:
+
+    from repro.core.solvers import FWConfig, grid, solve_many
+    configs = grid(FWConfig(backend="jax_sparse", steps=500, queue="bsls"),
+                   lam=(10.0, 30.0, 50.0), epsilon=(0.1, 1.0))
+    results = solve_many(X, y, configs)        # list[FWResult], input order
+
+Mechanics:
+
+  * configs are bucketed into **sweep groups** — same backend / steps /
+    resolved queue / loss / interpret flag (everything that shapes the
+    compiled program); λ, ε, δ and seed may vary freely inside a group;
+  * ``X`` is coerced **once per data layout**, not once per config;
+  * a ``jax_sparse`` group runs as a single jitted ``vmap`` of ``fw_scan``
+    over stacked (λ, EM-scale, PRNG-key) triples — the whole sweep is one
+    XLA program through the spmv / coord_update / bsls_draw kernels, with
+    the config-independent ``fw_setup`` state computed once and broadcast;
+  * every other backend (and singleton groups) drains through the normal
+    per-config adapter on the pre-coerced data — same results, no compile
+    blow-up for host loops that would not benefit.
+
+Parity is structural, not approximate: the batched path calls the *same*
+``fw_scan`` the sequential backend closes over, with the per-config scalars
+traced instead of constant — tests assert step-for-step identical coordinate
+sequences on the same keys.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.solvers.config import FWConfig, FWResult
+from repro.core.solvers.registry import get_backend, resolve_queue
+
+# FWConfig fields that must agree within one vmapped sweep group: they are
+# jit-static (shape the compiled scan) or flip a Python-level branch.  The
+# complementary set — lam / epsilon / delta / seed — is what a group stacks.
+GROUP_FIELDS = ("backend", "steps", "queue", "loss", "selection", "interpret")
+
+
+def grid(base: FWConfig | None = None, **axes) -> Tuple[FWConfig, ...]:
+    """Cartesian product of FWConfig axes, for ``solve_many``.
+
+    Each keyword is an FWConfig field; iterable values become sweep axes
+    (crossed in the order given, last axis fastest), scalars are applied to
+    every point::
+
+        grid(lam=(10, 30), epsilon=(0.1, 1.0), backend="jax_sparse",
+             queue="bsls", steps=200)   # -> 4 configs
+
+    Strings are scalars, never axes.
+    """
+    base = base or FWConfig()
+    fixed = {k: v for k, v in axes.items()
+             if isinstance(v, str) or not isinstance(v, Iterable)}
+    sweep = {k: tuple(v) for k, v in axes.items() if k not in fixed}
+    unknown = set(axes) - {f.name for f in dataclasses.fields(FWConfig)}
+    if unknown:
+        raise ValueError(f"unknown FWConfig field(s): {', '.join(sorted(unknown))}")
+    base = dataclasses.replace(base, **fixed)
+    if not sweep:
+        return (base,)
+    names = tuple(sweep)
+    return tuple(
+        dataclasses.replace(base, **dict(zip(names, point)))
+        for point in itertools.product(*(sweep[k] for k in names)))
+
+
+def group_key(config: FWConfig) -> Tuple:
+    """Sweep-group bucket of a config (queue already resolved to native)."""
+    return tuple(getattr(config, f) for f in GROUP_FIELDS)
+
+
+# ---------------------------------------------------------------------------
+# the vmapped jax_sparse sweep
+# ---------------------------------------------------------------------------
+
+
+def _sweep_scan(pcsr, pcsc, y, lams, em_scales, keys,
+                *, steps, loss, private, fused, interpret):
+    """One compiled program for a whole sweep group: shared setup, vmapped
+    T-step scan.  ``lams``/``em_scales``/``keys`` are stacked per-config."""
+    from repro.core.solvers.jax_sparse import fw_scan, fw_setup
+    vbar0, qbar0, alpha0 = fw_setup(pcsr, y, loss=loss, interpret=interpret)
+
+    def one(lam, em_scale, key):
+        return fw_scan(pcsr, pcsc, vbar0, qbar0, alpha0, lam, em_scale, key,
+                       steps=steps, loss=loss, private=private, fused=fused,
+                       interpret=interpret)
+
+    return jax.vmap(one)(lams, em_scales, keys)
+
+
+_sweep_scan_jit = jax.jit(
+    _sweep_scan,
+    static_argnames=("steps", "loss", "private", "fused", "interpret"))
+
+
+def _solve_jax_sparse_group(
+    data, y, configs: Sequence[FWConfig]
+) -> List[FWResult]:
+    """Run a compatible config group as one vmap-over-configs lax.scan."""
+    from repro.core.solvers.jax_sparse import em_scale_for
+    pcsr, pcsc = data
+    c0 = configs[0]
+    private = c0.queue == "two_level"
+    fused = c0.loss == "logistic"
+    n = pcsr.shape[0]
+    dtype = pcsr.values.dtype
+    lams = jnp.asarray([c.lam for c in configs], dtype)
+    em_scales = jnp.asarray([em_scale_for(c, n) for c in configs], dtype)
+    keys = jnp.stack([jax.random.PRNGKey(c.seed) for c in configs])
+    w, gaps, coords = _sweep_scan_jit(
+        pcsr, pcsc, jnp.asarray(y, jnp.float32), lams, em_scales, keys,
+        steps=c0.steps, loss=c0.loss, private=private, fused=fused,
+        interpret=c0.interpret)
+    return [FWResult(w=w[i], gaps=gaps[i], coords=coords[i],
+                     losses=jnp.zeros_like(gaps[i]))
+            for i in range(len(configs))]
+
+
+# ---------------------------------------------------------------------------
+# solve_many
+# ---------------------------------------------------------------------------
+
+
+def solve_many(X, y, configs: Sequence[FWConfig]) -> List[FWResult]:
+    """Solve many FW problems over one (X, y); results in input order.
+
+    Configs are grouped by ``GROUP_FIELDS`` (after queue resolution); each
+    ``jax_sparse`` group of ≥ 2 runs as a single jitted vmapped scan, other
+    groups fall back to the sequential per-config backend — in both cases the
+    data coercion is hoisted and shared across the whole call.
+    """
+    configs = list(configs)
+    if not configs:
+        return []
+    resolved = []
+    for c in configs:
+        backend = get_backend(c.backend)
+        resolved.append((backend, resolve_queue(backend, c)))
+
+    prepared: Dict[str, object] = {}  # data layout -> coerced X (once each)
+    for backend, _ in resolved:
+        if backend.data_format not in prepared:
+            prepared[backend.data_format] = backend.prepare(X)
+
+    groups: Dict[Tuple, List[int]] = {}
+    for i, (_, cfg) in enumerate(resolved):
+        groups.setdefault(group_key(cfg), []).append(i)
+
+    results: List[FWResult | None] = [None] * len(configs)
+    for members in groups.values():
+        backend, _ = resolved[members[0]]
+        data = prepared[backend.data_format]
+        member_cfgs = [resolved[i][1] for i in members]
+        if backend.name == "jax_sparse" and len(members) > 1:
+            out = _solve_jax_sparse_group(data, y, member_cfgs)
+        else:
+            out = [backend.fn(data, y, cfg) for cfg in member_cfgs]
+        for i, res in zip(members, out):
+            results[i] = res
+    return results  # type: ignore[return-value]

@@ -24,13 +24,25 @@ interpret mode (``config.interpret=True``, the default); on TPU pass
 State representation (w_m-rescaling) is identical to ``fw_sparse``/``fw_jax``
 — see DESIGN.md §2 — so the non-private path takes the *same steps* as both,
 which the cross-backend parity test asserts.
+
+The module is factored for batched sweeps (DESIGN.md §6): ``fw_setup`` builds
+the config-independent state (ȳ, v̄₀, q̄₀, α₀ — one O(nnz) pass shared by
+every (λ, ε) problem on the same design matrix) and ``fw_scan`` runs the
+T-step loop with λ, the EM scale and the PRNG key as *traced* scalars.
+``solvers.batched`` vmaps ``fw_scan`` over stacked per-config scalars; the
+sequential ``jax_sparse_fw`` below closes over the same code with Python
+constants, so batched and sequential runs are the same state machine
+step-for-step.
 """
 from __future__ import annotations
+
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.dp.accountant import per_step_epsilon
+from repro.core.losses import get_loss
 from repro.core.samplers.bsls_jax import tl_init, tl_update
 from repro.core.samplers.group_argmax import ga_get_next, ga_init, ga_update
 from repro.core.solvers.config import FWConfig, FWResult
@@ -41,32 +53,44 @@ from repro.kernels.coord_update.ref import coord_update_ref
 from repro.kernels.spmv.ops import ell_rmatvec
 
 
-def jax_sparse_fw(
-    pcsr: PaddedCSR, pcsc: PaddedCSC, y: jnp.ndarray, config: FWConfig
-) -> FWResult:
-    n, d = pcsr.shape
-    lam = config.lam
-    loss = config.loss_fn()
-    h = loss.split_grad
-    interp = config.interpret
-    private = config.queue == "two_level"
-    # The fused kernel hardwires logistic h = σ; other losses fall back to the
-    # jnp oracle (same math, unfused).
-    fused = config.loss == "logistic"
-    if private:
-        eps_step = per_step_epsilon(config.epsilon, config.delta, config.steps)
-        em_scale = eps_step * n / (2.0 * loss.lipschitz)
-    else:
-        em_scale = 1.0  # priorities are raw |α|
+def fw_setup(
+    pcsr: PaddedCSR, y: jnp.ndarray, *, loss: str, interpret: bool
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Config-independent solve state: (v̄₀, q̄₀, α₀) via the spmv kernel.
 
+    Depends only on (X, y, loss) — a λ/ε sweep over one design matrix
+    computes this once and shares it across every problem in the batch.
+    """
+    n = pcsr.shape[0]
     dtype = pcsr.values.dtype
-    inv_n = 1.0 / n
-
-    # ---- setup: ȳ and the w=0 gradient, via the spmv kernel -----------------
-    ybar = ell_rmatvec(pcsr, y, interpret=interp) / n
+    h = get_loss(loss).split_grad
+    ybar = ell_rmatvec(pcsr, y, interpret=interpret) / n
     vbar0 = jnp.zeros(n, dtype)
     qbar0 = h(vbar0)
-    alpha0 = ell_rmatvec(pcsr, qbar0, interpret=interp) / n - ybar
+    alpha0 = ell_rmatvec(pcsr, qbar0, interpret=interpret) / n - ybar
+    return vbar0, qbar0, alpha0
+
+
+def fw_scan(
+    pcsr: PaddedCSR, pcsc: PaddedCSC,
+    vbar0: jnp.ndarray, qbar0: jnp.ndarray, alpha0: jnp.ndarray,
+    lam, em_scale, key: jax.Array,
+    *, steps: int, loss: str, private: bool, fused: bool, interpret: bool,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """T Frank-Wolfe iterations; returns (w, gaps, coords).
+
+    ``lam`` (L1 radius), ``em_scale`` (exponential-mechanism log-weight
+    scale; 1.0 when non-private) and ``key`` may be traced scalars — this is
+    the vmap axis of ``solvers.batched``.  Everything shape- or
+    branch-affecting (``steps``/``private``/``fused``/``interpret``) is
+    static, which is exactly what makes a sweep group batchable.
+    """
+    n, d = pcsr.shape
+    h = get_loss(loss).split_grad
+    dtype = pcsr.values.dtype
+    inv_n = 1.0 / n
+    lam = jnp.asarray(lam, dtype)
+    em_scale = jnp.asarray(em_scale, dtype)
 
     if private:
         sampler0 = tl_init(jnp.abs(alpha0) * em_scale)
@@ -78,7 +102,7 @@ def jax_sparse_fw(
         key, sel_key = jax.random.split(key)
         # ---- line 15: select coordinate -------------------------------------
         if private:
-            j = two_level_draw(sampler.c, sampler.v, sel_key, interpret=interp)
+            j = two_level_draw(sampler.c, sampler.v, sel_key, interpret=interpret)
             sampler_after_sel = sampler
         else:
             j, sampler_after_sel = ga_get_next(sampler)
@@ -100,7 +124,7 @@ def jax_sparse_fw(
             vbar, qbar, alpha, g_delta = coord_update(
                 vbar, qbar, alpha, w, rows, xvals, mask, row_idx, row_val,
                 eta=eta, d_tilde=d_tilde, w_m=w_m, inv_n=inv_n,
-                interpret=interp)
+                interpret=interpret)
         else:
             vbar, qbar, alpha, g_delta = coord_update_ref(
                 vbar, qbar, alpha, w, rows, xvals, mask, row_idx, row_val,
@@ -117,12 +141,41 @@ def jax_sparse_fw(
 
     carry0 = (
         jnp.zeros(d, dtype), jnp.asarray(1.0, dtype), jnp.asarray(0.0, dtype),
-        vbar0, qbar0, alpha0, sampler0, jax.random.PRNGKey(config.seed),
+        vbar0, qbar0, alpha0, sampler0, key,
     )
-    ts = jnp.arange(1, config.steps + 1, dtype=dtype)
+    ts = jnp.arange(1, steps + 1, dtype=dtype)
     (w, w_m, *_), (gaps, coords) = jax.lax.scan(step, carry0, ts)
-    w_true = w * w_m
-    return FWResult(w=w_true, gaps=gaps, coords=coords,
+    return w * w_m, gaps, coords
+
+
+def em_scale_for(config: FWConfig, n_rows: int) -> float:
+    """EM log-weight scale ε'·N/(2L) when the (native) queue is the DP
+    two-level sampler; 1.0 otherwise (priorities are then raw |α|)."""
+    if config.queue != "two_level":
+        return 1.0
+    loss = config.loss_fn()
+    eps_step = per_step_epsilon(config.epsilon, config.delta, config.steps)
+    return eps_step * n_rows / (2.0 * loss.lipschitz)
+
+
+def jax_sparse_fw(
+    pcsr: PaddedCSR, pcsc: PaddedCSC, y: jnp.ndarray, config: FWConfig
+) -> FWResult:
+    n, _ = pcsr.shape
+    private = config.queue == "two_level"
+    # The fused kernel hardwires logistic h = σ; other losses fall back to the
+    # jnp oracle (same math, unfused).
+    fused = config.loss == "logistic"
+    em_scale = em_scale_for(config, n)
+
+    vbar0, qbar0, alpha0 = fw_setup(
+        pcsr, y, loss=config.loss, interpret=config.interpret)
+    w, gaps, coords = fw_scan(
+        pcsr, pcsc, vbar0, qbar0, alpha0,
+        config.lam, em_scale, jax.random.PRNGKey(config.seed),
+        steps=config.steps, loss=config.loss, private=private, fused=fused,
+        interpret=config.interpret)
+    return FWResult(w=w, gaps=gaps, coords=coords,
                     losses=jnp.zeros_like(gaps))
 
 

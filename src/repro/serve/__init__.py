@@ -1,1 +1,3 @@
 from repro.serve.engine import ServeConfig, ServingEngine  # noqa: F401
+from repro.serve.fit_service import (FitRequest, FitService,  # noqa: F401
+                                     FitServiceConfig)

@@ -1,0 +1,224 @@
+"""DP-LASSO fit service: slot-based request/response engine over solve_many.
+
+The LM side of the repo serves tokens through ``serve/engine.py``; this is
+the same lifecycle — **submit → admit → batch → drain** — applied to the
+paper's workload: multi-tenant DP-LASSO fit requests against one resident
+design matrix (the hyperparameter-sweep traffic pattern of Khanna et al.).
+
+  * **submit** queues a ``FitRequest`` (tenant + FWConfig);
+  * **admit** resolves the request's queue, and for private queues charges
+    the tenant's ``PrivacyAccountant`` *before* any compute — a request
+    whose tenant budget (or tenant) is missing/exhausted is refused, never
+    run, and never charged.  The charge is denominated in the accountant's
+    own step currency: a request running T_req selections at its own
+    (ε_req, δ) consumes ``ceil(T_req · (ε'_req/ε'_acct)²)`` tenant steps
+    (= ``T_acct · (ε_req/ε_acct)²`` at matching δ), so under advanced
+    composition the pool bounds the tenant's *actual* ε loss no matter what
+    per-request (ε, T) mix arrives; requests with a weaker δ than the
+    accountant's are refused outright;
+  * **batch** packs admitted requests into sweep groups (``batched.group_key``)
+    and chops each group to at most ``slots`` configs — the compiled-batch
+    width, directly analogous to the serving engine's decode-slot count;
+  * **drain** runs each slot-batch through ``solve_many`` (one vmapped scan
+    per ``jax_sparse`` batch, data coerced once at service construction) and
+    stamps per-request latency.
+
+Everything is synchronous single-controller, like ``ServingEngine``: the
+host loop is the scheduler, each drained batch is one XLA program.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Dict, List, Mapping, Optional
+
+from repro.core.dp.accountant import PrivacyAccountant, per_step_epsilon
+from repro.core.solvers.batched import group_key, solve_many
+from repro.core.solvers.config import FWConfig, FWResult
+from repro.core.solvers.registry import get_backend, resolve_queue
+
+# Native queue/selection names that consume privacy budget (the DP
+# exponential mechanism and report-noisy-max realizations, per backend).
+PRIVATE_QUEUES = frozenset({"bsls", "two_level", "gumbel", "noisy_max"})
+
+
+@dataclasses.dataclass
+class FitRequest:
+    uid: int
+    tenant: str
+    config: FWConfig
+    # filled by the service
+    status: str = "queued"            # queued | done | rejected | failed
+    reason: str = ""                  # set when rejected/failed
+    result: Optional[FWResult] = None
+    submitted_at: float = 0.0
+    finished_at: float = 0.0
+
+    @property
+    def latency_s(self) -> float:
+        return max(self.finished_at - self.submitted_at, 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class FitServiceConfig:
+    slots: int = 8                    # max configs per compiled batch
+
+
+class FitService:
+    """Multi-tenant DP-LASSO fitting over one resident (X, y) dataset."""
+
+    def __init__(self, X, y, accountants: Mapping[str, PrivacyAccountant],
+                 config: FitServiceConfig = FitServiceConfig()):
+        if config.slots < 1:
+            raise ValueError("slots must be >= 1")
+        # Coerce to the padded device layout once at construction: identity
+        # for the vmapped jax backends, O(nnz) rebuild for host fallbacks —
+        # no request ever re-pays the dense→sparse conversion.
+        from repro.core.solvers.registry import as_padded
+        self.X = as_padded(X)
+        self.y = y
+        self.accountants: Dict[str, PrivacyAccountant] = dict(accountants)
+        self.cfg = config
+        self.queue: List[FitRequest] = []
+        self.finished: List[FitRequest] = []
+        self.batches_run = 0
+        self.batch_sizes: List[int] = []
+        self.serving_s = 0.0              # wall-clock actually spent draining
+
+    # ------------------------------------------------------------------ public
+    def submit(self, req: FitRequest) -> None:
+        req.submitted_at = time.time()
+        req.status = "queued"
+        self.queue.append(req)
+
+    def run(self) -> List[FitRequest]:
+        """Drain the queue; returns every request (done/rejected/failed)."""
+        admitted = [r for r in self.queue if self._admit(r)]
+        rejected = [r for r in self.queue if r.status == "rejected"]
+        self.queue = []
+        for batch in self._pack(admitted):
+            self._drain(batch)
+        done = sorted(admitted + rejected, key=lambda r: r.uid)
+        self.finished.extend(done)
+        return done
+
+    def stats(self) -> dict:
+        """Per-request latency + throughput + per-tenant accountant state."""
+        done = [r for r in self.finished if r.status == "done"]
+        lat = sorted(r.latency_s for r in done)
+        return {
+            "requests": len(self.finished),
+            "done": len(done),
+            "rejected": sum(r.status == "rejected" for r in self.finished),
+            "failed": sum(r.status == "failed" for r in self.finished),
+            "batches": self.batches_run,
+            "batch_sizes": list(self.batch_sizes),
+            "latency_s": {
+                "p50": lat[len(lat) // 2] if lat else 0.0,
+                "max": lat[-1] if lat else 0.0,
+            },
+            # over drain time only — idle wall-clock between run() calls is
+            # not serving time
+            "throughput_fits_per_s": (
+                len(done) / self.serving_s if self.serving_s > 0 else 0.0),
+            "tenants": {
+                t: {"spent_steps": a.spent_steps,
+                    "remaining_steps": a.remaining_steps,
+                    "spent_epsilon": a.spent_epsilon()}
+                for t, a in self.accountants.items()},
+        }
+
+    # --------------------------------------------------------------- internals
+    def _admit(self, req: FitRequest) -> bool:
+        """Validate the config, resolve the queue, and charge the tenant for
+        private fits.  Refusals leave the accountant untouched (spend is
+        atomic — it raises before mutating), and a request is only charged
+        once it can no longer fail validation."""
+        try:
+            backend = get_backend(req.config.backend)
+            resolved = resolve_queue(backend, req.config)
+            resolved.loss_fn()                       # unknown loss -> KeyError
+        except (ValueError, KeyError) as e:
+            return self._reject(req, str(e))
+        req.config = resolved
+        # effective selection rule: the dense adapter runs `queue` when one
+        # was given, falling back to `selection` only for queue=None
+        if resolved.queue is not None:
+            effective = resolved.queue
+        elif backend.name == "dense":
+            effective = resolved.selection
+        else:
+            effective = None
+        if effective in PRIVATE_QUEUES:
+            acct = self.accountants.get(req.tenant)
+            if acct is None:
+                return self._reject(
+                    req, f"tenant {req.tenant!r} has no privacy budget")
+            try:
+                # bad (ε, δ, T) raise here, BEFORE the budget is touched —
+                # a config the solver would choke on must never be charged
+                acct.spend(self._charged_steps(acct, resolved))
+            except (RuntimeError, ValueError) as e:
+                return self._reject(req, str(e))
+        return True
+
+    @staticmethod
+    def _charged_steps(acct: PrivacyAccountant, cfg: FWConfig) -> int:
+        """Tenant steps consumed by a fit running T_req selections at its own
+        per-step rate ε'_req = ε_req/√(8·T_req·log(1/δ)).
+
+        The accountant's pool is T_acct steps at rate ε'_acct; under advanced
+        composition ε grows as ε'·√k, so equal-ε-budget accounting charges
+        ``T_req · (ε'_req/ε'_acct)²`` pool steps (the 1e-9 absorbs float slop
+        before ceil).  A request with δ weaker than the accountant's is not
+        expressible in its currency and is refused.
+        """
+        if cfg.delta > acct.delta * (1.0 + 1e-12):
+            raise ValueError(
+                f"request δ={cfg.delta:g} is weaker than the tenant "
+                f"accountant's δ={acct.delta:g}")
+        eps_req_step = per_step_epsilon(cfg.epsilon, cfg.delta, cfg.steps)
+        ratio = eps_req_step / acct.per_step
+        return max(1, math.ceil(cfg.steps * ratio * ratio - 1e-9))
+
+    @staticmethod
+    def _reject(req: FitRequest, reason: str) -> bool:
+        req.status, req.reason = "rejected", reason
+        req.finished_at = time.time()
+        return False
+
+    def _pack(self, admitted: List[FitRequest]) -> List[List[FitRequest]]:
+        """Group compatible configs, then chop each group to ``slots``."""
+        groups: Dict[tuple, List[FitRequest]] = {}
+        for r in admitted:
+            groups.setdefault(group_key(r.config), []).append(r)
+        batches = []
+        for members in groups.values():
+            for i in range(0, len(members), self.cfg.slots):
+                batches.append(members[i:i + self.cfg.slots])
+        return batches
+
+    def _drain(self, batch: List[FitRequest]) -> None:
+        t0 = time.time()
+        try:
+            results = solve_many(self.X, self.y, [r.config for r in batch])
+        except Exception as e:  # noqa: BLE001 — one bad batch must not
+            # strand the rest of the queue.  The charged budget is NOT
+            # refunded: admission cannot prove how far the mechanism got
+            # before failing, and DP accounting must stay conservative.
+            now = time.time()
+            for req in batch:
+                req.status = "failed"
+                req.reason = f"solver error: {e}"
+                req.finished_at = now
+            self.serving_s += now - t0
+            return
+        now = time.time()
+        for req, res in zip(batch, results):
+            req.result = res
+            req.status = "done"
+            req.finished_at = now
+        self.serving_s += now - t0
+        self.batches_run += 1
+        self.batch_sizes.append(len(batch))

@@ -51,6 +51,53 @@ def test_accountant_serialization_roundtrip():
     assert acct2.remaining_steps == 30
 
 
+def test_accountant_lifecycle_restore_then_overspend_raises():
+    """Checkpoint-restart lifecycle: a restored accountant keeps enforcing
+    the *original* budget — spending past it raises, and the failed spend
+    mutates nothing (refusals must be charge-free)."""
+    acct = PrivacyAccountant(epsilon=1.0, delta=1e-6, total_steps=100)
+    acct.spend(60)
+    restored = PrivacyAccountant.from_state(acct.to_state())
+    assert restored.per_step == pytest.approx(acct.per_step)
+    assert restored.spent_epsilon() == pytest.approx(acct.spent_epsilon())
+    restored.spend(40)                      # exactly exhausts the budget
+    with pytest.raises(RuntimeError, match="privacy budget exhausted"):
+        restored.spend(1)
+    assert restored.spent_steps == 100      # failed spend left state intact
+    assert restored.remaining_steps == 0
+    # a second restore of the exhausted state still refuses
+    again = PrivacyAccountant.from_state(restored.to_state())
+    with pytest.raises(RuntimeError):
+        again.spend(1)
+    assert again.spent_epsilon() == pytest.approx(1.0)
+
+
+def test_fit_service_refuses_exhausted_tenant(tiny_problem):
+    """FitService admission control: a DP fit request whose tenant budget
+    cannot cover its T selection steps is rejected, never run, never
+    charged; the tenant's other (in-budget) request still completes."""
+    from repro.core.solvers import FWConfig
+    from repro.serve import FitRequest, FitService
+
+    X, y, _ = tiny_problem
+    svc = FitService(X, y, accountants={
+        "t0": PrivacyAccountant(epsilon=1.0, delta=1e-6, total_steps=10)})
+    svc.submit(FitRequest(uid=0, tenant="t0", config=FWConfig(
+        backend="jax_sparse", lam=8.0, steps=10, queue="bsls")))
+    svc.submit(FitRequest(uid=1, tenant="t0", config=FWConfig(
+        backend="jax_sparse", lam=8.0, steps=10, queue="bsls")))
+    done = {r.uid: r for r in svc.run()}
+    assert done[0].status == "done" and done[0].result is not None
+    assert done[1].status == "rejected" and done[1].result is None
+    assert "budget exhausted" in done[1].reason
+    assert svc.accountants["t0"].spent_steps == 10  # only uid 0 charged
+    # a tenant with no accountant at all is refused for private fits
+    svc.submit(FitRequest(uid=2, tenant="ghost", config=FWConfig(
+        backend="jax_sparse", lam=8.0, steps=5, queue="bsls")))
+    (r2,) = svc.run()
+    assert r2.status == "rejected" and "no privacy budget" in r2.reason
+
+
 def test_gumbel_argmax_samples_em_law():
     """Gumbel-max over EM logits must match the exponential mechanism's
     softmax law (chi-square)."""

@@ -1,0 +1,217 @@
+"""FitService end-to-end: submit → admit → batch → drain over solve_many.
+
+Acceptance scenario: ≥16 fit requests across ≥2 tenants (DP and non-private
+mixed) drain to completion in slot-packed vmapped batches; per-tenant
+accountant state is exact; an over-budget request is refused without being
+charged; responses match what sequential solve() would have produced.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.dp.accountant import PrivacyAccountant
+from repro.core.solvers import FWConfig, grid, solve
+from repro.serve import FitRequest, FitService, FitServiceConfig
+
+
+@pytest.fixture(scope="module")
+def service_problem():
+    from repro.data.synthetic import make_sparse_classification
+    X, y, _ = make_sparse_classification(
+        n=120, d=500, nnz_per_row=10, informative=12, seed=21)
+    return X, y
+
+
+STEPS = 15
+
+# Charging is ε²-equivalent (see FitService._charged_steps): a request at
+# (ε_r, δ, T_r) consumes T_acct·(ε_r/ε_acct)² of the tenant's step pool.
+#   acme   (ε=6, 144 steps): ε=0.5 fits cost 144/144 = 1, ε=2 fits cost 16.
+#   globex (ε=1, 45 steps):  ε=0.5 fits cost 45/4 → 12 (ceil).
+
+
+def _fresh_service(X, y, slots=4):
+    return FitService(X, y, accountants={
+        # affords its 4 ε=0.5 fits (4×1) + 4 ε=2.0 fits (4×16) = 68 ≤ 144
+        "acme": PrivacyAccountant(epsilon=6.0, delta=1e-6, total_steps=144),
+        # affords 3 ε=0.5 fits (3×12 = 36 ≤ 45); a 4th (48 > 45) is refused
+        "globex": PrivacyAccountant(epsilon=1.0, delta=1e-6, total_steps=45),
+    }, config=FitServiceConfig(slots=slots))
+
+
+def test_fit_service_end_to_end(service_problem):
+    X, y = service_problem
+    svc = _fresh_service(X, y)
+    dp_grid = grid(FWConfig(backend="jax_sparse", steps=STEPS, queue="bsls",
+                            delta=1e-6),
+                   lam=(4.0, 8.0, 16.0, 32.0), epsilon=(0.5, 2.0))
+    uid = 0
+    # 8 DP fits for acme (all in budget: 4×1 + 4×16 = 68 of 144)
+    for cfg in dp_grid:
+        svc.submit(FitRequest(uid=uid, tenant="acme", config=cfg)); uid += 1
+    # 4 ε=0.5 DP fits for globex (12 each; only 3 fit -> exactly one refusal)
+    for cfg in [c for c in dp_grid if c.epsilon == 0.5]:
+        svc.submit(FitRequest(uid=uid, tenant="globex", config=cfg)); uid += 1
+    # 4 non-private fits (no budget consumed, any tenant)
+    for lam in (4.0, 8.0, 16.0, 32.0):
+        svc.submit(FitRequest(uid=uid, tenant="globex", config=FWConfig(
+            backend="jax_sparse", lam=lam, steps=STEPS))); uid += 1
+    assert uid == 16
+
+    done = svc.run()
+    assert [r.uid for r in done] == list(range(16))
+    by_status = {"done": [], "rejected": []}
+    for r in done:
+        by_status[r.status].append(r)
+    assert len(by_status["rejected"]) == 1
+    rej = by_status["rejected"][0]
+    assert rej.tenant == "globex" and rej.uid == 11  # 4th globex DP fit
+    assert "budget exhausted" in rej.reason and rej.result is None
+    assert len(by_status["done"]) == 15
+    for r in by_status["done"]:
+        w = np.asarray(r.result.w)
+        assert np.isfinite(w).all()
+        assert np.asarray(r.result.gaps).shape == (STEPS,)
+        assert r.finished_at >= r.submitted_at
+
+    # per-tenant accounting is exact in ε²-equivalent steps; non-private
+    # fits are free.  Composed ε spend: ε_acct·sqrt(spent/total).
+    assert svc.accountants["acme"].spent_steps == 4 * 1 + 4 * 16
+    assert svc.accountants["acme"].remaining_steps == 144 - 68
+    assert svc.accountants["acme"].spent_epsilon() == pytest.approx(
+        6.0 * math.sqrt(68 / 144))
+    assert svc.accountants["globex"].spent_steps == 3 * 12
+    assert svc.accountants["globex"].spent_epsilon() == pytest.approx(
+        1.0 * math.sqrt(36 / 45))
+
+    stats = svc.stats()
+    assert stats["requests"] == 16 and stats["done"] == 15
+    assert stats["rejected"] == 1
+    assert stats["throughput_fits_per_s"] > 0
+    assert stats["latency_s"]["max"] >= stats["latency_s"]["p50"] > 0
+    # slot packing: no batch exceeds the compiled width
+    assert stats["batches"] == len(stats["batch_sizes"])
+    assert all(1 <= b <= 4 for b in stats["batch_sizes"])
+    assert sum(stats["batch_sizes"]) == 15
+
+
+def test_fit_service_matches_sequential_solve(service_problem):
+    """A drained response carries the same FWResult sequential solve()
+    produces for that config — serving adds batching, not different math."""
+    X, y = service_problem
+    svc = _fresh_service(X, y)
+    cfgs = grid(FWConfig(backend="jax_sparse", steps=STEPS, queue="bsls",
+                         epsilon=1.0), lam=(4.0, 8.0, 16.0))
+    for i, cfg in enumerate(cfgs):
+        svc.submit(FitRequest(uid=i, tenant="acme", config=cfg))
+    done = svc.run()
+    for r, cfg in zip(done, cfgs):
+        ref = solve(X, y, cfg)
+        np.testing.assert_array_equal(np.asarray(r.result.coords),
+                                      np.asarray(ref.coords))
+        np.testing.assert_allclose(np.asarray(r.result.w),
+                                   np.asarray(ref.w), atol=1e-4)
+
+
+def test_charged_steps_is_epsilon_squared_equivalent():
+    """The tenant pool is a real ε budget: charges scale with (ε_r/ε_acct)²
+    regardless of how many solver steps the request spreads its ε over, a
+    hotter-than-budget request costs more than the whole pool, and a weaker
+    δ is not expressible in the accountant's currency."""
+    acct = PrivacyAccountant(epsilon=2.0, delta=1e-6, total_steps=64)
+    charge = FitService._charged_steps
+    # same ε_r at different T_req → same charge (= T_acct·(ε_r/ε_acct)²)
+    assert charge(acct, FWConfig(epsilon=0.5, delta=1e-6, steps=10)) == 4
+    assert charge(acct, FWConfig(epsilon=0.5, delta=1e-6, steps=1000)) == 4
+    # running at exactly the accountant's own (ε, δ, T) costs exactly T
+    assert charge(acct, FWConfig(epsilon=2.0, delta=1e-6, steps=64)) == 64
+    # a hotter request costs more than the whole pool → unaffordable
+    assert charge(acct, FWConfig(epsilon=4.0, delta=1e-6, steps=10)) == 256
+    # weaker δ than the pool accounts for is refused outright
+    with pytest.raises(ValueError, match="weaker than"):
+        charge(acct, FWConfig(epsilon=0.5, delta=1e-3, steps=10))
+
+
+def test_fit_service_dense_nonprivate_queue_not_charged(service_problem):
+    """backend='dense' with an explicit non-private queue overriding a
+    private selection runs argmax — and must not touch the budget."""
+    X, y = service_problem
+    svc = _fresh_service(X, y)
+    svc.submit(FitRequest(uid=0, tenant="acme", config=FWConfig(
+        backend="dense", steps=5, queue="argmax", selection="gumbel")))
+    (r,) = svc.run()
+    assert r.status == "done"
+    assert svc.accountants["acme"].spent_steps == 0
+    # without a queue, dense falls back to its selection rule → charged
+    svc.submit(FitRequest(uid=1, tenant="acme", config=FWConfig(
+        backend="dense", steps=5, selection="gumbel")))
+    (r2,) = svc.run()
+    assert r2.status == "done"
+    assert svc.accountants["acme"].spent_steps > 0
+
+
+def test_fit_service_rejects_bad_queue(service_problem):
+    X, y = service_problem
+    svc = _fresh_service(X, y)
+    svc.submit(FitRequest(uid=0, tenant="acme", config=FWConfig(
+        backend="jax_sparse", steps=5, queue="bogus")))
+    (r,) = svc.run()
+    assert r.status == "rejected" and "does not support queue" in r.reason
+    assert svc.accountants["acme"].spent_steps == 0
+
+
+def test_fit_service_drain_failure_does_not_strand_queue(service_problem, monkeypatch):
+    """A solver crash mid-drain fails only its own batch: other batches
+    still complete, and run() returns every request with a status."""
+    import repro.serve.fit_service as fs
+
+    X, y = service_problem
+    svc = _fresh_service(X, y, slots=2)
+    real_solve_many = fs.solve_many
+    calls = {"n": 0}
+
+    def flaky_solve_many(X, y, configs):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("injected solver crash")
+        return real_solve_many(X, y, configs)
+
+    monkeypatch.setattr(fs, "solve_many", flaky_solve_many)
+    for i, lam in enumerate((4.0, 8.0, 16.0, 32.0)):   # 2 batches of 2
+        svc.submit(FitRequest(uid=i, tenant="acme", config=FWConfig(
+            backend="jax_sparse", lam=lam, steps=5)))
+    done = svc.run()
+    statuses = [r.status for r in done]
+    assert statuses == ["failed", "failed", "done", "done"]
+    assert all("injected solver crash" in r.reason
+               for r in done if r.status == "failed")
+    assert svc.stats()["failed"] == 2 and svc.stats()["done"] == 2
+
+
+def test_fit_service_rejects_invalid_dp_params_before_charging(service_problem):
+    """ε ≤ 0 on a private fit is refused at admission — not charged, and
+    never reaches the solver where it would raise mid-drain."""
+    X, y = service_problem
+    svc = _fresh_service(X, y)
+    svc.submit(FitRequest(uid=0, tenant="acme", config=FWConfig(
+        backend="jax_sparse", steps=5, queue="bsls", epsilon=0.0)))
+    (r,) = svc.run()
+    assert r.status == "rejected"
+    assert svc.accountants["acme"].spent_steps == 0
+
+
+def test_fit_service_slot_width_one(service_problem):
+    """slots=1 degrades to sequential serving but still drains everything."""
+    X, y = service_problem
+    svc = _fresh_service(X, y, slots=1)
+    for i, cfg in enumerate(grid(
+            FWConfig(backend="jax_sparse", steps=STEPS), lam=(4.0, 8.0))):
+        svc.submit(FitRequest(uid=i, tenant="acme", config=cfg))
+    done = svc.run()
+    assert all(r.status == "done" for r in done)
+    assert svc.stats()["batch_sizes"] == [1, 1]
+    with pytest.raises(ValueError, match="slots"):
+        FitService(X, y, {}, dataclasses.replace(
+            FitServiceConfig(), slots=0))

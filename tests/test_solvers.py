@@ -14,7 +14,7 @@ import numpy as np
 import pytest
 
 from repro.core.solvers import (FWConfig, available_backends, get_backend,
-                                resolve_queue, solve)
+                                grid, resolve_queue, solve, solve_many)
 
 ALL_BACKENDS = ("dense", "jax_dense", "host_sparse", "jax_sparse")
 ALG2_BACKENDS = ("jax_dense", "host_sparse", "jax_sparse")
@@ -134,3 +134,146 @@ def test_solve_kwarg_overrides(dense_problem):
     X, y = dense_problem
     r = solve(X, y, backend="host_sparse", lam=6.0, steps=10)
     assert np.asarray(r.gaps).shape == (10,)
+
+
+# ---------------------------------------------------------------------------
+# QUEUE_ALIASES regression pin — a registry edit cannot silently retarget a
+# queue.  Every (backend × accepted alias) pair is written out literally; if
+# the table changes, this test must change with it, on purpose.
+# ---------------------------------------------------------------------------
+
+EXPECTED_QUEUE_RESOLUTION = {
+    "dense": {
+        "argmax": "argmax", "fib_heap": "argmax", "group_argmax": "argmax",
+        "noisy_max": "noisy_max",
+        "gumbel": "gumbel", "bsls": "gumbel", "two_level": "gumbel",
+    },
+    "host_sparse": {
+        "fib_heap": "fib_heap", "argmax": "argmax", "noisy_max": "noisy_max",
+        "bsls": "bsls", "group_argmax": "fib_heap", "two_level": "bsls",
+        "gumbel": "bsls",
+    },
+    "jax_dense": {
+        "two_level": "two_level", "group_argmax": "group_argmax",
+        "bsls": "two_level", "gumbel": "two_level",
+        "fib_heap": "group_argmax", "argmax": "group_argmax",
+    },
+    "jax_sparse": {
+        "two_level": "two_level", "group_argmax": "group_argmax",
+        "bsls": "two_level", "gumbel": "two_level",
+        "fib_heap": "group_argmax", "argmax": "group_argmax",
+    },
+}
+
+EXPECTED_DEFAULT_QUEUE = {"dense": None, "host_sparse": "fib_heap",
+                          "jax_dense": "group_argmax",
+                          "jax_sparse": "group_argmax"}
+
+
+@pytest.mark.parametrize("backend_name", sorted(EXPECTED_QUEUE_RESOLUTION))
+def test_queue_alias_table_pinned(backend_name):
+    backend = get_backend(backend_name)
+    expected = EXPECTED_QUEUE_RESOLUTION[backend_name]
+    # the accepted alias *set* is pinned too: a new/removed alias must show
+    # up here, not slip through resolution silently
+    assert set(backend.queues) == set(expected), backend_name
+    for alias, native in expected.items():
+        got = resolve_queue(backend, FWConfig(queue=alias)).queue
+        assert got == native, f"{backend_name}: {alias} -> {got} != {native}"
+    assert resolve_queue(backend, FWConfig(queue=None)).queue == \
+        EXPECTED_DEFAULT_QUEUE[backend_name]
+
+
+# ---------------------------------------------------------------------------
+# batched sweeps: solve_many / grid
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def sweep_problem():
+    from repro.data.synthetic import make_sparse_classification
+    X, y, _ = make_sparse_classification(
+        n=150, d=600, nnz_per_row=10, informative=15, seed=11)
+    return X, y
+
+
+def _assert_same_result(b, s, msg):
+    np.testing.assert_array_equal(np.asarray(b.coords), np.asarray(s.coords),
+                                  err_msg=f"{msg}: coords")
+    np.testing.assert_allclose(np.asarray(b.w), np.asarray(s.w), atol=1e-4,
+                               err_msg=f"{msg}: w")
+    np.testing.assert_allclose(np.asarray(b.gaps), np.asarray(s.gaps),
+                               atol=1e-4, err_msg=f"{msg}: gaps")
+
+
+def test_grid_cartesian_product():
+    cfgs = grid(FWConfig(backend="jax_sparse", steps=10),
+                lam=(1.0, 2.0, 3.0), epsilon=(0.1, 1.0), seed=7)
+    assert len(cfgs) == 6
+    assert [c.lam for c in cfgs] == [1.0, 1.0, 2.0, 2.0, 3.0, 3.0]
+    assert [c.epsilon for c in cfgs] == [0.1, 1.0] * 3
+    assert all(c.seed == 7 and c.steps == 10 for c in cfgs)
+    with pytest.raises(ValueError, match="unknown FWConfig field"):
+        grid(lambda_=(1.0,))
+    assert len(grid(lam=5.0)) == 1  # scalars only -> a single config
+
+
+def test_solve_many_private_sweep_matches_sequential(sweep_problem):
+    """Acceptance: a vmapped ≥8-config λ/ε jax_sparse sweep takes the same
+    steps as per-config sequential solve() on the same keys (1e-4)."""
+    X, y = sweep_problem
+    configs = grid(FWConfig(backend="jax_sparse", steps=30, queue="bsls",
+                            delta=1e-6),
+                   lam=(4.0, 8.0, 16.0, 32.0), epsilon=(0.5, 2.0))
+    assert len(configs) == 8
+    batched = solve_many(X, y, configs)
+    for i, cfg in enumerate(configs):
+        _assert_same_result(batched[i], solve(X, y, cfg), f"config {i} ({cfg.lam}, {cfg.epsilon})")
+
+
+def test_solve_many_nonprivate_sweep_matches_sequential(sweep_problem):
+    X, y = sweep_problem
+    configs = grid(FWConfig(backend="jax_sparse", steps=30),
+                   lam=(4.0, 8.0, 12.0))
+    batched = solve_many(X, y, configs)
+    for i, cfg in enumerate(configs):
+        _assert_same_result(batched[i], solve(X, y, cfg), f"lam={cfg.lam}")
+
+
+def test_solve_many_varied_seeds_use_distinct_keys(sweep_problem):
+    """Each config's PRNG stream is its own — identical configs with
+    different seeds must (generically) select different DP coordinates."""
+    X, y = sweep_problem
+    configs = grid(FWConfig(backend="jax_sparse", steps=25, queue="bsls",
+                            lam=8.0, epsilon=1.0), seed=(0, 1, 2, 3))
+    batched = solve_many(X, y, configs)
+    for i, cfg in enumerate(configs):
+        _assert_same_result(batched[i], solve(X, y, cfg), f"seed={cfg.seed}")
+    coord_seqs = {tuple(np.asarray(r.coords)) for r in batched}
+    assert len(coord_seqs) > 1
+
+
+def test_solve_many_mixed_backends_preserve_order(sweep_problem):
+    """Non-batchable backends drain through the sequential fallback; results
+    come back in submission order regardless of grouping."""
+    X, y = sweep_problem
+    configs = [FWConfig(backend="host_sparse", lam=8.0, steps=12),
+               FWConfig(backend="jax_sparse", lam=8.0, steps=12),
+               FWConfig(backend="jax_sparse", lam=4.0, steps=12),
+               FWConfig(backend="jax_dense", lam=8.0, steps=12)]
+    results = solve_many(X, y, configs)
+    assert len(results) == 4
+    for cfg, res in zip(configs, results):
+        _assert_same_result(res, solve(X, y, cfg), cfg.backend)
+    # host_sparse/jax_sparse/jax_dense agree on this state machine anyway:
+    _assert_same_result(results[0], results[1], "alg2 cross-check")
+
+
+def test_solve_many_empty_and_singleton(sweep_problem):
+    X, y = sweep_problem
+    assert solve_many(X, y, []) == []
+    one = solve_many(X, y, [FWConfig(backend="jax_sparse", lam=8.0, steps=10)])
+    assert len(one) == 1
+    _assert_same_result(
+        one[0], solve(X, y, FWConfig(backend="jax_sparse", lam=8.0, steps=10)),
+        "singleton")
