@@ -6,6 +6,7 @@
   Table 3  bench_speedup       DP wall-clock speedup (Alg 2+4, ablation)
   Table 4  bench_accuracy      accuracy/AUC/sparsity at ε = 0.1
   (sweeps) bench_sweep         sequential solve() vs batched solve_many()
+  (store)  bench_ingest        dataset-store ingest + cold/warm prepare
   §Roofline roofline_table     three-term model from dryrun_results.json
 
 ``python -m benchmarks.run [--fast] [--only NAME] [--backend B]`` — results
@@ -37,8 +38,8 @@ def main():
     args = ap.parse_args()
 
     from benchmarks import (bench_accuracy, bench_convergence, bench_flops,
-                            bench_heap_pops, bench_scaling, bench_speedup,
-                            bench_sweep, roofline_table)
+                            bench_heap_pops, bench_ingest, bench_scaling,
+                            bench_speedup, bench_sweep, roofline_table)
     from repro.core.solvers import available_backends
 
     if args.backend is not None and args.backend not in available_backends():
@@ -67,6 +68,11 @@ def main():
             datasets=("rcv1", "news20"),
             lams=(10.0, 20.0, 40.0, 80.0), epsilons=(0.5, 2.0),
             steps=40 if fast else 120,
+            backend=args.backend or "jax_sparse"),
+        "ingest": lambda: bench_ingest.run(
+            datasets=("rcv1_like",) if fast else
+            ("rcv1_like", "url_small_like"),
+            steps=30 if fast else 80,
             backend=args.backend or "jax_sparse"),
         "scaling_beyond": lambda: bench_scaling.run(
             d_values=(10_000, 100_000) if fast else
@@ -102,7 +108,8 @@ def main():
                           if k.startswith("pass") or k.endswith("gt1")}
                 keys = [k for k in ("flops_reduction_total", "speedup_alg2+4",
                                     "accuracy_pct", "pops_over_nnz_ratio",
-                                    "final_gap_rel_diff", "sweep_speedup") if k in row]
+                                    "final_gap_rel_diff", "sweep_speedup",
+                                    "ingest_s", "warm_setup_speedup") if k in row]
                 kv = {k: row[k] for k in keys}
                 for eps_k in ("eps_1.0", "eps_0.1"):
                     if eps_k in row:

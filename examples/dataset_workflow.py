@@ -1,0 +1,95 @@
+"""Dataset-store workflow: ingest → split → sweep → evaluate.
+
+    PYTHONPATH=src python examples/dataset_workflow.py
+
+The production data path (DESIGN.md §7) end-to-end:
+
+  1. ``registry.load("rcv1_like")`` materializes the named Table-2 twin
+     through the sharded on-disk store on first use (streamed ingestion +
+     column stats + content hash) and merely opens it ever after — run the
+     script twice to see the warm path;
+  2. a deterministic hash split carves train/test rows;
+  3. a (λ, ε) grid sweeps the *training* rows via ``solve_many`` (one
+     vmapped scan per group);
+  4. each fit is scored on the held-out rows — the model-selection loop the
+     store amortizes across processes and tenants.
+"""
+import argparse
+import os
+import time
+
+import numpy as np
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--dataset", default="url_small_like",
+                help="a registered name; the URL-style dense informative "
+                     "block generalizes to held-out rows at small T")
+ap.add_argument("--root", default=None,
+                help="store root (default: $REPRO_DATA_DIR or ~/.cache)")
+ap.add_argument("--steps", type=int, default=150)
+ap.add_argument("--test-frac", type=float, default=0.2)
+args = ap.parse_args()
+if args.root:
+    os.environ["REPRO_DATA_DIR"] = args.root
+
+from repro.core.solvers import FWConfig, grid, solve_many  # noqa: E402
+from repro.data import registry  # noqa: E402
+from repro.data.store import DatasetRef  # noqa: E402
+
+
+def accuracy(X, y, w):
+    margins = np.asarray(X.matvec(np.asarray(w, np.float64)))
+    return float(((margins > 0) == (y > 0.5)).mean())
+
+
+# ---- 1. ingest (first run) / open (every run after) ------------------------
+t0 = time.time()
+store = registry.load(args.dataset)
+print(f"store {args.dataset}: {store.n}×{store.d}, nnz={store.nnz}, "
+      f"{store.n_shards} shards, hash {store.content_hash[:12]}…  "
+      f"({time.time() - t0:.2f}s, root={store.root})")
+
+# ---- 2. deterministic hash split -------------------------------------------
+train_rows, test_rows = store.split(test_frac=args.test_frac)
+print(f"split: {train_rows.size} train / {test_rows.size} test "
+      f"(hash-based, stable across processes)")
+train_ref = DatasetRef(name=args.dataset, split="train",
+                       test_frac=args.test_frac)
+X_test, y_test = store.take(test_rows)
+
+# ---- 3. sweep the (λ, ε) grid over the training rows -----------------------
+# NOTE on the ε axis: at this toy scale (N ≈ 1.2k, T = 150) the per-step EM
+# scale ε'·N/2 only rises above the Gumbel noise floor for large ε — the
+# paper's remedy is a huge iteration budget (T up to 400k), which is exactly
+# what its cheap iterations make affordable.  The sweep shows the monotone
+# utility-in-ε frontier climbing toward the non-private reference.
+configs = grid(FWConfig(backend="jax_sparse", steps=args.steps, queue="bsls",
+                        delta=1.0 / store.n ** 2),
+               lam=(10.0, 30.0), epsilon=(4.0, 16.0, 64.0))
+t0 = time.time()
+results = solve_many(train_ref, configs=configs)
+print(f"\nsolve_many: {len(configs)} configs over the train split "
+      f"in {time.time() - t0:.1f}s")
+
+# non-private reference at the same budget: the utility ceiling the DP fits
+# approach as ε (or the paper's remedy, the iteration budget T) grows
+ref_res = solve_many(train_ref, configs=[
+    FWConfig(backend="jax_sparse", steps=args.steps, lam=30.0)])[0]
+
+# ---- 4. evaluate on the held-out rows --------------------------------------
+print(f"\n{'λ':>6} {'ε':>5} {'gap_T':>9} {'nnz':>5} {'test acc':>9}")
+best = None
+for cfg, res in zip(configs, results):
+    w = np.asarray(res.w)
+    acc = accuracy(X_test, y_test, w)
+    best = max(best or (acc, cfg), (acc, cfg), key=lambda t: t[0])
+    print(f"{cfg.lam:6.1f} {cfg.epsilon:5.1f} {float(res.gaps[-1]):9.4f} "
+          f"{int(res.nnz):5d} {acc:9.3f}")
+print(f"{30.0:6.1f} {'∞':>5} {float(ref_res.gaps[-1]):9.4f} "
+      f"{int(ref_res.nnz):5d} {accuracy(X_test, y_test, np.asarray(ref_res.w)):9.3f}"
+      f"   (non-private reference)")
+print(f"\nbest DP fit: λ={best[1].lam:g}, ε={best[1].epsilon:g} "
+      f"(test acc {best[0]:.3f}); utility climbs toward the reference as ε "
+      f"grows — or, per the paper, as T does at fixed ε")
+assert best[0] > 0.55, "expected the large-ε fits to beat chance"
+print("ok")

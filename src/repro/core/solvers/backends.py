@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.solvers.config import FWConfig, FWResult
+from repro.core.solvers.prepared import PreparedDataset
 from repro.core.solvers.registry import QUEUE_ALIASES, register
 
 
@@ -41,7 +42,7 @@ def _dense_backend(data, y, config: FWConfig) -> FWResult:
           doc="Alg 2 device scan, dense vector updates (pure jnp, no kernels)")
 def _jax_dense_backend(data, y, config: FWConfig) -> FWResult:
     from repro.core.fw_jax import sparse_fw_jax_jit
-    pcsr, pcsc = data
+    pcsr, pcsc = data.pair if isinstance(data, PreparedDataset) else data
     return sparse_fw_jax_jit(pcsr, pcsc, jnp.asarray(y, jnp.float32), config)
 
 
@@ -65,6 +66,13 @@ def _host_sparse_backend(data, y, config: FWConfig) -> FWResult:
           doc="Alg 2 device scan through the Pallas kernels "
               "(spmv + coord_update + bsls_draw)")
 def _jax_sparse_backend(data, y, config: FWConfig) -> FWResult:
-    from repro.core.solvers.jax_sparse import jax_sparse_fw_jit
-    pcsr, pcsc = data
-    return jax_sparse_fw_jit(pcsr, pcsc, jnp.asarray(y, jnp.float32), config)
+    from repro.core.solvers.jax_sparse import jax_sparse_fw
+    setup = None
+    if isinstance(data, PreparedDataset):
+        # dataset-store path: replay the cached fw_setup state (bit-exact)
+        setup = data.setup_for(y, config.loss, config.interpret)
+        pcsr, pcsc = data.pair
+    else:
+        pcsr, pcsc = data
+    return jax_sparse_fw(pcsr, pcsc, jnp.asarray(y, jnp.float32), config,
+                         setup=setup)

@@ -39,7 +39,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.solvers.config import FWConfig, FWResult
-from repro.core.solvers.registry import get_backend, resolve_queue
+from repro.core.solvers.registry import (get_backend, resolve_data,
+                                         resolve_queue)
 
 # FWConfig fields that must agree within one vmapped sweep group: they are
 # jit-static (shape the compiled scan) or flip a Python-level branch.  The
@@ -85,12 +86,13 @@ def group_key(config: FWConfig) -> Tuple:
 # ---------------------------------------------------------------------------
 
 
-def _sweep_scan(pcsr, pcsc, y, lams, em_scales, keys,
+def _sweep_scan(pcsr, pcsc, vbar0, qbar0, alpha0, lams, em_scales, keys,
                 *, steps, loss, private, fused, interpret):
-    """One compiled program for a whole sweep group: shared setup, vmapped
-    T-step scan.  ``lams``/``em_scales``/``keys`` are stacked per-config."""
-    from repro.core.solvers.jax_sparse import fw_scan, fw_setup
-    vbar0, qbar0, alpha0 = fw_setup(pcsr, y, loss=loss, interpret=interpret)
+    """One compiled program for a whole sweep group: the vmapped T-step scan
+    over shared setup state.  ``lams``/``em_scales``/``keys`` are stacked
+    per-config; (v̄₀, q̄₀, α₀) come from ``fw_setup_jit`` — computed once per
+    group, or replayed from a dataset store's persisted cache."""
+    from repro.core.solvers.jax_sparse import fw_scan
 
     def one(lam, em_scale, key):
         return fw_scan(pcsr, pcsc, vbar0, qbar0, alpha0, lam, em_scale, key,
@@ -109,9 +111,16 @@ def _solve_jax_sparse_group(
     data, y, configs: Sequence[FWConfig]
 ) -> List[FWResult]:
     """Run a compatible config group as one vmap-over-configs lax.scan."""
-    from repro.core.solvers.jax_sparse import em_scale_for
-    pcsr, pcsc = data
+    from repro.core.solvers.jax_sparse import em_scale_for, fw_setup_jit
+    from repro.core.solvers.prepared import PreparedDataset
     c0 = configs[0]
+    if isinstance(data, PreparedDataset):
+        pcsr, pcsc = data.pair
+        setup = data.setup_for(y, c0.loss, c0.interpret)
+    else:
+        pcsr, pcsc = data
+        setup = fw_setup_jit(pcsr, jnp.asarray(y, jnp.float32),
+                             loss=c0.loss, interpret=c0.interpret)
     private = c0.queue == "two_level"
     fused = c0.loss == "logistic"
     n = pcsr.shape[0]
@@ -120,7 +129,7 @@ def _solve_jax_sparse_group(
     em_scales = jnp.asarray([em_scale_for(c, n) for c in configs], dtype)
     keys = jnp.stack([jax.random.PRNGKey(c.seed) for c in configs])
     w, gaps, coords = _sweep_scan_jit(
-        pcsr, pcsc, jnp.asarray(y, jnp.float32), lams, em_scales, keys,
+        pcsr, pcsc, *setup, lams, em_scales, keys,
         steps=c0.steps, loss=c0.loss, private=private, fused=fused,
         interpret=c0.interpret)
     return [FWResult(w=w[i], gaps=gaps[i], coords=coords[i],
@@ -133,10 +142,12 @@ def _solve_jax_sparse_group(
 # ---------------------------------------------------------------------------
 
 
-def solve_many(X, y, configs: Sequence[FWConfig]) -> List[FWResult]:
+def solve_many(X, y=None, configs: Sequence[FWConfig] = ()) -> List[FWResult]:
     """Solve many FW problems over one (X, y); results in input order.
 
-    Configs are grouped by ``GROUP_FIELDS`` (after queue resolution); each
+    ``X`` may be a ``DatasetStore``/``DatasetRef`` (labels then default to
+    the store's own — the whole sweep reads one on-disk artifact).  Configs
+    are grouped by ``GROUP_FIELDS`` (after queue resolution); each
     ``jax_sparse`` group of ≥ 2 runs as a single jitted vmapped scan, other
     groups fall back to the sequential per-config backend — in both cases the
     data coercion is hoisted and shared across the whole call.
@@ -144,6 +155,7 @@ def solve_many(X, y, configs: Sequence[FWConfig]) -> List[FWResult]:
     configs = list(configs)
     if not configs:
         return []
+    X, y = resolve_data(X, y)
     resolved = []
     for c in configs:
         backend = get_backend(c.backend)

@@ -10,10 +10,14 @@ lazily on first lookup so importing this module never drags in every solver
 
 Each backend declares which data layout it consumes (``dense`` | ``host`` |
 ``padded``); :func:`solve` coerces the user's ``X`` — a ``HostCSR``, a dense
-numpy/JAX matrix, or a pre-built ``(PaddedCSR, PaddedCSC)`` pair — into that
-layout once, up front.  Queue names are translated between backends via
-``QUEUE_ALIASES`` so the same ``FWConfig`` can be re-targeted by changing
-only ``backend=`` (DESIGN.md §4 documents the name map).
+numpy/JAX matrix, a pre-built ``(PaddedCSR, PaddedCSC)`` pair, or a
+``repro.data.store`` ``DatasetStore``/``DatasetRef`` — into that layout
+once, up front.  Dataset refs also carry their own labels, so ``y`` may be
+omitted; the store path reads shards off mmap and reuses the store's cached
+padded layout and fw_setup state (DESIGN.md §7).  Queue names are translated
+between backends via ``QUEUE_ALIASES`` so the same ``FWConfig`` can be
+re-targeted by changing only ``backend=`` (DESIGN.md §4 documents the name
+map).
 """
 from __future__ import annotations
 
@@ -24,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.solvers.config import FWConfig, FWResult
+from repro.core.solvers.prepared import PreparedDataset
 from repro.core.sparse.formats import (HostCSR, PaddedCSC, PaddedCSR,
                                        dense_to_host, host_to_padded)
 
@@ -121,9 +126,42 @@ def _is_padded_pair(X) -> bool:
             and isinstance(X[0], PaddedCSR) and isinstance(X[1], PaddedCSC))
 
 
+def _as_store(X):
+    """The ``DatasetStore`` behind ``X``, or None (lazy import, no cycle)."""
+    from repro.data.store import DatasetStore
+    return X if isinstance(X, DatasetStore) else None
+
+
+def resolve_data(X, y=None):
+    """Resolve a ``DatasetRef``/``DatasetStore`` ``X`` into (source, labels).
+
+    Plain matrices pass through unchanged (``y`` then required).  A ref with
+    ``split="all"`` resolves to its open ``DatasetStore`` so the coercion
+    layer can reuse the store's cached padded layout and setup state;
+    train/test refs materialize the row subset.  An explicitly passed ``y``
+    always wins over the store's labels.
+    """
+    from repro.data.store import DatasetRef, DatasetStore
+    if isinstance(X, DatasetRef):
+        X, ref_y = X.resolve()
+        y = ref_y if y is None else y
+    elif isinstance(X, DatasetStore):
+        y = X.labels() if y is None else y
+    if y is None:
+        raise TypeError(
+            "y is required unless X is a DatasetRef or DatasetStore "
+            "(which carry their own labels)")
+    return X, y
+
+
 def as_host_csr(X) -> HostCSR:
     if isinstance(X, HostCSR):
         return X
+    store = _as_store(X)
+    if store is not None:
+        return store.to_host_csr()   # mmap-backed, zero-copy per shard
+    if isinstance(X, PreparedDataset):
+        X = X.pair
     if _is_padded_pair(X):
         # O(nnz) rebuild from the padded lanes — never materialize N×D.
         pcsr = X[0]
@@ -142,27 +180,41 @@ def as_host_csr(X) -> HostCSR:
 
 
 def as_dense_jax(X) -> jnp.ndarray:
+    store = _as_store(X)
+    if store is not None:
+        # same arrays the in-memory path sees → identical iterates
+        X = store.to_host_csr()
     if isinstance(X, HostCSR):
         return jnp.asarray(X.to_dense(), jnp.float32)
     if _is_padded_pair(X):
         return X[0]  # fw_dense consumes PaddedCSR natively
-    if isinstance(X, PaddedCSR):
-        return X
+    if isinstance(X, (PaddedCSR, PreparedDataset)):
+        return X if isinstance(X, PaddedCSR) else X.pcsr
     if np.ndim(X) == 2:
         return jnp.asarray(X, jnp.float32)
-    raise TypeError("X must be a HostCSR, a 2-D matrix, or a (PaddedCSR, "
-                    f"PaddedCSC) pair; got {type(X).__name__}")
+    raise TypeError("X must be a HostCSR, a 2-D matrix, a (PaddedCSR, "
+                    "PaddedCSC) pair, or a DatasetStore/DatasetRef; "
+                    f"got {type(X).__name__}")
 
 
-def as_padded(X) -> Tuple[PaddedCSR, PaddedCSC]:
+def as_padded(X):
+    """→ ``(PaddedCSR, PaddedCSC)``, or a ``PreparedDataset`` for dataset
+    stores (same pair plus the persisted fw_setup cache; every padded
+    backend accepts either)."""
+    if isinstance(X, PreparedDataset):
+        return X
+    store = _as_store(X)
+    if store is not None:
+        return store.prepared()
     if _is_padded_pair(X):
         return X
     if isinstance(X, HostCSR):
         return host_to_padded(X)
     if isinstance(X, (np.ndarray, jnp.ndarray)) and np.ndim(X) == 2:
         return host_to_padded(dense_to_host(np.asarray(X)))
-    raise TypeError("X must be a HostCSR, a 2-D matrix, or a (PaddedCSR, "
-                    f"PaddedCSC) pair; got {type(X).__name__}")
+    raise TypeError("X must be a HostCSR, a 2-D matrix, a (PaddedCSR, "
+                    "PaddedCSC) pair, or a DatasetStore/DatasetRef; "
+                    f"got {type(X).__name__}")
 
 
 _COERCE = {"dense": as_dense_jax, "host": as_host_csr, "padded": as_padded}
@@ -187,12 +239,14 @@ def resolve_queue(backend: Backend, config: FWConfig) -> FWConfig:
     return dataclasses.replace(config, queue=native)
 
 
-def solve(X, y, config: Optional[FWConfig] = None, **overrides) -> FWResult:
+def solve(X, y=None, config: Optional[FWConfig] = None,
+          **overrides) -> FWResult:
     """Run the configured Frank-Wolfe backend on (X, y).
 
-    ``X``: HostCSR, dense (N, D) numpy/JAX matrix, or a pre-built
-    ``(PaddedCSR, PaddedCSC)`` pair.  ``y``: (N,) labels in {0, 1}.
-    Keyword overrides are applied on top of ``config``
+    ``X``: HostCSR, dense (N, D) numpy/JAX matrix, a pre-built
+    ``(PaddedCSR, PaddedCSC)`` pair, or a ``DatasetStore``/``DatasetRef``
+    (in which case ``y`` defaults to the store's labels).  ``y``: (N,)
+    labels in {0, 1}.  Keyword overrides are applied on top of ``config``
     (``solve(X, y, backend="jax_sparse", steps=100)``).
     """
     config = config or FWConfig()
@@ -200,5 +254,6 @@ def solve(X, y, config: Optional[FWConfig] = None, **overrides) -> FWResult:
         config = dataclasses.replace(config, **overrides)
     backend = get_backend(config.backend)
     config = resolve_queue(backend, config)
+    X, y = resolve_data(X, y)
     data = _COERCE[backend.data_format](X)
     return backend.fn(data, y, config)

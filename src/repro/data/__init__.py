@@ -1,2 +1,7 @@
 from repro.data.synthetic import lm_batches, make_sparse_classification  # noqa: F401
 from repro.data.loader import ShardedLoader  # noqa: F401
+from repro.data.sparse_io import (LibsvmChunk, iter_libsvm,  # noqa: F401
+                                  write_libsvm)
+from repro.data.store import ColumnStats, DatasetRef, DatasetStore  # noqa: F401
+from repro.data.registry import (available_datasets, load,  # noqa: F401
+                                 register_dataset)

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Any, Iterator, Optional
 
 import jax
@@ -32,18 +33,48 @@ class ShardedLoader:
             for batch in self.it:
                 if self._stop.is_set():
                     return
-                self.q.put(self._place(batch))
+                placed = self._place(batch)
+                # A bare q.put would deadlock on close(): with the consumer
+                # gone and the queue full it blocks forever, so the stop
+                # event is re-checked between bounded put attempts.
+                while not self._stop.is_set():
+                    try:
+                        self.q.put(placed, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                if self._stop.is_set():
+                    return
         finally:
-            self.q.put(None)
+            try:
+                self.q.put_nowait(None)
+            except queue.Full:
+                pass
 
     def __iter__(self):
         return self
 
     def __next__(self):
+        if self._stop.is_set():          # closed loaders yield nothing
+            raise StopIteration
         item = self.q.get()
         if item is None:
             raise StopIteration
         return item
 
-    def close(self):
+    def close(self, timeout: float = 5.0) -> None:
+        """Stop the prefetch thread and join it (safe with a full queue)."""
         self._stop.set()
+        deadline = time.monotonic() + timeout
+        while self.thread.is_alive() and time.monotonic() < deadline:
+            # drain so a put blocked on a full queue wakes and sees the stop
+            try:
+                self.q.get_nowait()
+            except queue.Empty:
+                pass
+            self.thread.join(timeout=0.05)
+        # wake any consumer still blocked in __next__'s q.get()
+        try:
+            self.q.put_nowait(None)
+        except queue.Full:
+            pass

@@ -52,12 +52,11 @@ def make_sparse_classification(
     # (dense) columns carry large CLT-noise gradients and Frank-Wolfe zig-zags
     # on them forever — real text data downweights frequent terms, which is
     # exactly what makes the paper's sparse updates pay off.
-    if dense_features == 0 or True:
-        df = np.bincount(cols, minlength=d).astype(np.float64)
-        idf = np.log1p(n / np.maximum(df, 1.0))
-        idf /= idf.max()
-        keep_dense = cols >= 0 if dense_features == 0 else cols >= dense_features
-        vals = np.where(keep_dense, vals * idf[cols], vals)
+    df = np.bincount(cols, minlength=d).astype(np.float64)
+    idf = np.log1p(n / np.maximum(df, 1.0))
+    idf /= idf.max()
+    is_text = cols >= dense_features  # the URL-style dense block skips idf
+    vals = np.where(is_text, vals * idf[cols], vals)
     # unit-L2 rows (liblinear convention); keeps |x_ij| ≤ 1 for the DP
     # sensitivity bound
     sq = np.bincount(rows, weights=vals ** 2, minlength=n)

@@ -68,17 +68,23 @@ class FitServiceConfig:
 class FitService:
     """Multi-tenant DP-LASSO fitting over one resident (X, y) dataset."""
 
-    def __init__(self, X, y, accountants: Mapping[str, PrivacyAccountant],
+    def __init__(self, X, y=None,
+                 accountants: Optional[Mapping[str, PrivacyAccountant]] = None,
                  config: FitServiceConfig = FitServiceConfig()):
         if config.slots < 1:
             raise ValueError("slots must be >= 1")
         # Coerce to the padded device layout once at construction: identity
         # for the vmapped jax backends, O(nnz) rebuild for host fallbacks —
-        # no request ever re-pays the dense→sparse conversion.
-        from repro.core.solvers.registry import as_padded
+        # no request ever re-pays the dense→sparse conversion.  A
+        # DatasetStore/DatasetRef X supplies its own labels and resolves to a
+        # PreparedDataset, so the padded arrays AND the fw_setup state are
+        # cached across every drain (and, via the store's cache/ dir, across
+        # service restarts).
+        from repro.core.solvers.registry import as_padded, resolve_data
+        X, y = resolve_data(X, y)
         self.X = as_padded(X)
         self.y = y
-        self.accountants: Dict[str, PrivacyAccountant] = dict(accountants)
+        self.accountants: Dict[str, PrivacyAccountant] = dict(accountants or {})
         self.cfg = config
         self.queue: List[FitRequest] = []
         self.finished: List[FitRequest] = []

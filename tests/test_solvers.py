@@ -277,3 +277,90 @@ def test_solve_many_empty_and_singleton(sweep_problem):
     _assert_same_result(
         one[0], solve(X, y, FWConfig(backend="jax_sparse", lam=8.0, steps=10)),
         "singleton")
+
+
+# ---------------------------------------------------------------------------
+# dataset-ref solving (DESIGN.md §7): solve(DatasetRef/DatasetStore) must be
+# the *same state machine* as solve(X_in_memory) — the store hands back
+# bit-identical arrays (mmap round trip) and replays the cached fw_setup
+# state the in-memory path would have computed.
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def stored_problem(sweep_problem, tmp_path_factory):
+    from repro.data.store import DatasetStore
+    X, y = sweep_problem
+    root = tmp_path_factory.mktemp("solver_store") / "ds"
+    store = DatasetStore.from_arrays(str(root), X, y, rows_per_shard=64)
+    return store, X, y
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_solve_from_store_identical_iterates(stored_problem, backend):
+    """Acceptance: identical coords and weights vs in-memory, per backend."""
+    store, X, y = stored_problem
+    cfg = FWConfig(backend=backend, lam=8.0, steps=25)
+    from_store = solve(store, config=cfg)
+    in_memory = solve(X, y, cfg)
+    np.testing.assert_array_equal(np.asarray(from_store.coords),
+                                  np.asarray(in_memory.coords))
+    np.testing.assert_array_equal(np.asarray(from_store.w),
+                                  np.asarray(in_memory.w))
+    np.testing.assert_array_equal(np.asarray(from_store.gaps),
+                                  np.asarray(in_memory.gaps))
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_solve_from_store_private_identical(stored_problem, backend):
+    """DP queues too: same PRNG keys + same data ⇒ same draws."""
+    store, X, y = stored_problem
+    cfg = FWConfig(backend=backend, lam=8.0, steps=20, queue="bsls",
+                   epsilon=1.0, delta=1e-6)
+    from_store = solve(store, config=cfg)
+    in_memory = solve(X, y, cfg)
+    np.testing.assert_array_equal(np.asarray(from_store.coords),
+                                  np.asarray(in_memory.coords))
+    np.testing.assert_array_equal(np.asarray(from_store.w),
+                                  np.asarray(in_memory.w))
+
+
+def test_solve_from_store_warm_cache_identical(stored_problem):
+    """A fresh open replays the persisted fw_setup state bit-for-bit."""
+    from repro.data.store import DatasetStore
+    store, X, y = stored_problem
+    cfg = FWConfig(backend="jax_sparse", lam=8.0, steps=25)
+    solve(store, config=cfg)                      # populates cache/
+    warm = DatasetStore.open(store.root)
+    r_warm = solve(warm, config=cfg)
+    r_mem = solve(X, y, cfg)
+    np.testing.assert_array_equal(np.asarray(r_warm.coords),
+                                  np.asarray(r_mem.coords))
+    np.testing.assert_array_equal(np.asarray(r_warm.w), np.asarray(r_mem.w))
+
+
+def test_solve_dataset_ref_split_matches_subset(stored_problem):
+    from repro.data.store import DatasetRef
+    store, X, y = stored_problem
+    ref = DatasetRef(path=store.root, split="train")
+    cfg = FWConfig(backend="host_sparse", lam=8.0, steps=15)
+    train_rows, _ = store.split(ref.test_frac, ref.salt)
+    X_sub, y_sub = store.take(train_rows)
+    _assert_same_result(solve(ref, config=cfg), solve(X_sub, y_sub, cfg),
+                        "train split ref")
+
+
+def test_solve_many_from_store_matches_sequential(stored_problem):
+    store, X, y = stored_problem
+    configs = grid(FWConfig(backend="jax_sparse", steps=20, queue="bsls",
+                            delta=1e-6),
+                   lam=(4.0, 8.0), epsilon=(0.5, 2.0))
+    batched = solve_many(store, configs=configs)
+    for i, cfg in enumerate(configs):
+        _assert_same_result(batched[i], solve(X, y, cfg), f"store cfg {i}")
+
+
+def test_solve_requires_labels_for_plain_matrices(sweep_problem):
+    X, _ = sweep_problem
+    with pytest.raises(TypeError, match="y is required"):
+        solve(X, config=FWConfig(backend="host_sparse", steps=2))

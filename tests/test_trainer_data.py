@@ -32,6 +32,35 @@ def test_dense_block_generator():
     assert (np.abs(dense[:, :15]) > 0).mean() > 0.9
 
 
+def test_sharded_loader_close_unblocks_full_queue():
+    """Regression: close() must not leave the worker blocked on q.put when
+    the queue is full and the consumer is gone — it drains, signals stop,
+    and joins the thread."""
+    from repro.data.loader import ShardedLoader
+
+    def infinite():
+        while True:
+            yield np.zeros(2)
+
+    ld = ShardedLoader(infinite(), prefetch=1)
+    next(ld)                      # worker is alive and producing
+    import time
+    time.sleep(0.2)               # let it fill the queue and block on put
+    ld.close()
+    assert not ld.thread.is_alive()
+    with pytest.raises(StopIteration):
+        next(ld)
+
+
+def test_sharded_loader_drains_finite_iterator():
+    from repro.data.loader import ShardedLoader
+    ld = ShardedLoader(iter([np.ones(3), np.zeros(3)]), prefetch=4)
+    got = list(ld)
+    assert len(got) == 2
+    ld.close()
+    assert not ld.thread.is_alive()
+
+
 def test_lm_batches_deterministic_and_shaped():
     a = next(lm_batches(100, 4, 32, seed=3))
     b = next(lm_batches(100, 4, 32, seed=3))
