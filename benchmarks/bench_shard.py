@@ -1,0 +1,100 @@
+"""Shard bench — ``jax_sparse`` (kernel scan) vs ``jax_shard`` (collective
+schedule) on one device (DESIGN.md §8).
+
+Both engines are the same Algorithm-2 state machine; on a 1×1 mesh every
+collective in ``jax_shard`` degenerates to the identity, so the two must
+take **identical non-private steps** — the step-parity audit asserts exact
+coordinate equality and float-tolerance weights/gaps against the faithful
+host engine as referee.  The wall-clock columns then isolate what the
+blocked layout itself costs/saves per sparsity regime (rcv1: short rows,
+news20: long rows / D ≫ N) before any communication enters:
+
+  * per-iteration time of each engine (steady state, compile excluded);
+  * block padding waste (padded/true nnz) vs the ELL pair's overhead — the
+    memory price of the static (Kc, Kr) block shape;
+  * a private solve on each engine (same ε-semantics via
+    ``core.dp.accountant``) — law-level sanity: finite weights on the L1
+    ball with exploring selections, since realizations differ by design.
+
+Output: one row per dataset into BENCH_shard.json (``run.py --only shard``;
+uploaded as a CI artifact alongside the sweep/ingest benches).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _time_solve(backend, data, y, cfg, steps: int) -> tuple:
+    res = backend.fn(data, y, cfg)                 # warmup (compile)
+    np.asarray(res.w)
+    t0 = time.time()
+    res = backend.fn(data, y, cfg)
+    np.asarray(res.w)                              # block on device work
+    return res, (time.time() - t0) / steps * 1e3
+
+
+def run(datasets=("rcv1", "news20"), steps: int = 60, lam: float = 20.0,
+        epsilon: float = 1.0):
+    from benchmarks.common import load_problem
+    from repro.core.solvers import FWConfig, get_backend, resolve_queue
+
+    out = {"steps": steps, "lam": lam, "mesh": [1, 1], "datasets": {}}
+    for name in datasets:
+        prob = load_problem(name)
+        row = {"n": prob.X.shape[0], "d": prob.X.shape[1],
+               "density": prob.X.nnz / (prob.X.shape[0] * prob.X.shape[1])}
+        results, prepared = {}, {}
+        for bname in ("jax_sparse", "jax_shard"):
+            backend = get_backend(bname)
+            cfg = resolve_queue(backend, FWConfig(backend=bname, lam=lam,
+                                                  steps=steps))
+            data = prepared[bname] = backend.prepare(prob.X)
+            res, per_iter_ms = _time_solve(backend, data, prob.y, cfg, steps)
+            results[bname] = res
+            row[f"per_iter_ms_{bname}"] = round(per_iter_ms, 2)
+            if bname == "jax_shard":
+                row["block_waste"] = round(data.blocks(1, 1).waste, 2)
+
+        # ---- step-parity audit: identical non-private trajectories -------
+        a, b = results["jax_sparse"], results["jax_shard"]
+        coords_equal = bool(np.array_equal(np.asarray(a.coords),
+                                           np.asarray(b.coords)))
+        max_w_dev = float(np.max(np.abs(np.asarray(a.w) - np.asarray(b.w))))
+        max_gap_dev = float(np.max(np.abs(np.asarray(a.gaps)
+                                          - np.asarray(b.gaps))))
+        row.update(
+            max_w_dev=max_w_dev, max_gap_dev=max_gap_dev,
+            pass_parity=bool(coords_equal and max_w_dev < 1e-4
+                             and max_gap_dev < 1e-4),
+            shard_over_sparse=round(
+                row["per_iter_ms_jax_shard"]
+                / max(row["per_iter_ms_jax_sparse"], 1e-9), 2))
+
+        # ---- private solves: same accountant semantics, law-level sanity -
+        for bname in ("jax_sparse", "jax_shard"):
+            backend = get_backend(bname)
+            cfg = resolve_queue(backend, FWConfig(
+                backend=bname, lam=lam, steps=steps, queue="bsls",
+                epsilon=epsilon, delta=1e-6))
+            res = backend.fn(prepared[bname], prob.y, cfg)
+            w = np.asarray(res.w)
+            row[f"dp_ok_{bname}"] = bool(
+                np.isfinite(w).all()
+                and np.abs(w).sum() <= lam * (1 + 1e-5)
+                and len(set(np.asarray(res.coords).tolist())) > 5)
+        row["pass_dp"] = bool(row["dp_ok_jax_sparse"]
+                              and row["dp_ok_jax_shard"])
+
+        out["datasets"][name] = row
+        print(f"[shard] {name}: sparse {row['per_iter_ms_jax_sparse']} "
+              f"ms/iter, shard {row['per_iter_ms_jax_shard']} ms/iter "
+              f"(waste {row['block_waste']}x)  parity={row['pass_parity']} "
+              f"dp={row['pass_dp']}", flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

@@ -1,15 +1,16 @@
 """§Perf hillclimb target 3 — the paper's own workload at pod scale.
 
-Lowers the distributed DP-FW step (kdda-sized: N=8.4M, D=20.2M) on the 16×16
-mesh under different exchange strategies and reports per-iteration collective
-bytes + roofline terms:
+Lowers the registry's ``jax_shard`` backend (kdda-sized: N=8.4M, D=20.2M) on
+the 16×16 mesh under different exchange strategies and reports per-iteration
+collective bytes + roofline terms:
 
   dense      α-delta psum over the data axis (D/B floats · T iters)
   topk_k     error-feedback top-k all_gather (2k floats · rows · T)
 
 Also profiles the single-device solver backends through the registry
-(``--local-backends jax_dense jax_sparse``): per-iteration wall clock of each
-engine on a CPU twin of the dataset, so the collective model above can be
+(``--local-backends jax_dense jax_sparse jax_shard``): per-iteration wall
+clock of each engine on a CPU twin of the dataset, so the collective model
+above can be
 combined with measured per-shard compute.  ``--sweep-grid N`` additionally
 profiles an N-config λ/ε sweep two ways — sequential ``solve()`` loop vs one
 vmapped ``solve_many()`` batch — the multi-tenant traffic shape the fit
@@ -103,32 +104,29 @@ def profile_sweep(grid_size: int, dataset: str = "kdda", steps: int = 30):
 
 
 def run(dataset: str = "kdda", steps: int = 50):
+    """Lower the registered ``jax_shard`` backend's whole-run program on the
+    16×16 production mesh under the three exchange strategies and audit the
+    per-iteration collective traffic (same program the registry serves)."""
     from repro.configs.paper_lasso import DATASETS
-    from repro.distributed.block_sparse import block_specs
-    from repro.distributed.fw_shard import (DistFWConfig, build_dist_fw_step,
-                                            dist_fw_shardings)
+    from repro.core.solvers.jax_shard import shard_lowering
     from repro.launch.mesh import make_production_mesh
-    from repro.roofline.hlo import collective_bytes_nested
+    from repro.roofline.hlo import (collective_bytes_nested,
+                                    cost_analysis_dict)
 
     ds = DATASETS[dataset]
     mesh = make_production_mesh()
     rows, cols = 16, 16
     kc = max(8, int(ds.n * (ds.nnz_per_row / ds.d) / rows * 4))
     kr = max(8, int(ds.nnz_per_row / cols * 4))
-    blocks_abs = block_specs(ds.n, ds.d, rows, cols, kc, kr)
-    y_abs = jax.ShapeDtypeStruct((blocks_abs.padded[0],), jnp.float32)
 
     results = {}
     with mesh:
         for tag, k in [("dense", 0), ("topk_256", 256), ("topk_64", 64)]:
-            cfg = DistFWConfig(lam=50.0, steps=steps, selection="gumbel",
-                               epsilon=0.1, compress_topk=k)
-            step = build_dist_fw_step(blocks_abs, cfg, mesh)
-            b_shd, y_shd = dist_fw_shardings(blocks_abs, mesh)
-            compiled = jax.jit(step, in_shardings=(b_shd, y_shd)).lower(
-                blocks_abs, y_abs).compile()
+            jitted, args = shard_lowering(ds.n, ds.d, mesh, steps=steps,
+                                          kc=kc, kr=kr, compress_topk=k)
+            compiled = jitted.lower(*args).compile()
             coll = collective_bytes_nested(compiled.as_text())
-            cost = compiled.cost_analysis() or {}
+            cost = cost_analysis_dict(compiled)
             results[tag] = {
                 "collective_bytes_per_step": {
                     kk: vv / steps for kk, vv in coll.items()},

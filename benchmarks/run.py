@@ -7,6 +7,7 @@
   Table 4  bench_accuracy      accuracy/AUC/sparsity at ε = 0.1
   (sweeps) bench_sweep         sequential solve() vs batched solve_many()
   (store)  bench_ingest        dataset-store ingest + cold/warm prepare
+  (shard)  bench_shard         jax_sparse vs jax_shard + step-parity audit
   §Roofline roofline_table     three-term model from dryrun_results.json
 
 ``python -m benchmarks.run [--fast] [--only NAME] [--backend B]`` — results
@@ -39,7 +40,8 @@ def main():
 
     from benchmarks import (bench_accuracy, bench_convergence, bench_flops,
                             bench_heap_pops, bench_ingest, bench_scaling,
-                            bench_speedup, bench_sweep, roofline_table)
+                            bench_shard, bench_speedup, bench_sweep,
+                            roofline_table)
     from repro.core.solvers import available_backends
 
     if args.backend is not None and args.backend not in available_backends():
@@ -69,6 +71,9 @@ def main():
             lams=(10.0, 20.0, 40.0, 80.0), epsilons=(0.5, 2.0),
             steps=40 if fast else 120,
             backend=args.backend or "jax_sparse"),
+        "shard": lambda: bench_shard.run(
+            datasets=("rcv1",) if fast else ("rcv1", "news20"),
+            steps=30 if fast else 80),
         "ingest": lambda: bench_ingest.run(
             datasets=("rcv1_like",) if fast else
             ("rcv1_like", "url_small_like"),
@@ -109,7 +114,9 @@ def main():
                 keys = [k for k in ("flops_reduction_total", "speedup_alg2+4",
                                     "accuracy_pct", "pops_over_nnz_ratio",
                                     "final_gap_rel_diff", "sweep_speedup",
-                                    "ingest_s", "warm_setup_speedup") if k in row]
+                                    "ingest_s", "warm_setup_speedup",
+                                    "shard_over_sparse", "block_waste")
+                        if k in row]
                 kv = {k: row[k] for k in keys}
                 for eps_k in ("eps_1.0", "eps_0.1"):
                     if eps_k in row:

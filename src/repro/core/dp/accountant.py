@@ -32,6 +32,22 @@ def per_step_epsilon(epsilon: float, delta: float, steps: int) -> float:
     return epsilon / math.sqrt(8.0 * steps * math.log(1.0 / delta))
 
 
+def em_log_weight_scale(
+    *, epsilon: float, delta: float, steps: int, n_rows: int, lipschitz: float
+) -> float:
+    """Log-weight scale of the per-step exponential mechanism: ε'·N/(2L).
+
+    Every DP selection path scores coordinate j with ``scale · |α_j|`` where
+    ``scale = ε'·N/(2L)`` (utility sensitivity L/N at per-step budget ε' from
+    advanced composition).  This is the single place that formula lives:
+    ``jax_sparse.em_scale_for`` (single-device two-level sampler) and the
+    ``jax_shard`` distributed Gumbel-max both call it, so the (ε, δ, T) →
+    scale semantics of the two engines can never drift — pinned in
+    ``tests/test_jax_shard.py``.
+    """
+    return per_step_epsilon(epsilon, delta, steps) * n_rows / (2.0 * lipschitz)
+
+
 def fw_noise_scale(
     *, epsilon: float, delta: float, steps: int, lam: float, lipschitz: float, n_rows: int
 ) -> float:

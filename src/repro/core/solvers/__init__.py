@@ -8,13 +8,15 @@ One API over every implementation of the paper's algorithms:
 
 Backends (``available_backends()``): ``dense`` (Alg 1), ``jax_dense`` (Alg 2,
 pure-jnp device scan), ``host_sparse`` (Alg 2, faithful host loop),
-``jax_sparse`` (Alg 2 through the Pallas kernels).  New backends register via
-``register``.
+``jax_sparse`` (Alg 2 through the Pallas kernels), ``jax_shard`` (Alg 2
+under feature sharding on ``FWConfig.mesh`` — DESIGN.md §8).  New backends
+register via ``register``.
 
 Sweeps — many (λ, ε) problems over one design matrix — go through
-``solve_many``/``grid`` (solvers.batched): compatible ``jax_sparse`` configs
-run as one jitted vmapped scan, everything else drains sequentially on
-shared coerced data:
+``solve_many``/``grid`` (solvers.batched): compatible ``jax_sparse`` and
+``jax_shard`` configs run on one shared setup + compiled scan (vmapped
+where the mesh allows), everything else drains sequentially on shared
+coerced data:
 
     results = solve_many(X, y, grid(lam=(10., 30.), epsilon=(0.1, 1.0),
                                     backend="jax_sparse", queue="bsls"))

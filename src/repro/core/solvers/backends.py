@@ -1,4 +1,4 @@
-"""The four builtin solver backends (DESIGN.md §4).
+"""The five builtin solver backends (DESIGN.md §4).
 
   dense        Alg 1 — dense-work FW, one lax.scan (repro.core.fw_dense).
                Accepts a dense device matrix or a PaddedCSR.
@@ -10,6 +10,10 @@
                ablations).
   jax_sparse   Alg 2 on device through the Pallas kernels (spmv /
                coord_update / bsls_draw) — the production sparse path.
+  jax_shard    Alg 2 under feature sharding: the shard_map collective
+               schedule of repro.distributed over an (a × b) BlockSparse
+               grid named by FWConfig.mesh (DESIGN.md §8) — the scale-out
+               path; a 1×1 mesh reproduces the host oracle exactly.
 
 Each adapter normalizes its engine's native signature/result onto the shared
 ``(data, y, FWConfig) -> FWResult`` contract.  Imported lazily by
@@ -59,6 +63,16 @@ def _host_sparse_backend(data, y, config: FWConfig) -> FWResult:
     return FWResult(w=jnp.asarray(res.w, jnp.float32), gaps=gaps,
                     coords=jnp.asarray(res.coords, jnp.int32),
                     losses=jnp.zeros_like(gaps))
+
+
+@register("jax_shard", data_format="blocks", queues=QUEUE_ALIASES["shard"],
+          default_queue="argmax",
+          doc="Alg 2 under feature sharding: shard_map collective schedule "
+              "over BlockSparse blocks (FWConfig.mesh = (rows, features); "
+              "1×1 reproduces the host oracle exactly)")
+def _jax_shard_backend(data, y, config: FWConfig) -> FWResult:
+    from repro.core.solvers.jax_shard import shard_fw
+    return shard_fw(data, y, config)
 
 
 @register("jax_sparse", data_format="padded", queues=QUEUE_ALIASES["device"],

@@ -13,13 +13,17 @@ of kernel launches.  ``solve_many`` amortizes all of it:
 Mechanics:
 
   * configs are bucketed into **sweep groups** — same backend / steps /
-    resolved queue / loss / interpret flag (everything that shapes the
-    compiled program); λ, ε, δ and seed may vary freely inside a group;
+    resolved queue / loss / interpret flag / mesh (everything that shapes
+    the compiled program); λ, ε, δ and seed may vary freely inside a group;
   * ``X`` is coerced **once per data layout**, not once per config;
   * a ``jax_sparse`` group runs as a single jitted ``vmap`` of ``fw_scan``
     over stacked (λ, EM-scale, PRNG-key) triples — the whole sweep is one
     XLA program through the spmv / coord_update / bsls_draw kernels, with
     the config-independent ``fw_setup`` state computed once and broadcast;
+  * a ``jax_shard`` group shares one block build + setup and re-enters one
+    compiled scan (vmapped over the stacked scalars on a 1×1 mesh, where
+    the whole stack fits one device program; sequential re-entries on real
+    grids — λ/ε/key are traced either way, so never a recompile);
   * every other backend (and singleton groups) drains through the normal
     per-config adapter on the pre-coerced data — same results, no compile
     blow-up for host loops that would not benefit.
@@ -33,7 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, Iterable, List, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +49,8 @@ from repro.core.solvers.registry import (get_backend, resolve_data,
 # FWConfig fields that must agree within one vmapped sweep group: they are
 # jit-static (shape the compiled scan) or flip a Python-level branch.  The
 # complementary set — lam / epsilon / delta / seed — is what a group stacks.
-GROUP_FIELDS = ("backend", "steps", "queue", "loss", "selection", "interpret")
+GROUP_FIELDS = ("backend", "steps", "queue", "loss", "selection", "interpret",
+                "mesh")
 
 
 def grid(base: FWConfig | None = None, **axes) -> Tuple[FWConfig, ...]:
@@ -61,9 +66,21 @@ def grid(base: FWConfig | None = None, **axes) -> Tuple[FWConfig, ...]:
     Strings are scalars, never axes.
     """
     base = base or FWConfig()
-    fixed = {k: v for k, v in axes.items()
-             if isinstance(v, str) or not isinstance(v, Iterable)}
-    sweep = {k: tuple(v) for k, v in axes.items() if k not in fixed}
+
+    def _scalar(k, v):
+        if isinstance(v, str) or not isinstance(v, Iterable):
+            return True
+        # one mesh spec (a tuple of ints) is a value, not a sweep axis; a
+        # sequence of tuples sweeps meshes
+        return k == "mesh" and bool(v) and all(isinstance(x, int) for x in v)
+
+    # mesh specs normalize to tuples (FWConfig.mesh must stay hashable for
+    # solve_many/FitService grouping even when the caller wrote a list)
+    fixed = {k: tuple(v) if k == "mesh" and _scalar(k, v) and v is not None
+             else v
+             for k, v in axes.items() if _scalar(k, v)}
+    sweep = {k: tuple(tuple(x) if k == "mesh" else x for x in v)
+             for k, v in axes.items() if k not in fixed}
     unknown = set(axes) - {f.name for f in dataclasses.fields(FWConfig)}
     if unknown:
         raise ValueError(f"unknown FWConfig field(s): {', '.join(sorted(unknown))}")
@@ -142,15 +159,22 @@ def _solve_jax_sparse_group(
 # ---------------------------------------------------------------------------
 
 
-def solve_many(X, y=None, configs: Sequence[FWConfig] = ()) -> List[FWResult]:
+def solve_many(X, y=None, configs: Sequence[FWConfig] = (), *,
+               prepared: Optional[Dict[str, object]] = None) -> List[FWResult]:
     """Solve many FW problems over one (X, y); results in input order.
 
     ``X`` may be a ``DatasetStore``/``DatasetRef`` (labels then default to
     the store's own — the whole sweep reads one on-disk artifact).  Configs
     are grouped by ``GROUP_FIELDS`` (after queue resolution); each
-    ``jax_sparse`` group of ≥ 2 runs as a single jitted vmapped scan, other
-    groups fall back to the sequential per-config backend — in both cases the
-    data coercion is hoisted and shared across the whole call.
+    ``jax_sparse`` group of ≥ 2 runs as a single jitted vmapped scan, a
+    ``jax_shard`` group shares one setup + compiled scan per mesh (vmapped
+    on a 1×1 mesh), and other groups fall back to the sequential per-config
+    backend — in every case the data coercion is hoisted and shared across
+    the whole call.
+
+    ``prepared`` is an optional caller-owned ``{data_format: coerced X}``
+    cache: pass the same dict across calls (the fit service does, per
+    drain) and each layout is coerced exactly once per service lifetime.
     """
     configs = list(configs)
     if not configs:
@@ -161,7 +185,8 @@ def solve_many(X, y=None, configs: Sequence[FWConfig] = ()) -> List[FWResult]:
         backend = get_backend(c.backend)
         resolved.append((backend, resolve_queue(backend, c)))
 
-    prepared: Dict[str, object] = {}  # data layout -> coerced X (once each)
+    if prepared is None:
+        prepared = {}                 # data layout -> coerced X (once each)
     for backend, _ in resolved:
         if backend.data_format not in prepared:
             prepared[backend.data_format] = backend.prepare(X)
@@ -177,6 +202,9 @@ def solve_many(X, y=None, configs: Sequence[FWConfig] = ()) -> List[FWResult]:
         member_cfgs = [resolved[i][1] for i in members]
         if backend.name == "jax_sparse" and len(members) > 1:
             out = _solve_jax_sparse_group(data, y, member_cfgs)
+        elif backend.name == "jax_shard" and len(members) > 1:
+            from repro.core.solvers.jax_shard import solve_shard_group
+            out = solve_shard_group(data, y, member_cfgs)
         else:
             out = [backend.fn(data, y, cfg) for cfg in member_cfgs]
         for i, res in zip(members, out):

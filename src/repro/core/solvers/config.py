@@ -20,7 +20,7 @@ changing only ``backend=``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +46,11 @@ class FWConfig:
     delta: float = 1e-6
     seed: int = 0
     interpret: bool = True       # Pallas interpret mode (True on CPU containers)
+    # jax_shard only: (row shards, feature shards) of the device mesh the
+    # blocked solve runs on; None → 1×1 (single device — must reproduce the
+    # host oracle exactly, which is what makes parity testable everywhere).
+    # Other backends ignore it.  A tuple keeps the config hashable/static.
+    mesh: Optional[Tuple[int, int]] = None
 
     def loss_fn(self) -> Loss:
         return get_loss(self.loss)

@@ -43,7 +43,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.dp.accountant import per_step_epsilon
+from repro.core.dp.accountant import em_log_weight_scale
 from repro.core.losses import get_loss
 from repro.core.samplers.bsls_jax import tl_init, tl_update
 from repro.core.samplers.group_argmax import ga_get_next, ga_init, ga_update
@@ -161,9 +161,9 @@ def em_scale_for(config: FWConfig, n_rows: int) -> float:
     two-level sampler; 1.0 otherwise (priorities are then raw |α|)."""
     if config.queue != "two_level":
         return 1.0
-    loss = config.loss_fn()
-    eps_step = per_step_epsilon(config.epsilon, config.delta, config.steps)
-    return eps_step * n_rows / (2.0 * loss.lipschitz)
+    return em_log_weight_scale(
+        epsilon=config.epsilon, delta=config.delta, steps=config.steps,
+        n_rows=n_rows, lipschitz=config.loss_fn().lipschitz)
 
 
 def jax_sparse_fw(

@@ -74,6 +74,14 @@ QUEUE_ALIASES: Mapping[str, Mapping[str, str]] = {
         "noisy_max": "noisy_max",
         "gumbel": "gumbel", "bsls": "gumbel", "two_level": "gumbel",
     },
+    # The sharded engine realizes the same two rules as collectives:
+    # shard-then-member Gumbel-max (exact EM law) and exact argmax.  No
+    # noisy_max port — report-noisy-max would need a D-wide Laplace draw,
+    # exactly the O(D) traffic the blocked schedule exists to avoid.
+    "shard": {
+        "argmax": "argmax", "fib_heap": "argmax", "group_argmax": "argmax",
+        "gumbel": "gumbel", "bsls": "gumbel", "two_level": "gumbel",
+    },
 }
 
 
@@ -217,7 +225,17 @@ def as_padded(X):
                     f"got {type(X).__name__}")
 
 
-_COERCE = {"dense": as_dense_jax, "host": as_host_csr, "padded": as_padded}
+def as_shard_source(X):
+    """→ ``repro.distributed.ingest.ShardSource`` — the ``jax_shard``
+    backend's deferred block coercion (the (a × b) grid is on the config,
+    not the data, so bucketing happens at solve time, memoized per grid;
+    dataset stores keep their identity so the block-layout cache applies)."""
+    from repro.distributed.ingest import ShardSource
+    return ShardSource.from_any(X)
+
+
+_COERCE = {"dense": as_dense_jax, "host": as_host_csr, "padded": as_padded,
+           "blocks": as_shard_source}
 
 
 # ---------------------------------------------------------------------------

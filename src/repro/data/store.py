@@ -480,6 +480,44 @@ class DatasetStore:
         with open(self._padded_meta_path(), "w") as f:
             json.dump({"content_hash": self.content_hash}, f)
 
+    def _blocks_meta_path(self, a: int, b: int) -> str:
+        return os.path.join(self.root, CACHE_DIR, f"blocks-{a}x{b}-meta.json")
+
+    def blocks_load(self, a: int, b: int):
+        """The cached (a × b) ``BlockSparse`` layout off mmap, or None.
+
+        Third cache layer alongside padded/setup (DESIGN.md §8): the
+        ``jax_shard`` backend's block bucketing is an O(nnz) host pass, so
+        warm opens replay the padded block arrays straight from ``cache/``
+        — guarded, like the others, by the store's content hash.
+        """
+        meta_path = self._blocks_meta_path(a, b)
+        if not os.path.exists(meta_path):
+            return None
+        with open(meta_path) as f:
+            meta = json.load(f)
+        if meta.get("content_hash") != self.content_hash:
+            return None
+        import jax.numpy as jnp
+
+        from repro.distributed.block_sparse import BlockSparse
+        base = os.path.join(self.root, CACHE_DIR, f"blocks-{a}x{b}")
+        arrays = {
+            part: jnp.asarray(np.load(f"{base}.{part}.npy", mmap_mode="r"))
+            for part in ("csc_rows", "csc_vals", "csr_cols", "csr_vals")}
+        return BlockSparse(shape=tuple(meta["shape"]),
+                           padded=tuple(meta["padded"]), **arrays)
+
+    def blocks_save(self, a: int, b: int, blocks) -> None:
+        os.makedirs(os.path.join(self.root, CACHE_DIR), exist_ok=True)
+        base = os.path.join(self.root, CACHE_DIR, f"blocks-{a}x{b}")
+        for part in ("csc_rows", "csc_vals", "csr_cols", "csr_vals"):
+            np.save(f"{base}.{part}.npy", np.asarray(getattr(blocks, part)))
+        with open(self._blocks_meta_path(a, b), "w") as f:
+            json.dump({"content_hash": self.content_hash,
+                       "shape": list(blocks.shape),
+                       "padded": list(blocks.padded)}, f)
+
     def _setup_cache_path(self, loss: str, interpret: bool) -> str:
         mode = "interp" if interpret else "compiled"
         return os.path.join(self.root, CACHE_DIR, f"setup-{loss}-{mode}.npz")

@@ -1,2 +1,4 @@
-from repro.distributed.block_sparse import BlockSparse, build_block_sparse  # noqa: F401
-from repro.distributed.fw_shard import DistFWConfig, distributed_fw  # noqa: F401
+from repro.distributed.block_sparse import (BlockAssembler,  # noqa: F401
+                                            BlockSparse, build_block_sparse)
+from repro.distributed.fw_shard import (DistFWConfig,  # noqa: F401
+                                        build_dist_fw, distributed_fw)

@@ -1,6 +1,6 @@
 """2-D block-sharded padded sparse design matrix.
 
-The distributed Frank-Wolfe (DESIGN.md §5) shards the design matrix over the
+The distributed Frank-Wolfe (DESIGN.md §8) shards the design matrix over the
 production mesh: **rows → ("pod","data"), features → "model"**.  Each device
 (a, b) holds the (N/A × D/B) block X[rows_a, cols_b] in both padded layouts:
 
@@ -15,6 +15,14 @@ cross-device traffic left in the FW step is the γ/dv lane exchange and the
 Padding is per-layout-global (one static Kc/Kr for every block) because XLA
 needs one shape; ``waste`` reports the padded/true-nnz ratio so benchmarks
 can audit the overhead the same way PaddedCSR.padding_overhead does.
+
+Construction is a vectorized two-pass COO bucketing (``BlockAssembler``):
+pass 1 counts lanes per block column/row (fixing Kc/Kr), pass 2 scatters
+values into the preallocated padded arrays.  Because the assembler consumes
+COO fragments incrementally with running fill pointers, a sharded on-disk
+``DatasetStore`` maps straight onto device blocks one mmap shard at a time
+(``repro.distributed.ingest``) — no concatenation into one host matrix, and
+lane order is identical to feeding the whole matrix at once.
 """
 from __future__ import annotations
 
@@ -58,51 +66,110 @@ class BlockSparse:
         return float(self.csc_vals.size) / max(true, 1.0)
 
 
+def block_layout(n: int, d: int, a: int, b: int) -> Tuple[int, int]:
+    """Per-device block shape (N_loc, D_loc) of an (a × b) grid."""
+    return -(-n // a), -(-d // b)
+
+
+def _run_ranks(sorted_key: np.ndarray) -> np.ndarray:
+    """Rank of each element within its equal-key run (key already sorted)."""
+    m = sorted_key.size
+    if m == 0:
+        return np.zeros(0, np.int64)
+    run_start = np.zeros(m, np.int64)
+    new_run = np.flatnonzero(sorted_key[1:] != sorted_key[:-1]) + 1
+    run_start[new_run] = new_run
+    return np.arange(m, dtype=np.int64) - np.maximum.accumulate(run_start)
+
+
+class BlockAssembler:
+    """Streaming COO → (a × b) padded block grid, in two vectorized passes.
+
+    Feed COO fragments in global row order (``count`` them all, ``alloc``,
+    then ``fill`` the same fragments in the same order).  Lane order inside
+    each block column (row) is the global row (stored column) order — the
+    running fill pointers carry it across fragments, so shard-at-a-time
+    assembly is bit-identical to whole-matrix assembly.
+    """
+
+    def __init__(self, n: int, d: int, a: int, b: int):
+        self.n, self.d, self.a, self.b = n, d, a, b
+        self.n_loc, self.d_loc = block_layout(n, d, a, b)
+        self._col_counts = np.zeros(a * b * self.d_loc, np.int64)
+        self._row_counts = np.zeros(a * b * self.n_loc, np.int64)
+        self._arrays = None
+
+    def _keys(self, rows: np.ndarray, cols: np.ndarray):
+        ai, il = np.divmod(np.asarray(rows, np.int64), self.n_loc)
+        bj, jl = np.divmod(np.asarray(cols, np.int64), self.d_loc)
+        block = ai * self.b + bj
+        return block * self.d_loc + jl, block * self.n_loc + il, il, jl
+
+    def count(self, rows: np.ndarray, cols: np.ndarray) -> None:
+        col_key, row_key, _, _ = self._keys(rows, cols)
+        self._col_counts += np.bincount(col_key,
+                                        minlength=self._col_counts.size)
+        self._row_counts += np.bincount(row_key,
+                                        minlength=self._row_counts.size)
+
+    def alloc(self) -> None:
+        """Fix (Kc, Kr) from the counts and allocate the padded arrays."""
+        a, b = self.a, self.b
+        self.kc = max(1, int(self._col_counts.max(initial=0)))
+        self.kr = max(1, int(self._row_counts.max(initial=0)))
+        self._arrays = (
+            np.zeros((a, b, self.d_loc, self.kc), np.int32),
+            np.zeros((a, b, self.d_loc, self.kc), np.float32),
+            np.zeros((a, b, self.n_loc, self.kr), np.int32),
+            np.zeros((a, b, self.n_loc, self.kr), np.float32),
+        )
+        self._col_fill = np.zeros_like(self._col_counts)
+        self._row_fill = np.zeros_like(self._row_counts)
+
+    def fill(self, rows: np.ndarray, cols: np.ndarray,
+             vals: np.ndarray) -> None:
+        if self._arrays is None:
+            raise RuntimeError("call alloc() after the counting pass")
+        col_key, row_key, il, jl = self._keys(rows, cols)
+        vals = np.asarray(vals, np.float64)
+        for key, fill, lane_k, dest_i, dest_v, local in (
+            (col_key, self._col_fill, self.kc,
+             self._arrays[0], self._arrays[1], il),
+            (row_key, self._row_fill, self.kr,
+             self._arrays[2], self._arrays[3], jl),
+        ):
+            order = np.argsort(key, kind="stable")   # keep arrival order
+            k_sorted = key[order]
+            lane = fill[k_sorted] + _run_ranks(k_sorted)
+            flat = k_sorted * lane_k + lane
+            dest_i.reshape(-1)[flat] = local[order]
+            dest_v.reshape(-1)[flat] = vals[order]
+            fill += np.bincount(key, minlength=fill.size)
+
+    def finish(self) -> BlockSparse:
+        csc_rows, csc_vals, csr_cols, csr_vals = self._arrays
+        return BlockSparse(
+            csc_rows=jnp.asarray(csc_rows), csc_vals=jnp.asarray(csc_vals),
+            csr_cols=jnp.asarray(csr_cols), csr_vals=jnp.asarray(csr_vals),
+            shape=(self.n, self.d),
+            padded=(self.n_loc * self.a, self.d_loc * self.b),
+        )
+
+
 def build_block_sparse(X: HostCSR, a: int, b: int) -> BlockSparse:
     """Split a HostCSR into an (a × b) block grid of padded layouts."""
     n, d = X.shape
-    n_loc = -(-n // a)
-    d_loc = -(-d // b)
-    n_pad, d_pad = n_loc * a, d_loc * b
-
-    # bucket nnz per block
-    csc_lists = [[[[] for _ in range(d_loc)] for _ in range(b)] for _ in range(a)]
-    csr_lists = [[[[] for _ in range(n_loc)] for _ in range(b)] for _ in range(a)]
-    for i in range(n):
-        ai, il = divmod(i, n_loc)
-        idx, val = X.row(i)
-        for j, v in zip(idx, val):
-            bj, jl = divmod(int(j), d_loc)
-            csc_lists[ai][bj][jl].append((il, v))
-            csr_lists[ai][bj][il].append((jl, v))
-
-    kc = max(1, max(len(c) for ab in csc_lists for blk in ab for c in blk))
-    kr = max(1, max(len(r) for ab in csr_lists for blk in ab for r in blk))
-
-    csc_rows = np.zeros((a, b, d_loc, kc), np.int32)
-    csc_vals = np.zeros((a, b, d_loc, kc), np.float32)
-    csr_cols = np.zeros((a, b, n_loc, kr), np.int32)
-    csr_vals = np.zeros((a, b, n_loc, kr), np.float32)
-    for ai in range(a):
-        for bj in range(b):
-            for jl in range(d_loc):
-                for p, (il, v) in enumerate(csc_lists[ai][bj][jl]):
-                    csc_rows[ai, bj, jl, p] = il
-                    csc_vals[ai, bj, jl, p] = v
-            for il in range(n_loc):
-                for p, (jl, v) in enumerate(csr_lists[ai][bj][il]):
-                    csr_cols[ai, bj, il, p] = jl
-                    csr_vals[ai, bj, il, p] = v
-    return BlockSparse(
-        csc_rows=jnp.asarray(csc_rows), csc_vals=jnp.asarray(csc_vals),
-        csr_cols=jnp.asarray(csr_cols), csr_vals=jnp.asarray(csr_vals),
-        shape=(n, d), padded=(n_pad, d_pad),
-    )
+    rows = np.repeat(np.arange(n, dtype=np.int64), np.diff(X.indptr))
+    asm = BlockAssembler(n, d, a, b)
+    asm.count(rows, X.indices)
+    asm.alloc()
+    asm.fill(rows, X.indices, X.data)
+    return asm.finish()
 
 
 def block_specs(n: int, d: int, a: int, b: int, kc: int, kr: int) -> BlockSparse:
     """ShapeDtypeStruct stand-in for dry-runs (no allocation)."""
-    n_loc, d_loc = -(-n // a), -(-d // b)
+    n_loc, d_loc = block_layout(n, d, a, b)
     f = jax.ShapeDtypeStruct
     return BlockSparse(
         csc_rows=f((a, b, d_loc, kc), jnp.int32),

@@ -1,6 +1,6 @@
 """Distributed DP Frank-Wolfe via shard_map — the paper's mechanism at pod scale.
 
-Layout (DESIGN.md §5): rows → ("pod","data"), features → "model".  Every
+Layout (DESIGN.md §8): rows → ("pod","data"), features → "model".  Every
 device (a, b) holds one BlockSparse block plus:
 
   state        sharding                size/device
@@ -29,27 +29,46 @@ index; shard-then-member Gumbel-max samples exactly softmax(all logits)
 With top-k compression the selection scores lag by the residuals — the same
 stale-but-bounded regime as the paper's Alg-3 queue (documented §Perf).
 
-Everything below is jit-able and dry-runnable: ``build_dist_fw_step`` returns
-a jitted scan over T iterations whose ``.lower().compile()`` on the 16×16 and
-2×16×16 production meshes is exercised by launch/dryrun.py --arch paper-lasso.
+Like the single-device ``jax_sparse`` engine, the program is split into
+
+  ``setup``   the first-iteration dense pass (Alg 2 lines 8-14): one local
+              scatter + one α psum over the row axes — depends only on
+              (X, y, loss), shared by every (λ, ε) problem;
+  ``scan``    T iterations as one lax.scan with **λ, the EM log-weight scale
+              and the PRNG key as traced scalars** — a λ/ε grid re-enters the
+              same compiled executable, and ``solvers.batched`` can vmap the
+              whole sweep where the mesh allows.
+
+``build_dist_fw`` returns both stages (plus their jitted composition) for a
+given abstract block layout; everything is jit-able and dry-runnable — the
+16×16 and 2×16×16 production lowerings are exercised through the registered
+``jax_shard`` backend by launch/dryrun.py --arch paper-lasso.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.dp.accountant import per_step_epsilon
+from repro.core.dp.accountant import em_log_weight_scale
 from repro.core.losses import get_loss
 from repro.distributed.block_sparse import BlockSparse
 
 
 @dataclasses.dataclass(frozen=True)
 class DistFWConfig:
+    """Native config of the distributed engine (the registry's ``jax_shard``
+    backend builds the same program from an ``FWConfig`` instead).
+
+    Private selection draws the exponential mechanism at the per-step budget
+    ``per_step_epsilon(ε, δ, T)`` — the same ``core.dp.accountant`` semantics
+    every other backend uses (equivalence pinned in tests/test_jax_shard.py).
+    """
+
     lam: float = 50.0
     steps: int = 1000
     loss: str = "logistic"
@@ -59,66 +78,85 @@ class DistFWConfig:
     seed: int = 0
     compress_topk: int = 0        # 0 = dense α-delta psum; k = EF-top-k exchange
 
+    def em_scale(self, n_rows: int) -> float:
+        if self.selection != "gumbel":
+            return 1.0
+        return em_log_weight_scale(
+            epsilon=self.epsilon, delta=self.delta, steps=self.steps,
+            n_rows=n_rows, lipschitz=get_loss(self.loss).lipschitz)
+
+
+class DistFW(NamedTuple):
+    """The two jitted stages of one distributed FW program + composition.
+
+    ``setup(blocks, y_pad) -> (v̄₀, q̄₀, α₀)`` — sharded P(rows)/P(rows)/
+    P("model"); ``scan(blocks, v̄₀, q̄₀, α₀, lam, em_scale, key) ->
+    (w, gaps, coords)``; ``whole`` is ``scan ∘ setup`` in one jit (what the
+    dry-run lowers so setup's psum is in the collective audit too).
+    """
+
+    setup: Any
+    scan: Any
+    whole: Any
+
 
 def _row_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
-def distributed_fw(blocks: BlockSparse, y: jnp.ndarray, cfg: DistFWConfig,
-                   mesh: Mesh):
-    """Run T distributed FW iterations. y: (N_pad,) f32 padded with zeros.
+def build_dist_fw(blocks_abs, mesh: Mesh, *, steps: int,
+                  loss: str = "logistic", selection: str = "gumbel",
+                  compress_topk: int = 0) -> DistFW:
+    """Build the (setup, scan, whole) program for one abstract block layout.
 
-    Returns (w, gaps, coords) with w sharded over "model".
+    λ, the EM scale and the PRNG key are *traced* arguments of ``scan`` —
+    the whole (λ, ε)-grid shares one compile.  Shapes, ``steps``,
+    ``selection`` and ``compress_topk`` are baked in.
     """
-    step = build_dist_fw_step(blocks, cfg, mesh)
-    return step(blocks, y)
-
-
-def build_dist_fw_step(blocks_abs, cfg: DistFWConfig, mesh: Mesh):
-    """Build the jitted whole-run function for the given (abstract) blocks."""
     rows = _row_axes(mesh)
-    a_sz = blocks_abs.csc_rows.shape[0]
     b_sz = blocks_abs.csc_rows.shape[1]
     n, d = blocks_abs.shape
     n_pad, d_pad = blocks_abs.padded
+    a_sz = blocks_abs.csc_rows.shape[0]
     n_loc, d_loc = n_pad // a_sz, d_pad // b_sz
-    loss = get_loss(cfg.loss)
-    lam = cfg.lam
-    if cfg.selection == "gumbel":
-        eps_step = per_step_epsilon(cfg.epsilon, cfg.delta, cfg.steps)
-        em_scale = eps_step * n / (2.0 * loss.lipschitz)
-    else:
-        em_scale = 1.0
+    loss_fn = get_loss(loss)
 
     block_spec = P(rows, "model", None, None)
-    in_specs = (
-        BlockSparse(csc_rows=block_spec, csc_vals=block_spec,
-                    csr_cols=block_spec, csr_vals=block_spec,
-                    shape=blocks_abs.shape, padded=blocks_abs.padded),
-        P(rows),                     # y
-    )
-    out_specs = (P("model"), P(), P())
+    blocks_spec = BlockSparse(csc_rows=block_spec, csc_vals=block_spec,
+                              csr_cols=block_spec, csr_vals=block_spec,
+                              shape=blocks_abs.shape, padded=blocks_abs.padded)
 
-    def fw_body(blocks: BlockSparse, y_loc: jnp.ndarray):
+    # ---- setup: first-iteration dense pass (Alg 2 lines 8-14) -------------
+    def setup_body(blocks: BlockSparse, y_loc: jnp.ndarray):
+        csr_c = blocks.csr_cols.reshape(n_loc, -1)     # (N_loc, Kr)
+        csr_v = blocks.csr_vals.reshape(n_loc, -1)
+        vbar0 = jnp.zeros((n_loc,), jnp.float32)
+        qbar0 = loss_fn.split_grad(vbar0)
+        resid_q = (qbar0 - y_loc) / n                  # (N_loc,)
+        alpha_part = jnp.zeros((d_loc,), jnp.float32).at[csr_c.reshape(-1)].add(
+            (resid_q[:, None] * csr_v).reshape(-1))
+        alpha0 = jax.lax.psum(alpha_part, rows)
+        return vbar0, qbar0, alpha0
+
+    setup_sm = shard_map(
+        setup_body, mesh=mesh, in_specs=(blocks_spec, P(rows)),
+        out_specs=(P(rows), P(rows), P("model")), check_rep=False)
+
+    # ---- scan: T iterations, (λ, em_scale, key) traced --------------------
+    def scan_body(blocks: BlockSparse, vbar0, qbar0, alpha0,
+                  lam, em_scale, key):
         csc_r = blocks.csc_rows.reshape(d_loc, -1)     # (D_loc, Kc)
         csc_v = blocks.csc_vals.reshape(d_loc, -1)
         csr_c = blocks.csr_cols.reshape(n_loc, -1)     # (N_loc, Kr)
         csr_v = blocks.csr_vals.reshape(n_loc, -1)
         my_b = jax.lax.axis_index("model")
         col_valid = (my_b * d_loc + jnp.arange(d_loc)) < d
+        lam = jnp.asarray(lam, jnp.float32)
+        em_scale = jnp.asarray(em_scale, jnp.float32)
 
-        # ---- first-iteration dense pass (Alg 2 lines 8-14), fully local + one
-        # ---- α reduction over the row axes
-        vbar0 = jnp.zeros((n_loc,), jnp.float32)
-        qbar0 = loss.split_grad(vbar0)
-        resid_q = (qbar0 - y_loc) / n                  # (N_loc,)
-        alpha_part = jnp.zeros((d_loc,), jnp.float32).at[csr_c.reshape(-1)].add(
-            (resid_q[:, None] * csr_v).reshape(-1))
-        alpha0 = jax.lax.psum(alpha_part, rows)
-
-        def selection(alpha, key_t):
+        def selection_fn(alpha, key_t):
             logits = jnp.where(col_valid, em_scale * jnp.abs(alpha), -jnp.inf)
-            if cfg.selection == "gumbel":
+            if selection == "gumbel":
                 c_me = jax.scipy.special.logsumexp(logits)
                 c_all = jax.lax.all_gather(c_me, "model", tiled=False)  # (B,)
                 kg, km = jax.random.split(key_t)
@@ -138,7 +176,7 @@ def build_dist_fw_step(blocks_abs, cfg: DistFWConfig, mesh: Mesh):
         def iteration(carry, t):
             w_loc, w_m, g_t, vbar, qbar, alpha, resid, key = carry
             key, key_t = jax.random.split(key)
-            mine, j_loc, alpha_j = selection(alpha, key_t)
+            mine, j_loc, alpha_j = selection_fn(alpha, key_t)
 
             # ---- Alg 2 lines 16-21 (replicated scalar math)
             d_tilde = jnp.where(alpha_j == 0, lam, -lam * jnp.sign(alpha_j))
@@ -160,7 +198,8 @@ def build_dist_fw_step(blocks_abs, cfg: DistFWConfig, mesh: Mesh):
             dv = jnp.where(lane_ok, eta * d_tilde * val_j / w_m, 0.0)
             vbar = vbar.at[rows_j].add(dv)
             margins = w_m * vbar[rows_j]
-            gamma = jnp.where(lane_ok, loss.split_grad(margins) - qbar[rows_j], 0.0)
+            gamma = jnp.where(
+                lane_ok, loss_fn.split_grad(margins) - qbar[rows_j], 0.0)
             qbar = qbar.at[rows_j].add(gamma)
 
             # ---- α-shard delta from the touched rows' local columns
@@ -169,9 +208,9 @@ def build_dist_fw_step(blocks_abs, cfg: DistFWConfig, mesh: Mesh):
             vals = jnp.where(lane_ok[:, None], csr_v[rows_j], 0.0)
             delta = jnp.zeros((d_loc,), jnp.float32).at[cols.reshape(-1)].add(
                 (gsc[:, None] * vals).reshape(-1))
-            if cfg.compress_topk:
+            if compress_topk:
                 resid = resid + delta
-                k = cfg.compress_topk
+                k = compress_topk
                 topv, topi = jax.lax.top_k(jnp.abs(resid), k)
                 sent = resid[topi]
                 resid = resid.at[topi].set(0.0)
@@ -195,21 +234,45 @@ def build_dist_fw_step(blocks_abs, cfg: DistFWConfig, mesh: Mesh):
                     (gap, j_global))
 
         carry0 = (
-            jnp.zeros((d_loc,), jnp.float32), jnp.float32(1.0), jnp.float32(0.0),
-            vbar0, qbar0, alpha0, jnp.zeros((d_loc,), jnp.float32),
-            jax.random.PRNGKey(cfg.seed),
+            jnp.zeros((d_loc,), jnp.float32), jnp.float32(1.0),
+            jnp.float32(0.0), vbar0, qbar0, alpha0,
+            jnp.zeros((d_loc,), jnp.float32), key,
         )
-        ts = jnp.arange(1, cfg.steps + 1, dtype=jnp.float32)
+        ts = jnp.arange(1, steps + 1, dtype=jnp.float32)
         (w_loc, w_m, *_), (gaps, coords) = jax.lax.scan(iteration, carry0, ts)
         return w_loc * w_m, gaps, coords
 
-    fn = shard_map(fw_body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                   check_rep=False)
-    return jax.jit(fn)
+    scalar = P()
+    scan_sm = shard_map(
+        scan_body, mesh=mesh,
+        in_specs=(blocks_spec, P(rows), P(rows), P("model"),
+                  scalar, scalar, scalar),
+        out_specs=(P("model"), P(), P()), check_rep=False)
+
+    def whole(blocks, y_pad, lam, em_scale, key):
+        return scan_sm(blocks, *setup_sm(blocks, y_pad), lam, em_scale, key)
+
+    return DistFW(setup=jax.jit(setup_sm), scan=jax.jit(scan_sm),
+                  whole=jax.jit(whole))
+
+
+def distributed_fw(blocks: BlockSparse, y: jnp.ndarray, cfg: DistFWConfig,
+                   mesh: Mesh):
+    """Run T distributed FW iterations. y: (N_pad,) f32 padded with zeros.
+
+    Returns (w, gaps, coords) with w sharded over "model".
+    """
+    prog = build_dist_fw(blocks, mesh, steps=cfg.steps, loss=cfg.loss,
+                         selection=cfg.selection,
+                         compress_topk=cfg.compress_topk)
+    n = blocks.shape[0]
+    return prog.whole(blocks, y, jnp.float32(cfg.lam),
+                      jnp.float32(cfg.em_scale(n)),
+                      jax.random.PRNGKey(cfg.seed))
 
 
 def dist_fw_shardings(blocks_abs, mesh: Mesh):
-    """NamedShardings matching build_dist_fw_step's in_specs (for dry-run)."""
+    """NamedShardings matching build_dist_fw's block/label in_specs (dry-run)."""
     rows = _row_axes(mesh)
     bs = NamedSharding(mesh, P(rows, "model", None, None))
     return (

@@ -1,0 +1,98 @@
+"""Single-device straight-line oracle for the ``jax_shard`` schedule.
+
+``reference_fw`` replays the distributed Frank-Wolfe iteration of
+``fw_shard`` on a 1×1 block grid with *direct global indexing* — no
+shard_map, no collectives, no winner masking: every ``psum`` becomes the
+identity, the shard-then-member Gumbel-max collapses to one in-shard draw
+(the B=1 big step is a no-op by construction), and the same
+``jax.random`` key schedule is consumed, so the selected coordinates are
+bit-identical when the collective schedule is correct.
+
+This is the "host oracle" the 1×1-mesh parity tests pin the registered
+backend against for the *private* path, where cross-implementation parity
+with ``fw_sparse`` is impossible (different RNG realizations of the same
+exponential-mechanism law).  The non-private path is additionally pinned
+against ``fw_sparse``'s exact fib-heap argmax in the same tests — a true
+cross-implementation check.
+
+Runs eagerly (Python loop over T) on purpose: a separately-compiled replay
+would share XLA's op fusion with the scan under test; eager execution gives
+an independently-rounded trajectory, and coords must still match exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import get_loss
+from repro.distributed.block_sparse import BlockSparse
+
+
+def reference_fw(blocks: BlockSparse, y_pad: jnp.ndarray, *, lam: float,
+                 steps: int, selection: str = "gumbel",
+                 em_scale: float = 1.0, seed: int = 0,
+                 loss: str = "logistic"):
+    """(w, gaps, coords) of the fw_shard schedule on a 1×1 grid, eagerly."""
+    if blocks.grid != (1, 1):
+        raise ValueError("reference_fw replays the single-device schedule; "
+                         f"got a {blocks.grid} grid")
+    loss_fn = get_loss(loss)
+    csc_r, csc_v = blocks.csc_rows[0, 0], blocks.csc_vals[0, 0]
+    csr_c, csr_v = blocks.csr_cols[0, 0], blocks.csr_vals[0, 0]
+    n, d = blocks.shape
+    n_pad, d_pad = blocks.padded
+    col_valid = jnp.arange(d_pad) < d
+    lam = jnp.float32(lam)
+    em_scale = jnp.float32(em_scale)
+
+    # setup (Alg 2 lines 8-14)
+    vbar = jnp.zeros((n_pad,), jnp.float32)
+    qbar = loss_fn.split_grad(vbar)
+    resid_q = (qbar - y_pad) / n
+    alpha = jnp.zeros((d_pad,), jnp.float32).at[csr_c.reshape(-1)].add(
+        (resid_q[:, None] * csr_v).reshape(-1))
+
+    w = jnp.zeros((d_pad,), jnp.float32)
+    w_m = jnp.float32(1.0)
+    g_t = jnp.float32(0.0)
+    key = jax.random.PRNGKey(seed)
+    gaps, coords = [], []
+    for step in range(1, steps + 1):
+        t = jnp.float32(step)
+        key, key_t = jax.random.split(key)
+        logits = jnp.where(col_valid, em_scale * jnp.abs(alpha), -jnp.inf)
+        if selection == "gumbel":
+            _, km = jax.random.split(key_t)       # kg draws the B=1 big step
+            km = jax.random.fold_in(km, 0)
+            j = jnp.argmax(logits + jax.random.gumbel(km, (d_pad,)))
+        else:
+            j = jnp.argmax(logits)
+        a_j = alpha[j]
+
+        d_tilde = jnp.where(a_j == 0, lam, -lam * jnp.sign(a_j))
+        gaps.append(g_t - d_tilde * a_j)
+        coords.append(j)
+        eta = 2.0 / (t + 2.0)
+        w_m = w_m * (1.0 - eta)
+        w = w.at[j].add(eta * d_tilde / w_m)
+        g_t = g_t * (1.0 - eta) + eta * d_tilde * a_j
+
+        rows_j, val_j = csc_r[j], csc_v[j]
+        lane_ok = val_j != 0.0
+        dv = jnp.where(lane_ok, eta * d_tilde * val_j / w_m, 0.0)
+        vbar = vbar.at[rows_j].add(dv)
+        margins = w_m * vbar[rows_j]
+        gamma = jnp.where(lane_ok, loss_fn.split_grad(margins) - qbar[rows_j],
+                          0.0)
+        qbar = qbar.at[rows_j].add(gamma)
+
+        gsc = gamma / n
+        cols = csr_c[rows_j]
+        vals = jnp.where(lane_ok[:, None], csr_v[rows_j], 0.0)
+        delta = jnp.zeros((d_pad,), jnp.float32).at[cols.reshape(-1)].add(
+            (gsc[:, None] * vals).reshape(-1))
+        alpha = alpha + delta
+
+        dots = jnp.sum(vals * w[cols], axis=1)
+        g_t = g_t + jnp.sum(gsc * dots) * w_m
+    return w * w_m, jnp.stack(gaps), jnp.stack(coords)

@@ -19,6 +19,7 @@ from repro.launch import sharding as shd                           # noqa: E402
 from repro.models.registry import (                                # noqa: E402
     cache_specs, get_model, input_specs, supported_cells)
 from repro.models.config import SHAPES                             # noqa: E402
+from repro.roofline.hlo import cost_analysis_dict                  # noqa: E402
 from repro.train.optimizer import get_optimizer                    # noqa: E402
 from repro.train.trainer import TrainConfig, TrainState, make_train_step  # noqa: E402
 
@@ -240,29 +241,20 @@ def collective_bytes(hlo_text: str):
 
 
 def build_lasso(dataset: str, mesh, log, steps: int = 50):
-    """The paper's own workload: distributed DP-FW on a Table-2-sized design
-    matrix (ShapeDtypeStruct stand-ins — no allocation).  Block padding (Kc,
-    Kr) uses the dataset's average sparsity ×4 (a generous skew allowance)."""
+    """The paper's own workload: the registered ``jax_shard`` backend's
+    whole-run program on a Table-2-sized design matrix (ShapeDtypeStruct
+    stand-ins — no allocation).  Block padding (Kc, Kr) uses the dataset's
+    average sparsity ×4 (a generous skew allowance)."""
     from repro.configs.paper_lasso import DATASETS
-    from repro.distributed.block_sparse import block_specs
-    from repro.distributed.fw_shard import (
-        DistFWConfig, build_dist_fw_step, dist_fw_shardings)
+    from repro.core.solvers.jax_shard import shard_lowering
 
     ds = DATASETS[dataset]
-    rows = 1
-    for ax in ("pod", "data"):
-        if ax in mesh.axis_names:
-            rows *= dict(zip(mesh.axis_names, mesh.devices.shape))[ax]
-    cols = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    rows = sizes.get("pod", 1) * sizes.get("data", 1)
+    cols = sizes["model"]
     kc = max(8, int(ds.n * (ds.nnz_per_row / ds.d) / rows * 4))   # rows/col/block
     kr = max(8, int(ds.nnz_per_row / cols * 4))                    # cols/row/block
-    blocks_abs = block_specs(ds.n, ds.d, rows, cols, kc, kr)
-    cfg = DistFWConfig(lam=50.0, steps=steps, selection="gumbel", epsilon=0.1)
-    step = build_dist_fw_step(blocks_abs, cfg, mesh)
-    b_shd, y_shd = dist_fw_shardings(blocks_abs, mesh)
-    y_abs = jax.ShapeDtypeStruct((blocks_abs.padded[0],), jnp.float32)
-    jitted = jax.jit(step, in_shardings=(b_shd, y_shd))
-    return jitted, (blocks_abs, y_abs)
+    return shard_lowering(ds.n, ds.d, mesh, steps=steps, kc=kc, kr=kr)
 
 
 def _layer_points(arch: str):
@@ -316,7 +308,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             for tag, (l, ov) in (("l1", (l1, ov1)), ("l2", (l2, ov2))):
                 j, a = _build(arch, shape_name, mesh, [], overrides=ov)
                 c = j.lower(*a).compile()
-                ca = c.cost_analysis() or {}
+                ca = cost_analysis_dict(c)
                 pts[tag] = {"layers": l,
                             "flops": float(ca.get("flops", 0)),
                             "bytes": float(ca.get("bytes accessed", 0))}
@@ -325,7 +317,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     t1 = time.time()
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     from repro.roofline.hlo import collective_bytes_nested
     coll = collective_bytes_nested(hlo)

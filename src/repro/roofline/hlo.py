@@ -22,6 +22,15 @@ _DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
                 "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
                 "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
 
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized across jax versions (older
+    releases return a one-element list of per-device dicts, newer a dict)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return cost or {}
+
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 # headers like: %region_0.1_spmd (param: (s32[], f32[16,64])) -> (...) {
 # — params may contain NESTED parens (tuple-typed while state), so match

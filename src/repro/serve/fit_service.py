@@ -20,8 +20,13 @@ design matrix (the hyperparameter-sweep traffic pattern of Khanna et al.).
     and chops each group to at most ``slots`` configs — the compiled-batch
     width, directly analogous to the serving engine's decode-slot count;
   * **drain** runs each slot-batch through ``solve_many`` (one vmapped scan
-    per ``jax_sparse`` batch, data coerced once at service construction) and
-    stamps per-request latency.
+    per ``jax_sparse`` batch; ``jax_shard`` batches share one setup +
+    compiled scan on their mesh).  Each backend's data layout is coerced
+    once per service lifetime — the service owns the ``prepared`` cache
+    ``solve_many`` fills — so per-request ``backend=`` selection (e.g. a
+    ``jax_shard`` scale-out fit next to ``jax_sparse`` traffic) costs no
+    repeated conversions and changes nothing about ε-accounting: admission
+    charges by the *resolved* queue name, whatever engine realizes it.
 
 Everything is synchronous single-controller, like ``ServingEngine``: the
 host loop is the scheduler, each drained batch is one XLA program.
@@ -73,16 +78,21 @@ class FitService:
                  config: FitServiceConfig = FitServiceConfig()):
         if config.slots < 1:
             raise ValueError("slots must be >= 1")
-        # Coerce to the padded device layout once at construction: identity
-        # for the vmapped jax backends, O(nnz) rebuild for host fallbacks —
-        # no request ever re-pays the dense→sparse conversion.  A
-        # DatasetStore/DatasetRef X supplies its own labels and resolves to a
-        # PreparedDataset, so the padded arrays AND the fw_setup state are
-        # cached across every drain (and, via the store's cache/ dir, across
-        # service restarts).
+        # Resolve the data source once and coerce each backend layout once
+        # per service lifetime: ``self._coerced`` is the caller-owned cache
+        # ``solve_many`` fills lazily (padded is pre-warmed here — the common
+        # case), so no request ever re-pays a conversion.  Keeping the
+        # *resolved source* (not just one coerced layout) is what lets a
+        # per-request ``backend=`` choose its own layout — a jax_shard
+        # request against a DatasetStore maps shards onto BlockSparse blocks
+        # through the store's content-hash-guarded block cache, while
+        # jax_sparse requests keep the PreparedDataset padded/setup caches
+        # (both persist across service restarts via the store's cache/ dir).
         from repro.core.solvers.registry import as_padded, resolve_data
         X, y = resolve_data(X, y)
-        self.X = as_padded(X)
+        self._source = X
+        self._coerced: Dict[str, object] = {"padded": as_padded(X)}
+        self.X = self._coerced["padded"]   # kept for introspection/back-compat
         self.y = y
         self.accountants: Dict[str, PrivacyAccountant] = dict(accountants or {})
         self.cfg = config
@@ -208,7 +218,9 @@ class FitService:
     def _drain(self, batch: List[FitRequest]) -> None:
         t0 = time.time()
         try:
-            results = solve_many(self.X, self.y, [r.config for r in batch])
+            results = solve_many(self._source, self.y,
+                                 [r.config for r in batch],
+                                 prepared=self._coerced)
         except Exception as e:  # noqa: BLE001 — one bad batch must not
             # strand the rest of the queue.  The charged budget is NOT
             # refunded: admission cannot prove how far the mechanism got

@@ -1,5 +1,10 @@
 """Distributed Frank-Wolfe (shard_map, 2×2 mesh in a subprocess — jax device
-count is locked at first init, so multi-device runs get their own process)."""
+count is locked at first init, so multi-device runs get their own process).
+
+The non-private solve goes through the *registry* (``backend="jax_shard"``,
+``mesh=(2, 2)``) so the full production path — ShardSource coercion → block
+build → setup/scan programs — is exercised on a genuinely sharded mesh, not
+just the 1×1 parity harness of test_jax_shard.py."""
 import json
 import subprocess
 import sys
@@ -28,13 +33,14 @@ y_pad = jnp.zeros(blocks.padded[0], jnp.float32).at[:len(y)].set(
     jnp.asarray(y, jnp.float32))
 
 out = {}
-with mesh:
-    w, gaps, coords = distributed_fw(
-        blocks, y_pad, DistFWConfig(lam=8.0, steps=80, selection="argmax"), mesh)
+from repro.core.solvers import FWConfig, solve
+res = solve(X, y, FWConfig(backend="jax_shard", mesh=(2, 2), lam=8.0,
+                           steps=80))
 host = sparse_fw(X, y, lam=8.0, steps=80, queue="fib_heap")
-out["coords_match"] = bool((np.asarray(coords) == np.asarray(host.coords)).all())
-out["w_maxdiff"] = float(np.abs(np.asarray(w)[:400] - np.asarray(host.w)).max())
-out["gap_dist"] = float(gaps[-1])
+out["coords_match"] = bool(
+    (np.asarray(res.coords) == np.asarray(host.coords)).all())
+out["w_maxdiff"] = float(np.abs(np.asarray(res.w) - np.asarray(host.w)).max())
+out["gap_dist"] = float(res.gaps[-1])
 out["gap_host"] = float(host.gaps[-1])
 
 with mesh:

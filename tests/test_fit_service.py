@@ -172,11 +172,11 @@ def test_fit_service_drain_failure_does_not_strand_queue(service_problem, monkey
     real_solve_many = fs.solve_many
     calls = {"n": 0}
 
-    def flaky_solve_many(X, y, configs):
+    def flaky_solve_many(X, y, configs, **kwargs):
         calls["n"] += 1
         if calls["n"] == 1:
             raise RuntimeError("injected solver crash")
-        return real_solve_many(X, y, configs)
+        return real_solve_many(X, y, configs, **kwargs)
 
     monkeypatch.setattr(fs, "solve_many", flaky_solve_many)
     for i, lam in enumerate((4.0, 8.0, 16.0, 32.0)):   # 2 batches of 2

@@ -1,0 +1,241 @@
+"""``jax_shard`` backend: registry wiring, 1×1-mesh parity, ε unification.
+
+Parity logic (DESIGN.md §8): on a 1×1 mesh every collective in the sharded
+schedule is the identity, so the backend must reproduce single-device
+oracles *exactly* —
+
+  * non-private: identical coordinate steps to ``host_sparse``'s exact
+    fib-heap argmax (true cross-implementation parity, the same bar the
+    other Alg-2 engines meet);
+  * private: identical coordinates to ``distributed.reference.reference_fw``,
+    the straight-line replay of the schedule with the same key stream
+    (cross-implementation parity is impossible for DP draws — equal *law*,
+    different realization — so the oracle pins the collective plumbing:
+    winner masking, psums, global-id reconstruction).
+
+The grid/FitService tests then pin the batched and serving paths onto the
+same trajectories, and the ε tests pin the distributed engine's (ε, δ, T)
+semantics to ``core.dp.accountant`` so the two private paths cannot drift.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.solvers import (FWConfig, available_backends, get_backend,
+                                grid, resolve_queue, solve, solve_many)
+
+
+@pytest.fixture(scope="module")
+def shard_problem():
+    from repro.data.synthetic import make_sparse_classification
+    X, y, _ = make_sparse_classification(n=120, d=400, nnz_per_row=10,
+                                         informative=15, seed=5)
+    return X, y
+
+
+# ---------------------------------------------------------------------------
+# registry wiring
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_jax_shard():
+    assert "jax_shard" in available_backends()
+    backend = get_backend("jax_shard")
+    assert backend.data_format == "blocks"
+    # one config retargets across engines: DP names → gumbel, exact → argmax
+    assert resolve_queue(backend, FWConfig(queue="bsls")).queue == "gumbel"
+    assert resolve_queue(backend, FWConfig(queue="two_level")).queue == "gumbel"
+    assert resolve_queue(backend, FWConfig(queue="fib_heap")).queue == "argmax"
+    assert resolve_queue(backend, FWConfig(queue="group_argmax")).queue == "argmax"
+    with pytest.raises(ValueError, match="does not support queue"):
+        resolve_queue(backend, FWConfig(queue="noisy_max"))
+
+
+def test_mesh_must_fit_devices(shard_problem):
+    X, y = shard_problem
+    with pytest.raises(ValueError, match="devices"):
+        solve(X, y, FWConfig(backend="jax_shard", steps=2, mesh=(64, 64)))
+
+
+def test_grid_treats_mesh_spec_as_scalar():
+    cfgs = grid(backend="jax_shard", mesh=(1, 1), lam=(4.0, 8.0))
+    assert len(cfgs) == 2 and all(c.mesh == (1, 1) for c in cfgs)
+    swept = grid(backend="jax_shard", mesh=((1, 1), (2, 2)))
+    assert [c.mesh for c in swept] == [(1, 1), (2, 2)]
+
+
+# ---------------------------------------------------------------------------
+# 1×1-mesh parity vs host oracles
+# ---------------------------------------------------------------------------
+
+
+def test_nonprivate_parity_vs_host_sparse(shard_problem):
+    """Identity collectives ⇒ the sharded engine is the host Alg 2 exactly."""
+    X, y = shard_problem
+    cfg = FWConfig(lam=8.0, steps=60)
+    shard = solve(X, y, dataclasses.replace(cfg, backend="jax_shard"))
+    host = solve(X, y, dataclasses.replace(cfg, backend="host_sparse"))
+    np.testing.assert_array_equal(np.asarray(shard.coords),
+                                  np.asarray(host.coords))
+    np.testing.assert_allclose(np.asarray(shard.w), np.asarray(host.w),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(shard.gaps), np.asarray(host.gaps),
+                               atol=1e-4)
+
+
+def test_private_parity_vs_reference(shard_problem):
+    """The DP path replays the straight-line oracle coordinate-for-coordinate."""
+    import jax.numpy as jnp
+
+    from repro.core.solvers.jax_shard import shard_em_scale
+    from repro.distributed.block_sparse import build_block_sparse
+    from repro.distributed.reference import reference_fw
+
+    X, y = shard_problem
+    n, d = X.shape
+    cfg = resolve_queue(get_backend("jax_shard"),
+                        FWConfig(backend="jax_shard", lam=8.0, steps=40,
+                                 queue="bsls", epsilon=1.0, delta=1e-6,
+                                 seed=3))
+    res = solve(X, y, cfg)
+    blocks = build_block_sparse(X, 1, 1)
+    y_pad = jnp.zeros(blocks.padded[0], jnp.float32).at[:n].set(
+        jnp.asarray(y, jnp.float32))
+    w_ref, gaps_ref, coords_ref = reference_fw(
+        blocks, y_pad, lam=8.0, steps=40, selection="gumbel",
+        em_scale=shard_em_scale(cfg, n), seed=3)
+    np.testing.assert_array_equal(np.asarray(res.coords),
+                                  np.asarray(coords_ref))
+    np.testing.assert_allclose(np.asarray(res.w), np.asarray(w_ref)[:d],
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(res.gaps), np.asarray(gaps_ref),
+                               atol=1e-5)
+    assert len(set(np.asarray(res.coords).tolist())) > 5   # EM explores
+
+
+# ---------------------------------------------------------------------------
+# batched grid + store + service
+# ---------------------------------------------------------------------------
+
+
+def test_solve_many_grid_parity(shard_problem):
+    """The vmapped sweep takes the same steps as sequential re-entries."""
+    X, y = shard_problem
+    configs = grid(FWConfig(backend="jax_shard", steps=25, queue="bsls",
+                            delta=1e-6),
+                   lam=(4.0, 8.0), epsilon=(0.5, 2.0), seed=(0, 1))
+    assert len(configs) == 8
+    batched = solve_many(X, y, configs)
+    for cfg, b in zip(configs, batched):
+        s = solve(X, y, cfg)
+        np.testing.assert_array_equal(np.asarray(b.coords),
+                                      np.asarray(s.coords))
+        np.testing.assert_allclose(np.asarray(b.w), np.asarray(s.w),
+                                   atol=1e-5)
+
+
+def test_solve_from_dataset_ref_with_block_cache(shard_problem, tmp_path):
+    from repro.data.store import DatasetRef, DatasetStore
+
+    X, y = shard_problem
+    root = str(tmp_path / "store")
+    DatasetStore.from_arrays(root, X, y, rows_per_shard=48)  # 3 shards
+    cfg = FWConfig(backend="jax_shard", lam=8.0, steps=30)
+    mem = solve(X, y, cfg)
+    ref = solve(DatasetRef(path=root), config=cfg)           # labels from store
+    np.testing.assert_array_equal(np.asarray(ref.coords),
+                                  np.asarray(mem.coords))
+    np.testing.assert_allclose(np.asarray(ref.w), np.asarray(mem.w),
+                               atol=1e-6)
+    # the block layout persisted under cache/ and replays on a fresh open
+    assert os.path.exists(os.path.join(root, "cache", "blocks-1x1-meta.json"))
+    store = DatasetStore.open(root)
+    cached = store.blocks_load(1, 1)
+    assert cached is not None and cached.shape == X.shape
+    warm = solve(store, config=cfg)
+    np.testing.assert_array_equal(np.asarray(warm.coords),
+                                  np.asarray(mem.coords))
+
+
+def test_fit_service_from_store_on_jax_shard(shard_problem, tmp_path):
+    """Mixed jax_shard/jax_sparse traffic against one store: per-request
+    backend selection with unchanged ε-accounting."""
+    from repro.core.dp.accountant import PrivacyAccountant
+    from repro.data.store import DatasetStore
+    from repro.serve.fit_service import FitRequest, FitService
+
+    X, y = shard_problem
+    store = DatasetStore.from_arrays(str(tmp_path / "store"), X, y)
+    svc = FitService(store, accountants={
+        "acme": PrivacyAccountant(epsilon=4.0, delta=1e-6, total_steps=4000)})
+    reqs = [
+        FitRequest(0, "acme", FWConfig(backend="jax_shard", lam=8.0, steps=20,
+                                       queue="bsls", epsilon=1.0, delta=1e-6)),
+        FitRequest(1, "acme", FWConfig(backend="jax_sparse", lam=8.0, steps=20,
+                                       queue="bsls", epsilon=1.0, delta=1e-6)),
+        FitRequest(2, "acme", FWConfig(backend="jax_shard", lam=8.0, steps=20)),
+        FitRequest(3, "noone", FWConfig(backend="jax_shard", lam=8.0, steps=20,
+                                        queue="bsls", epsilon=1.0,
+                                        delta=1e-6)),
+    ]
+    for r in reqs:
+        svc.submit(r)
+    done = svc.run()
+    by_uid = {r.uid: r for r in done}
+    assert by_uid[0].status == "done" and by_uid[1].status == "done"
+    assert by_uid[2].status == "done"                 # non-private: no budget
+    assert by_uid[3].status == "rejected"             # unknown tenant
+    # both private fits charged the same accountant currency
+    acct = svc.accountants["acme"]
+    assert acct.spent_steps == 2 * svc._charged_steps(acct, by_uid[0].config)
+    # the drained jax_shard result equals a direct solve on the same store
+    direct = solve(store, config=by_uid[2].config)
+    np.testing.assert_array_equal(np.asarray(by_uid[2].result.coords),
+                                  np.asarray(direct.coords))
+
+
+# ---------------------------------------------------------------------------
+# (ε, δ, T) unification across the private engines
+# ---------------------------------------------------------------------------
+
+
+def test_em_scale_semantics_pinned(shard_problem):
+    """One accountant formula behind every private selection path."""
+    import math
+
+    from repro.core.dp.accountant import (em_log_weight_scale,
+                                          per_step_epsilon)
+    from repro.core.losses import get_loss
+    from repro.core.solvers.jax_shard import shard_em_scale
+    from repro.core.solvers.jax_sparse import em_scale_for
+    from repro.distributed.fw_shard import DistFWConfig
+
+    n, eps, delta, steps = 2048, 0.7, 1e-6, 500
+    lip = get_loss("logistic").lipschitz
+    expected = per_step_epsilon(eps, delta, steps) * n / (2.0 * lip)
+    assert expected == pytest.approx(
+        eps / math.sqrt(8.0 * steps * math.log(1.0 / delta)) * n / (2 * lip))
+    # the shared helper
+    assert em_log_weight_scale(epsilon=eps, delta=delta, steps=steps,
+                               n_rows=n, lipschitz=lip) == expected
+    # the single-device two-level sampler (native queue of jax_sparse)
+    sparse_cfg = resolve_queue(
+        get_backend("jax_sparse"),
+        FWConfig(backend="jax_sparse", queue="bsls", epsilon=eps, delta=delta,
+                 steps=steps))
+    assert em_scale_for(sparse_cfg, n) == expected
+    # the distributed gumbel schedule, via FWConfig and via DistFWConfig
+    shard_cfg = resolve_queue(
+        get_backend("jax_shard"),
+        FWConfig(backend="jax_shard", queue="bsls", epsilon=eps, delta=delta,
+                 steps=steps))
+    assert shard_em_scale(shard_cfg, n) == expected
+    assert DistFWConfig(epsilon=eps, delta=delta, steps=steps).em_scale(n) \
+        == expected
+    # non-private rules never scale priorities
+    assert em_scale_for(dataclasses.replace(sparse_cfg, queue="group_argmax"),
+                        n) == 1.0
+    assert shard_em_scale(dataclasses.replace(shard_cfg, queue="argmax"),
+                          n) == 1.0
