@@ -1,0 +1,174 @@
+"""Perf gate — diff fresh BENCH_*.json against committed baselines.
+
+Nothing in CI used to *fail* when a bench regressed, which is how the
+batched sweep shipped (and stayed) slower than the sequential loop.  This
+gate makes performance an invariant:
+
+  * **parity/correctness flags** (every ``pass_*`` key) must be True — these
+    are machine-independent statements about iterates, never timings;
+  * **absolute floors** hold on any machine because they are dimensionless
+    ratios of two timings taken on the *same* machine in the *same* run
+    (e.g. ``sweep_speedup ≥ 1.0``: the gap-adaptive scheduler must never be
+    slower than the naive fixed-T loop it replaces);
+  * **relative bands** compare those ratios against the committed baseline
+    with generous noise margins (CI containers are noisy; a 2× drift in a
+    speedup ratio is a regression, a 20% wobble is weather).
+
+Usage:
+
+    python -m benchmarks.check                   # gate fresh vs baselines
+    python -m benchmarks.check --mode full       # nightly: skip relative
+                                                 # bands (baselines are
+                                                 # --fast-mode numbers)
+    python -m benchmarks.check --update          # refresh baselines from
+                                                 # the fresh JSONs (commit
+                                                 # the diff deliberately)
+
+Exit status is non-zero on any violation; every violation is printed.
+docs/BENCHMARKS.md §Perf-gate documents the refresh procedure.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import shutil
+import sys
+from typing import List, Optional
+
+BASELINE_DIR = pathlib.Path(__file__).parent / "baselines"
+
+# rule kinds: ("flags",) | ("min"|"max", metric, bound)
+#           | ("rel_min"|"rel_max", metric, factor)   [skipped in full mode]
+SPEC = {
+    "BENCH_sweep.json": [
+        ("flags",),
+        # the tentpole invariant: gap-adaptive batched scheduling must beat
+        # the fixed-T sequential loop on every dataset
+        ("min", "sweep_speedup", 1.0),
+        ("rel_min", "sweep_speedup", 0.5),
+    ],
+    "BENCH_shard.json": [
+        ("flags",),
+        # jax_shard per-iter cost relative to jax_sparse on the 1×1 CPU mesh
+        # (lower is better; ratio of same-run timings)
+        ("rel_max", "shard_over_sparse", 3.0),
+    ],
+    "BENCH_ingest.json": [
+        ("flags",),
+        # warm store opens must keep skipping the setup sweep
+        ("min", "warm_setup_speedup", 2.0),
+        ("rel_min", "warm_setup_speedup", 0.25),
+    ],
+}
+
+
+def _rows(doc: dict):
+    return (doc.get("datasets") or {}).items()
+
+
+def check_bench(name: str, fresh: dict, baseline: Optional[dict],
+                mode: str) -> List[str]:
+    """All violations of ``name``'s rules (empty list = gate passes)."""
+    errors = []
+    base_rows = dict(_rows(baseline)) if baseline else {}
+    for ds, row in _rows(fresh):
+        base = base_rows.get(ds, {})
+        for rule in SPEC[name]:
+            kind = rule[0]
+            if kind == "flags":
+                for k, v in row.items():
+                    if k.startswith("pass") and v is not True:
+                        errors.append(f"{name}:{ds}: flag {k} is {v!r}")
+                continue
+            _, metric, bound = rule
+            got = row.get(metric)
+            if got is None:
+                errors.append(f"{name}:{ds}: metric {metric} missing")
+                continue
+            if kind == "min" and got < bound:
+                errors.append(
+                    f"{name}:{ds}: {metric}={got} below floor {bound}")
+            elif kind == "max" and got > bound:
+                errors.append(
+                    f"{name}:{ds}: {metric}={got} above ceiling {bound}")
+            elif kind in ("rel_min", "rel_max"):
+                if mode == "full":
+                    continue            # baselines are --fast numbers
+                ref = base.get(metric)
+                if ref is None:
+                    continue            # new dataset/metric: absolute rules
+                                        # still applied above
+                if kind == "rel_min" and got < ref * bound:
+                    errors.append(
+                        f"{name}:{ds}: {metric}={got} < {bound}× baseline "
+                        f"({ref})")
+                if kind == "rel_max" and got > ref * bound:
+                    errors.append(
+                        f"{name}:{ds}: {metric}={got} > {bound}× baseline "
+                        f"({ref})")
+    # a bench that silently dropped a baseline dataset is also a regression
+    for ds in base_rows:
+        if ds not in dict(_rows(fresh)):
+            errors.append(f"{name}: baseline dataset {ds!r} missing from "
+                          f"fresh results")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh-dir", default=".",
+                    help="directory holding the freshly produced "
+                         "BENCH_*.json files")
+    ap.add_argument("--baseline-dir", default=str(BASELINE_DIR))
+    ap.add_argument("--mode", choices=("fast", "full"), default="fast",
+                    help="full = nightly non-fast benches: relative bands "
+                         "vs the --fast baselines are skipped")
+    ap.add_argument("--update", action="store_true",
+                    help="copy fresh JSONs over the baselines instead of "
+                         "gating (then commit the diff)")
+    args = ap.parse_args(argv)
+
+    fresh_dir = pathlib.Path(args.fresh_dir)
+    base_dir = pathlib.Path(args.baseline_dir)
+    if args.update:
+        base_dir.mkdir(parents=True, exist_ok=True)
+        updated = 0
+        for name in SPEC:
+            src = fresh_dir / name
+            if src.exists():
+                shutil.copy(src, base_dir / name)
+                print(f"[check] baseline updated: {base_dir / name}")
+                updated += 1
+        if updated == 0:
+            print(f"[check] no fresh BENCH_*.json found in {fresh_dir} — "
+                  "nothing updated; run `python -m benchmarks.run` first")
+            return 2
+        return 0
+
+    all_errors, checked = [], 0
+    for name in SPEC:
+        src = fresh_dir / name
+        if not src.exists():
+            print(f"[check] {name}: not present, skipped")
+            continue
+        fresh = json.loads(src.read_text())
+        base_path = base_dir / name
+        baseline = (json.loads(base_path.read_text())
+                    if base_path.exists() else None)
+        errors = check_bench(name, fresh, baseline, args.mode)
+        checked += 1
+        status = "OK" if not errors else f"{len(errors)} violation(s)"
+        print(f"[check] {name}: {status}")
+        all_errors.extend(errors)
+    for e in all_errors:
+        print(f"  FAIL {e}")
+    if checked == 0:
+        print("[check] nothing to check — run `python -m benchmarks.run` "
+              "first")
+        return 2
+    return 1 if all_errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

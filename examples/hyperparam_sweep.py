@@ -3,9 +3,10 @@
     PYTHONPATH=src python examples/hyperparam_sweep.py
 
 Part 1 — the sweep API: a 4λ × 2ε grid of DP-LASSO problems over one sparse
-design matrix runs as a *single* vmapped lax.scan through the jax_sparse
-kernel pipeline (``solve_many``), instead of eight sequential solves, and
-prints the paper-style accuracy/sparsity frontier.
+design matrix runs through ``solve_many`` on one shared coercion + setup +
+compiled lax.scan of the jax_sparse kernel pipeline — vmapped or re-entered
+sequentially, whichever the cost-model planner says is faster here (DESIGN.md
+§9) — and prints the paper-style accuracy/sparsity frontier.
 
 Part 2 — the serving API: the same grid arrives as tenant fit requests on a
 ``FitService``; each tenant's ``PrivacyAccountant`` is charged per request,
@@ -44,7 +45,8 @@ configs = grid(FWConfig(backend="jax_sparse", steps=args.steps, queue="bsls",
 t0 = time.time()
 results = solve_many(X, y, configs)
 print(f"\nsolve_many: {len(configs)} configs in {time.time() - t0:.1f}s "
-      f"(one compile, one vmapped scan)\n")
+      f"(one coercion + one setup + one compiled scan, scheduled by the "
+      f"planner)\n")
 print(f"{'λ':>6} {'ε':>5} {'gap_T':>9} {'nnz':>5} {'acc':>6} {'zeros%':>7}")
 for cfg, res in zip(configs, results):
     w = np.asarray(res.w)

@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dp.accountant import fw_noise_scale, per_step_epsilon
-from repro.core.solvers.config import FWConfig, FWResult  # noqa: F401  (canonical home; re-exported for compat)
+from repro.core.solvers.config import (STOP_MAX_STEPS,  # noqa: F401  (canonical home; re-exported for compat)
+                                       FWConfig, FWResult)
 from repro.core.sparse.formats import PaddedCSR
 
 Design = Union[jnp.ndarray, PaddedCSR]
@@ -44,12 +45,13 @@ def _n_cols(X: Design) -> int:
     return X.shape[1]
 
 
-def dense_fw(X: Design, y: jnp.ndarray, config: FWConfig) -> FWResult:
-    """Run Algorithm 1 for ``config.steps`` iterations.
+def _dense_step(X: Design, y: jnp.ndarray, config: FWConfig, masked: bool):
+    """One Algorithm-1 iteration as a scan body over the extended carry
+    ``(w, key, done, stop_at)``.
 
-    Mean-normalized objective (1/N)Σ L(w·xᵢ, yᵢ); selection scores are
-    λ·|α⁽ʲ⁾| with sensitivity Δu = λ·L/N, so DP noise scales follow the
-    paper's formulas exactly (see core/dp/accountant.py).
+    With ``masked`` (the §9 early-stopping form) the iteration that observes
+    gap ≤ gap_tol is still applied, after which the carry — PRNG key included
+    — freezes bit-for-bit and the outputs emit (0.0, -1, 0.0) sentinels.
     """
     loss = config.loss_fn()
     n, d = _n_rows(X), _n_cols(X)
@@ -69,9 +71,10 @@ def dense_fw(X: Design, y: jnp.ndarray, config: FWConfig) -> FWResult:
 
     ybar = _rmatvec(X, y) / n  # precomputed label part of the gradient
 
-    def step(carry, t):
-        w, key = carry
-        key, sel_key = jax.random.split(key)
+    def step(carry, t_int):
+        w, key, done, stop_at = carry
+        t = t_int.astype(jnp.float32)
+        key_next, sel_key = jax.random.split(key)
         v = _matvec(X, w)                        # O(N·S_c)
         q = loss.split_grad(v)                   # O(N)
         alpha = _rmatvec(X, q) / n - ybar        # O(N·S_c) + O(D)
@@ -96,19 +99,87 @@ def dense_fw(X: Design, y: jnp.ndarray, config: FWConfig) -> FWResult:
         d_vec = d_vec.at[j].add(s_j)
         gap = -jnp.vdot(alpha, d_vec)            # g_t = ⟨α,w⟩ + λ|α_j|
         eta = 2.0 / (t + 2.0)
-        w = w + eta * d_vec                      # = (1-η)w + η·s
-        return (w, key), (gap, j, mean_loss)
+        w_next = w + eta * d_vec                 # = (1-η)w + η·s
+        j = j.astype(jnp.int32)
+        if not masked:
+            return (w_next, key_next, done, stop_at), (gap, j, mean_loss)
+        newly = jnp.logical_and(~done, gap <= config.gap_tol)
+        out = (jnp.where(done, 0.0, gap), jnp.where(done, -1, j),
+               jnp.where(done, 0.0, mean_loss))
+        carry = (jnp.where(done, w, w_next), jnp.where(done, key, key_next),
+                 jnp.logical_or(done, newly),
+                 jnp.where(newly, t_int, stop_at))
+        return carry, out
 
+    return step
+
+
+def _carry0(X: Design, d: int, config: FWConfig):
     dtype = X.values.dtype if isinstance(X, PaddedCSR) else X.dtype
-    w0 = jnp.zeros(d, dtype=dtype)
-    key0 = jax.random.PRNGKey(config.seed)
-    (w, _), (gaps, coords, losses) = jax.lax.scan(
-        step, (w0, key0), jnp.arange(1, config.steps + 1, dtype=jnp.float32)
-    )
-    return FWResult(w=w, gaps=gaps, coords=coords, losses=losses)
+    return (jnp.zeros(d, dtype=dtype), jax.random.PRNGKey(config.seed),
+            jnp.asarray(False), jnp.asarray(0, jnp.int32))
+
+
+def dense_fw(X: Design, y: jnp.ndarray, config: FWConfig) -> FWResult:
+    """Run Algorithm 1 for ``config.steps`` iterations (one lax.scan).
+
+    Mean-normalized objective (1/N)Σ L(w·xᵢ, yᵢ); selection scores are
+    λ·|α⁽ʲ⁾| with sensitivity Δu = λ·L/N, so DP noise scales follow the
+    paper's formulas exactly (see core/dp/accountant.py).
+
+    ``config.gap_tol > 0`` runs the masked early-stopping form of the same
+    scan; ``max_seconds`` needs the host-driven :func:`dense_fw_stopping`
+    (this function is jit-compiled whole, so it cannot watch a clock).
+    """
+    d = _n_cols(X)
+    masked = config.gap_tol > 0
+    step = _dense_step(X, y, config, masked)
+    (w, _, done, stop_at), (gaps, coords, losses) = jax.lax.scan(
+        step, _carry0(X, d, config),
+        jnp.arange(1, config.steps + 1, dtype=jnp.int32))
+    stop_step = jnp.where(done, stop_at, jnp.asarray(config.steps, jnp.int32))
+    return FWResult(w=w, gaps=gaps, coords=coords, losses=losses,
+                    stop_step=stop_step, stop_reason=STOP_MAX_STEPS)
 
 
 dense_fw_jit = jax.jit(dense_fw, static_argnames=("config",))
+
+
+def _dense_chunk(X, y, carry, t0, *, config: FWConfig, chunk: int):
+    """``chunk`` masked iterations from global offset ``t0`` (re-enterable)."""
+    step = _dense_step(X, y, config, masked=config.gap_tol > 0)
+    ts = jnp.asarray(t0, jnp.int32) + jnp.arange(1, chunk + 1, dtype=jnp.int32)
+    return jax.lax.scan(step, carry, ts)
+
+
+_dense_chunk_jit = jax.jit(_dense_chunk, static_argnames=("config", "chunk"))
+
+
+def dense_fw_stopping(X: Design, y: jnp.ndarray, config: FWConfig) -> FWResult:
+    """Algorithm 1 with gap-adaptive early stopping (DESIGN.md §9).
+
+    A host loop re-enters one compiled masked chunk of the Alg-1 scan,
+    breaking as soon as the gap certificate lands or ``max_seconds`` runs
+    out — same per-step arithmetic as :func:`dense_fw`, so the stopped
+    iterate equals the fixed-T run's prefix.  Driver and sentinel-padding
+    contract are shared with every chunked backend
+    (``solvers.stopping``).
+    """
+    from repro.core.solvers.stopping import (assemble_outputs, drive_chunks,
+                                             resolve_chunk)
+    y = jnp.asarray(y)
+
+    def advance(carry, t0, c):
+        return _dense_chunk_jit(X, y, carry, t0, config=config, chunk=c)
+
+    carry, outs, stop_step, stop_reason = drive_chunks(
+        advance, _carry0(X, _n_cols(X), config), steps=config.steps,
+        chunk=resolve_chunk(config), max_seconds=config.max_seconds,
+        done_of=lambda cy: cy[2], stop_at_of=lambda cy: cy[3])
+    gaps, coords, losses = assemble_outputs(outs, config.steps,
+                                            (0.0, -1, 0.0))
+    return FWResult(w=carry[0], gaps=gaps, coords=coords, losses=losses,
+                    stop_step=stop_step, stop_reason=stop_reason)
 
 
 def dense_fw_flops(n: int, d: int, nnz: int, steps: int) -> int:

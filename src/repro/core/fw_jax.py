@@ -61,9 +61,14 @@ def sparse_fw_jax(
     else:
         sampler0 = ga_init(jnp.abs(alpha0))
 
-    def step(carry, t):
-        w, w_m, g_tilde, vbar, qbar, alpha, sampler, key = carry
-        key, sel_key = jax.random.split(key)
+    # §9 masked early stopping (``config`` is jit-static, so this is a
+    # compile-time branch; the tol=0 program is untouched).
+    masked = config.gap_tol > 0
+
+    def step(carry, t_int):
+        w, w_m, g_tilde, vbar, qbar, alpha, sampler, key, done, stop_at = carry
+        t = t_int.astype(dtype)
+        key_next, sel_key = jax.random.split(key)
         # ---- line 15: select coordinate -------------------------------------
         if private:
             j = tl_sample(sampler, sel_key)
@@ -77,41 +82,58 @@ def sparse_fw_jax(
         d_tilde = jnp.where(a_j == 0, lam, d_tilde)
         gap = g_tilde - d_tilde * a_j
         eta = 2.0 / (t + 2.0)
-        w_m = w_m * (1.0 - eta)
-        w = w.at[j].add(eta * d_tilde / w_m)
-        g_tilde = g_tilde * (1.0 - eta) + eta * d_tilde * a_j
+        w_m_new = w_m * (1.0 - eta)
+        w_new = w.at[j].add(eta * d_tilde / w_m_new)
+        g_tilde_new = g_tilde * (1.0 - eta) + eta * d_tilde * a_j
         # ---- lines 22-28: propagate through rows holding feature j ----------
         rows, xvals, mask = pcsc.col(j)                   # (Kc,)
-        dv = jnp.where(mask, eta * d_tilde * xvals / w_m, 0.0)
-        vbar = vbar.at[rows].add(dv)
-        margins = w_m * vbar[rows]
+        dv = jnp.where(mask, eta * d_tilde * xvals / w_m_new, 0.0)
+        vbar_new = vbar.at[rows].add(dv)
+        margins = w_m_new * vbar_new[rows]
         gamma = jnp.where(mask, h(margins) - qbar[rows], 0.0)
-        qbar = qbar.at[rows].add(gamma)
+        qbar_new = qbar.at[rows].add(gamma)
         row_idx = pcsr.indices[rows]                      # (Kc, Kr)
         row_val = pcsr.values[rows]                       # (Kc, Kr) — 0 at padding
         contrib = (gamma / n)[:, None] * row_val
-        alpha = alpha.at[row_idx.reshape(-1)].add(contrib.reshape(-1))
+        alpha_new = alpha.at[row_idx.reshape(-1)].add(contrib.reshape(-1))
         # line 27: g̃ += Σᵢ (γᵢ/n)·⟨X[i,:], w̃⟩·w_m
-        wg = w[row_idx]                                   # (Kc, Kr)
-        g_tilde = g_tilde + w_m * jnp.sum((gamma / n) * jnp.einsum("ck,ck->c", row_val, wg))
+        wg = w_new[row_idx]                               # (Kc, Kr)
+        g_tilde_new = g_tilde_new + w_m_new * jnp.sum(
+            (gamma / n) * jnp.einsum("ck,ck->c", row_val, wg))
         # ---- line 29: refresh queue priorities for touched coordinates ------
         flat_idx = row_idx.reshape(-1)
-        fresh = jnp.abs(alpha[flat_idx]) * (em_scale if private else 1.0)
+        fresh = jnp.abs(alpha_new[flat_idx]) * (em_scale if private else 1.0)
         if private:
-            sampler = tl_update(sampler_after_sel, flat_idx, fresh)
+            sampler_new = tl_update(sampler_after_sel, flat_idx, fresh)
         else:
-            sampler = ga_update(sampler_after_sel, flat_idx, fresh)
-        return (w, w_m, g_tilde, vbar, qbar, alpha, sampler, key), (gap, j)
+            sampler_new = ga_update(sampler_after_sel, flat_idx, fresh)
+        j = j.astype(jnp.int32)
+        new = (w_new, w_m_new, g_tilde_new, vbar_new, qbar_new, alpha_new,
+               sampler_new, key_next)
+        if not masked:
+            return new + (done, stop_at), (gap, j)
+        newly = jnp.logical_and(~done, gap <= config.gap_tol)
+        old = (w, w_m, g_tilde, vbar, qbar, alpha, sampler, key)
+        kept = jax.tree_util.tree_map(
+            lambda o, fresh_leaf: jnp.where(done, o, fresh_leaf), old, new)
+        out = (jnp.where(done, jnp.asarray(0.0, dtype), gap),
+               jnp.where(done, -1, j))
+        return kept + (jnp.logical_or(done, newly),
+                       jnp.where(newly, t_int, stop_at)), out
 
     carry0 = (
         w0, jnp.asarray(1.0, dtype), jnp.asarray(0.0, dtype),
         vbar0, qbar0, alpha0, sampler0, jax.random.PRNGKey(config.seed),
+        jnp.asarray(False), jnp.asarray(0, jnp.int32),
     )
-    ts = jnp.arange(1, config.steps + 1, dtype=dtype)
-    (w, w_m, *_), (gaps, coords) = jax.lax.scan(step, carry0, ts)
+    ts = jnp.arange(1, config.steps + 1, dtype=jnp.int32)
+    (w, w_m, *rest), (gaps, coords) = jax.lax.scan(step, carry0, ts)
+    done, stop_at = rest[-2], rest[-1]
+    stop_step = jnp.where(done, stop_at, jnp.asarray(config.steps, jnp.int32))
     w_true = w * w_m
     return FWResult(w=w_true, gaps=gaps, coords=coords,
-                    losses=jnp.zeros_like(gaps))
+                    losses=jnp.zeros_like(gaps), stop_step=stop_step,
+                    stop_reason="max_steps")
 
 
 sparse_fw_jax_jit = jax.jit(sparse_fw_jax, static_argnames=("config",))

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Optional
 
 import numpy as np
@@ -56,6 +57,11 @@ class SparseFWResult:
     flops: int
     queue_work: int
     pops: Optional[int] = None   # FibHeap Fig-3 accounting
+    # §9 gap-adaptive stopping: iterations actually applied + why the loop
+    # ended (max_steps | gap_tol | max_seconds).  gaps/coords keep length T
+    # with 0.0 / -1 sentinels past stop_step, matching the device scans.
+    stop_step: Optional[int] = None
+    stop_reason: str = "max_steps"
 
     @property
     def nnz(self) -> int:
@@ -76,6 +82,8 @@ def sparse_fw(
     X_csc: Optional[HostCSC] = None,
     fast: bool = True,             # vectorized inner loop (identical math);
                                    # False = paper-line-by-line per-row path
+    gap_tol: float = 0.0,          # §9: stop once g_t ≤ gap_tol (0 = never)
+    max_seconds: Optional[float] = None,  # §9: wall-clock budget
 ) -> SparseFWResult:
     n, d = X_csr.shape
     h = _split_grad_np(loss)
@@ -128,6 +136,8 @@ def sparse_fw(
     indptr, indices, data = X_csr.indptr, X_csr.indices, X_csr.data
     scale = em_scale if private else 1.0
 
+    stop_step, stop_reason = steps, "max_steps"
+    t_start = time.perf_counter()
     for t in range(1, steps + 1):
         # line 15: select coordinate
         if queue == "bsls":
@@ -189,12 +199,27 @@ def sparse_fw(
             for k in touched:
                 Q.update(k, abs(alpha[k]) * scale)
 
+        # ---- §9 early stopping: the certificate-producing step t stays
+        # applied; the break matches the device scans' masked freeze exactly.
+        # The comparison is made at float32 — the precision of the reported
+        # gap trace and of the device engines — so the stopping decision is
+        # a pure function of the gaps a caller can observe.
+        if gap_tol > 0 and np.float32(g_t) <= np.float32(gap_tol):
+            stop_step, stop_reason = t, "gap_tol"
+            break
+        if max_seconds is not None and time.perf_counter() - t_start >= max_seconds:
+            stop_step, stop_reason = t, "max_seconds"
+            break
+
+    if stop_step < steps:
+        coords[stop_step:] = -1        # sentinel, matching the device scans
+
     w_true = w * w_m
     pops = Q.pops if isinstance(Q, FibHeapQueue) else None
     return SparseFWResult(
         w=w_true, gaps=gaps, coords=coords, flops=flops,
         queue_work=getattr(Q, "work", 0) or getattr(Q, "items_scanned", 0),
-        pops=pops,
+        pops=pops, stop_step=stop_step, stop_reason=stop_reason,
     )
 
 

@@ -20,9 +20,16 @@ coerced data:
 
     results = solve_many(X, y, grid(lam=(10., 30.), epsilon=(0.1, 1.0),
                                     backend="jax_sparse", queue="bsls"))
+
+Gap-adaptive scheduling (DESIGN.md §9): ``FWConfig.gap_tol``/``max_seconds``
+stop any backend early on the duality-gap certificate (surfaced as
+``FWResult.stop_step``/``stop_reason``), sweeps retire converged configs
+between chunks, and ``solvers.planner`` picks backend + execution mode from
+a roofline cost model (``backend="auto"``, ``solve_many(plan=...)``).
 """
 from repro.core.solvers.batched import grid, solve_many  # noqa: F401
 from repro.core.solvers.config import FWConfig, FWResult  # noqa: F401
+from repro.core.solvers.planner import SolvePlan, plan_for  # noqa: F401
 from repro.core.solvers.registry import (QUEUE_ALIASES, Backend,  # noqa: F401
                                          available_backends, backend_doc,
                                          get_backend, register, resolve_queue,

@@ -31,23 +31,43 @@ from repro.core.solvers.prepared import PreparedDataset
 from repro.core.solvers.registry import QUEUE_ALIASES, register
 
 
+def _normalize_stop(res: FWResult, config: FWConfig) -> FWResult:
+    """Fill stop_reason for jitted scans that can only report stop_step as a
+    device scalar: a run that ended before T with gap_tol set stopped on the
+    certificate (the masked scans have no other way to stop early)."""
+    stop = res.stop_step_or(config.steps)
+    res.stop_step = stop
+    if stop < config.steps and res.stop_reason == "max_steps":
+        res.stop_reason = "gap_tol"
+    return res
+
+
 @register("dense", data_format="dense", queues=QUEUE_ALIASES["selection"],
           default_queue=None,
           doc="Alg 1 baseline: dense-work FW (O(nnz + D)/iter), device scan")
 def _dense_backend(data, y, config: FWConfig) -> FWResult:
-    from repro.core.fw_dense import dense_fw_jit
+    from repro.core.fw_dense import dense_fw_jit, dense_fw_stopping
     if config.queue is not None:  # queue name chosen → translate to selection
         config = dataclasses.replace(config, selection=config.queue, queue=None)
-    return dense_fw_jit(data, jnp.asarray(y, jnp.float32), config)
+    y = jnp.asarray(y, jnp.float32)
+    if config.early_stopping:     # §9: host-driven chunked masked scan
+        return dense_fw_stopping(data, y, config)
+    return _normalize_stop(dense_fw_jit(data, y, config), config)
 
 
 @register("jax_dense", data_format="padded", queues=QUEUE_ALIASES["device"],
-          default_queue="group_argmax",
+          default_queue="group_argmax", supports_max_seconds=False,
           doc="Alg 2 device scan, dense vector updates (pure jnp, no kernels)")
 def _jax_dense_backend(data, y, config: FWConfig) -> FWResult:
     from repro.core.fw_jax import sparse_fw_jax_jit
+    if config.max_seconds is not None:
+        raise ValueError(
+            "jax_dense runs as one compiled scan and cannot watch a wall "
+            "clock; use gap_tol, or the dense/host_sparse/jax_sparse "
+            "backends for max_seconds")
     pcsr, pcsc = data.pair if isinstance(data, PreparedDataset) else data
-    return sparse_fw_jax_jit(pcsr, pcsc, jnp.asarray(y, jnp.float32), config)
+    res = sparse_fw_jax_jit(pcsr, pcsc, jnp.asarray(y, jnp.float32), config)
+    return _normalize_stop(res, config)
 
 
 @register("host_sparse", data_format="host", queues=QUEUE_ALIASES["host"],
@@ -58,15 +78,19 @@ def _host_sparse_backend(data, y, config: FWConfig) -> FWResult:
     res = sparse_fw(
         data, np.asarray(y, np.float64), lam=config.lam, steps=config.steps,
         loss=config.loss, queue=config.queue, epsilon=config.epsilon,
-        delta=config.delta, seed=config.seed)
+        delta=config.delta, seed=config.seed, gap_tol=config.gap_tol,
+        max_seconds=config.max_seconds)
     gaps = jnp.asarray(res.gaps, jnp.float32)
     return FWResult(w=jnp.asarray(res.w, jnp.float32), gaps=gaps,
                     coords=jnp.asarray(res.coords, jnp.int32),
-                    losses=jnp.zeros_like(gaps))
+                    losses=jnp.zeros_like(gaps),
+                    stop_step=res.stop_step if res.stop_step is not None
+                    else config.steps,
+                    stop_reason=res.stop_reason)
 
 
 @register("jax_shard", data_format="blocks", queues=QUEUE_ALIASES["shard"],
-          default_queue="argmax",
+          default_queue="argmax", supports_max_seconds=False,
           doc="Alg 2 under feature sharding: shard_map collective schedule "
               "over BlockSparse blocks (FWConfig.mesh = (rows, features); "
               "1×1 reproduces the host oracle exactly)")

@@ -16,10 +16,11 @@ Mechanics:
     resolved queue / loss / interpret flag / mesh (everything that shapes
     the compiled program); λ, ε, δ and seed may vary freely inside a group;
   * ``X`` is coerced **once per data layout**, not once per config;
-  * a ``jax_sparse`` group runs as a single jitted ``vmap`` of ``fw_scan``
-    over stacked (λ, EM-scale, PRNG-key) triples — the whole sweep is one
-    XLA program through the spmv / coord_update / bsls_draw kernels, with
-    the config-independent ``fw_setup`` state computed once and broadcast;
+  * a ``jax_sparse`` group shares the config-independent ``fw_setup`` state
+    and one compiled scan through the spmv / coord_update / bsls_draw
+    kernels — run as a single jitted ``vmap`` over stacked (λ, EM-scale,
+    PRNG-key) triples, or as sequential re-entries of the width-free chunk
+    program, whichever the §9 planner says is faster on this platform;
   * a ``jax_shard`` group shares one block build + setup and re-enters one
     compiled scan (vmapped over the stacked scalars on a 1×1 mesh, where
     the whole stack fits one device program; sequential re-entries on real
@@ -32,25 +33,46 @@ Parity is structural, not approximate: the batched path calls the *same*
 ``fw_scan`` the sequential backend closes over, with the per-config scalars
 traced instead of constant — tests assert step-for-step identical coordinate
 sequences on the same keys.
+
+Gap-adaptive scheduling (DESIGN.md §9) adds the **cohort** execution mode:
+when a group's configs carry ``gap_tol``/``max_seconds``, the grid runs in
+chunks of the shared compiled ``fw_scan_chunk`` and configs that converge
+are *retired* between chunks, so the sweep stops paying for its slowest
+member.  Which mode a group uses — one vmapped program vs sequential
+re-entries of the width-free chunk program — is decided per problem by
+``solvers.planner`` (measured per-iteration costs beat the model beat the
+platform default); pass ``plan=`` to override.  Every mode runs the same
+state machine on the same keys, so gap-certified results are independent of
+the plan.  The one necessarily schedule-dependent knob is ``max_seconds``:
+a wall-clock budget counts from when the config's execution starts — its
+own ``solve()`` in sequential mode, the group's first chunk in cohort mode
+(the lanes really do run concurrently) — so where a timeout lands depends
+on how the grid was scheduled, as any wall-clock limit must.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.solvers.config import FWConfig, FWResult
+from repro.core.solvers.config import (STOP_GAP_TOL, STOP_MAX_SECONDS,
+                                       STOP_MAX_STEPS, FWConfig, FWResult)
+from repro.core.solvers.planner import SolvePlan, record_cost
 from repro.core.solvers.registry import (get_backend, resolve_data,
                                          resolve_queue)
 
 # FWConfig fields that must agree within one vmapped sweep group: they are
 # jit-static (shape the compiled scan) or flip a Python-level branch.  The
-# complementary set — lam / epsilon / delta / seed — is what a group stacks.
+# complementary set — lam / epsilon / delta / seed / gap_tol / max_seconds —
+# is what a group stacks (the stopping knobs ride as traced scalars or
+# host-side checks, so they never split a group).
 GROUP_FIELDS = ("backend", "steps", "queue", "loss", "selection", "interpret",
-                "mesh")
+                "mesh", "chunk_steps")
 
 
 def grid(base: FWConfig | None = None, **axes) -> Tuple[FWConfig, ...]:
@@ -112,9 +134,11 @@ def _sweep_scan(pcsr, pcsc, vbar0, qbar0, alpha0, lams, em_scales, keys,
     from repro.core.solvers.jax_sparse import fw_scan
 
     def one(lam, em_scale, key):
-        return fw_scan(pcsr, pcsc, vbar0, qbar0, alpha0, lam, em_scale, key,
-                       steps=steps, loss=loss, private=private, fused=fused,
-                       interpret=interpret)
+        w, gaps, coords, _ = fw_scan(
+            pcsr, pcsc, vbar0, qbar0, alpha0, lam, em_scale, key,
+            steps=steps, loss=loss, private=private, fused=fused,
+            interpret=interpret)
+        return w, gaps, coords
 
     return jax.vmap(one)(lams, em_scales, keys)
 
@@ -124,10 +148,30 @@ _sweep_scan_jit = jax.jit(
     static_argnames=("steps", "loss", "private", "fused", "interpret"))
 
 
-def _solve_jax_sparse_group(
-    data, y, configs: Sequence[FWConfig]
-) -> List[FWResult]:
-    """Run a compatible config group as one vmap-over-configs lax.scan."""
+def _cohort_chunk(pcsr, pcsc, carry, lams, em_scales, gap_tols, t0,
+                  *, steps, loss, private, fused, interpret):
+    """One vmapped chunk of the cohort scheduler: every lane advances
+    ``steps`` masked iterations from offset ``t0`` (lanes that already hold
+    their certificate stay frozen, bit-for-bit)."""
+    from repro.core.solvers.jax_sparse import fw_scan_chunk
+
+    def one(carry_i, lam, em_scale, gap_tol):
+        return fw_scan_chunk(pcsr, pcsc, carry_i, lam, em_scale, gap_tol, t0,
+                             steps=steps, loss=loss, private=private,
+                             fused=fused, interpret=interpret,
+                             early_stop=True)
+
+    return jax.vmap(one, in_axes=(0, 0, 0, 0))(carry, lams, em_scales,
+                                               gap_tols)
+
+
+_cohort_chunk_jit = jax.jit(
+    _cohort_chunk,
+    static_argnames=("steps", "loss", "private", "fused", "interpret"))
+
+
+def _group_context(data, y, configs: Sequence[FWConfig]):
+    """Shared (pcsr, pcsc, setup, scalars) of one jax_sparse sweep group."""
     from repro.core.solvers.jax_sparse import em_scale_for, fw_setup_jit
     from repro.core.solvers.prepared import PreparedDataset
     c0 = configs[0]
@@ -138,20 +182,163 @@ def _solve_jax_sparse_group(
         pcsr, pcsc = data
         setup = fw_setup_jit(pcsr, jnp.asarray(y, jnp.float32),
                              loss=c0.loss, interpret=c0.interpret)
-    private = c0.queue == "two_level"
-    fused = c0.loss == "logistic"
     n = pcsr.shape[0]
     dtype = pcsr.values.dtype
-    lams = jnp.asarray([c.lam for c in configs], dtype)
-    em_scales = jnp.asarray([em_scale_for(c, n) for c in configs], dtype)
-    keys = jnp.stack([jax.random.PRNGKey(c.seed) for c in configs])
+    scalars = {
+        "lams": jnp.asarray([c.lam for c in configs], dtype),
+        "em_scales": jnp.asarray([em_scale_for(c, n) for c in configs],
+                                 dtype),
+        "gap_tols": jnp.asarray([c.gap_tol for c in configs], dtype),
+        "keys": jnp.stack([jax.random.PRNGKey(c.seed) for c in configs]),
+    }
+    return pcsr, pcsc, setup, scalars
+
+
+def _group_stats(pcsr, pcsc):
+    from repro.core.solvers.planner import ProblemStats
+    n, d = pcsr.shape
+    return ProblemStats(n=n, d=d, nnz=int(np.sum(np.asarray(pcsr.nnz))),
+                        kc=int(pcsc.indices.shape[1]),
+                        kr=int(pcsr.indices.shape[1]))
+
+
+def _solve_jax_sparse_group(
+    data, y, configs: Sequence[FWConfig]
+) -> List[FWResult]:
+    """Run a compatible fixed-T config group as one vmap-over-configs scan."""
+    c0 = configs[0]
+    pcsr, pcsc, setup, sc = _group_context(data, y, configs)
+    private = c0.queue == "two_level"
+    fused = c0.loss == "logistic"
+    t0 = time.perf_counter()
     w, gaps, coords = _sweep_scan_jit(
-        pcsr, pcsc, *setup, lams, em_scales, keys,
+        pcsr, pcsc, *setup, sc["lams"], sc["em_scales"], sc["keys"],
         steps=c0.steps, loss=c0.loss, private=private, fused=fused,
         interpret=c0.interpret)
+    jax.block_until_ready(w)
+    record_cost("jax_sparse", "vmap", jax.devices()[0].platform,
+                _group_stats(pcsr, pcsc),
+                (time.perf_counter() - t0) / (c0.steps * len(configs)))
     return [FWResult(w=w[i], gaps=gaps[i], coords=coords[i],
-                     losses=jnp.zeros_like(gaps[i]))
+                     losses=jnp.zeros_like(gaps[i]), stop_step=c0.steps,
+                     stop_reason=STOP_MAX_STEPS)
             for i in range(len(configs))]
+
+
+def _solve_jax_sparse_group_sequential(
+    data, y, configs: Sequence[FWConfig]
+) -> List[FWResult]:
+    """Planner mode "sequential": per-config solves sharing one coerced
+    layout + one setup + one compiled (width-free) scan program.  Each config
+    stops exactly when its own certificate/timeout lands — no lane padding,
+    no cohort granularity."""
+    from repro.core.solvers.jax_sparse import jax_sparse_fw
+    pcsr, pcsc, setup, _ = _group_context(data, y, configs)
+    stats = _group_stats(pcsr, pcsc)
+    platform = jax.devices()[0].platform
+    y32 = jnp.asarray(y, jnp.float32)
+    out = []
+    for cfg in configs:
+        t0 = time.perf_counter()
+        res = jax_sparse_fw(pcsr, pcsc, y32, cfg, setup=setup)
+        jax.block_until_ready(res.w)
+        ran = max(res.stop_step_or(cfg.steps), 1)
+        record_cost("jax_sparse", "sequential", platform, stats,
+                    (time.perf_counter() - t0) / ran)
+        out.append(res)
+    return out
+
+
+def _solve_jax_sparse_group_cohort(
+    data, y, configs: Sequence[FWConfig]
+) -> List[FWResult]:
+    """Gap-adaptive cohort scheduling (DESIGN.md §9): the group advances in
+    chunks of one compiled vmapped ``fw_scan_chunk``; configs whose gap
+    certificate (or wall-clock budget) lands are retired between chunks, so
+    the grid stops paying for its slowest member.  Iterates are bit-identical
+    to the sequential early-stopping path — same state machine, same keys —
+    which the bench asserts at every config's stop step."""
+    from repro.core.solvers.jax_sparse import fw_carry_init
+    from repro.core.solvers.planner import cohort_widths
+    from repro.core.solvers.stopping import resolve_chunk
+    c0 = configs[0]
+    pcsr, pcsc, setup, sc = _group_context(data, y, configs)
+    stats = _group_stats(pcsr, pcsc)
+    platform = jax.devices()[0].platform
+    private = c0.queue == "two_level"
+    fused = c0.loss == "logistic"
+    n_cfg = len(configs)
+    steps = c0.steps
+    chunk = resolve_chunk(c0)
+    d = pcsr.shape[1]
+    dtype = pcsr.values.dtype
+
+    init = jax.jit(jax.vmap(
+        lambda s, k: fw_carry_init(d, dtype, *setup, s, k, private=private)))
+    cur = init(sc["em_scales"], sc["keys"])          # stacked FWCarry
+
+    gaps_buf = np.zeros((n_cfg, steps), np.asarray(sc["lams"]).dtype)
+    coords_buf = np.full((n_cfg, steps), -1, np.int32)
+    final: List[Optional[FWResult]] = [None] * n_cfg
+    active = list(range(n_cfg))                      # config ids, lane order
+    t0 = 0
+    t_start = time.perf_counter()
+
+    def retire(lane_carry, cfg_id: int, ran: int, reason_if_full: str):
+        done = bool(lane_carry.done)
+        stop = int(lane_carry.stop_at) if done else ran
+        reason = STOP_GAP_TOL if done else reason_if_full
+        w = np.asarray(lane_carry.w * lane_carry.w_m)
+        final[cfg_id] = FWResult(
+            w=jnp.asarray(w), gaps=jnp.asarray(gaps_buf[cfg_id]),
+            coords=jnp.asarray(coords_buf[cfg_id]),
+            losses=jnp.zeros((steps,), w.dtype), stop_step=stop,
+            stop_reason=reason)
+
+    widths = cohort_widths(n_cfg)        # pow-2 bucket schedule, full → 1
+    while active and t0 < steps:
+        c = min(chunk, steps - t0)
+        width = min(w for w in widths if w >= len(active))
+        # pad the cohort to a bucket width by repeating lane 0 (its copies'
+        # outputs are discarded) — the grid re-enters ≤ log2(B) compiled
+        # widths instead of one program per survivor count
+        lane_sel = list(range(len(active))) + [0] * (width - len(active))
+        cfg_sel = jnp.asarray([active[lane] for lane in lane_sel])
+        padded = jax.tree_util.tree_map(
+            lambda a: a[jnp.asarray(lane_sel)], cur)
+        tw = time.perf_counter()
+        padded, (g, j) = _cohort_chunk_jit(
+            pcsr, pcsc, padded, sc["lams"][cfg_sel], sc["em_scales"][cfg_sel],
+            sc["gap_tols"][cfg_sel], t0,
+            steps=c, loss=c0.loss, private=private, fused=fused,
+            interpret=c0.interpret)
+        jax.block_until_ready(g)
+        record_cost("jax_sparse", "vmap", platform, stats,
+                    (time.perf_counter() - tw) / (c * width))
+        cur = jax.tree_util.tree_map(lambda a: a[: len(active)], padded)
+        g_np, j_np = np.asarray(g), np.asarray(j)
+        for lane, cfg_id in enumerate(active):
+            gaps_buf[cfg_id, t0:t0 + c] = g_np[lane]
+            coords_buf[cfg_id, t0:t0 + c] = j_np[lane]
+        t0 += c
+        elapsed = time.perf_counter() - t_start
+        dones = np.asarray(cur.done)
+        keep = []
+        for lane, cfg_id in enumerate(active):
+            timed_out = (configs[cfg_id].max_seconds is not None
+                         and elapsed >= configs[cfg_id].max_seconds)
+            if bool(dones[lane]) or timed_out or t0 >= steps:
+                retire(jax.tree_util.tree_map(lambda a: a[lane], cur),
+                       cfg_id, t0,
+                       STOP_MAX_SECONDS
+                       if (timed_out and not bool(dones[lane]))
+                       else STOP_MAX_STEPS)
+            else:
+                keep.append(lane)
+        if keep and keep != list(range(len(active))):
+            cur = jax.tree_util.tree_map(lambda a: a[jnp.asarray(keep)], cur)
+        active = [active[lane] for lane in keep]
+    return final  # type: ignore[return-value]
 
 
 # ---------------------------------------------------------------------------
@@ -159,18 +346,60 @@ def _solve_jax_sparse_group(
 # ---------------------------------------------------------------------------
 
 
+def _as_plan(plan: Union[None, str, SolvePlan]) -> SolvePlan:
+    if plan is None or plan == "auto":
+        return SolvePlan(mode="auto")
+    if isinstance(plan, str):
+        if plan not in ("vmap", "sequential"):
+            raise ValueError(
+                f"plan must be 'auto'/'vmap'/'sequential' or a SolvePlan; "
+                f"got {plan!r}")
+        return SolvePlan(mode=plan)
+    return plan
+
+
+def _run_jax_sparse_group(data, y, member_cfgs: Sequence[FWConfig],
+                          plan: SolvePlan) -> List[FWResult]:
+    """Dispatch one jax_sparse sweep group per the §9 plan."""
+    if plan.chunk_steps is not None:
+        # the plan's chunk is a default, not an override: a per-config pin
+        # (which is a GROUP_FIELDS member, so uniform here) still wins
+        member_cfgs = [c if c.chunk_steps is not None
+                       else dataclasses.replace(c,
+                                                chunk_steps=plan.chunk_steps)
+                       for c in member_cfgs]
+    early = any(c.early_stopping for c in member_cfgs)
+    mode = plan.mode
+    if mode == "auto":
+        from repro.core.solvers.planner import group_mode
+        pcsr = (data.pcsr if hasattr(data, "pcsr") else data[0])
+        pcsc = (data.pcsc if hasattr(data, "pcsc") else data[1])
+        mode = group_mode(_group_stats(pcsr, pcsc), len(member_cfgs))
+    if mode == "sequential":
+        return _solve_jax_sparse_group_sequential(data, y, member_cfgs)
+    if early:
+        return _solve_jax_sparse_group_cohort(data, y, member_cfgs)
+    return _solve_jax_sparse_group(data, y, member_cfgs)
+
+
 def solve_many(X, y=None, configs: Sequence[FWConfig] = (), *,
-               prepared: Optional[Dict[str, object]] = None) -> List[FWResult]:
+               prepared: Optional[Dict[str, object]] = None,
+               plan: Union[None, str, SolvePlan] = None) -> List[FWResult]:
     """Solve many FW problems over one (X, y); results in input order.
 
     ``X`` may be a ``DatasetStore``/``DatasetRef`` (labels then default to
     the store's own — the whole sweep reads one on-disk artifact).  Configs
     are grouped by ``GROUP_FIELDS`` (after queue resolution); each
-    ``jax_sparse`` group of ≥ 2 runs as a single jitted vmapped scan, a
-    ``jax_shard`` group shares one setup + compiled scan per mesh (vmapped
-    on a 1×1 mesh), and other groups fall back to the sequential per-config
-    backend — in every case the data coercion is hoisted and shared across
-    the whole call.
+    ``jax_sparse`` group of ≥ 2 runs on one shared coercion + setup +
+    compiled scan, scheduled per the §9 execution plan — ``plan=None`` lets
+    ``solvers.planner`` choose between the vmapped program (cohort-chunked
+    with retirement when the group carries ``gap_tol``/``max_seconds``) and
+    sequential re-entries; pass "vmap"/"sequential" or a ``SolvePlan`` to
+    override.  A ``jax_shard`` group shares one setup + compiled scan per
+    mesh (vmapped on a 1×1 mesh), and other groups fall back to the
+    sequential per-config backend — in every case the data coercion is
+    hoisted and shared across the whole call, and results are identical
+    under every plan (same state machine, same keys).
 
     ``prepared`` is an optional caller-owned ``{data_format: coerced X}``
     cache: pass the same dict across calls (the fit service does, per
@@ -179,9 +408,16 @@ def solve_many(X, y=None, configs: Sequence[FWConfig] = (), *,
     configs = list(configs)
     if not configs:
         return []
+    plan = _as_plan(plan)
     X, y = resolve_data(X, y)
     resolved = []
+    auto_stats = None                 # derived once, only if any config asks
     for c in configs:
+        if c.backend == "auto":
+            from repro.core.solvers.planner import choose_backend, data_stats
+            if auto_stats is None:
+                auto_stats = data_stats(X)
+            c = dataclasses.replace(c, backend=choose_backend(auto_stats, c))
         backend = get_backend(c.backend)
         resolved.append((backend, resolve_queue(backend, c)))
 
@@ -201,7 +437,7 @@ def solve_many(X, y=None, configs: Sequence[FWConfig] = (), *,
         data = prepared[backend.data_format]
         member_cfgs = [resolved[i][1] for i in members]
         if backend.name == "jax_sparse" and len(members) > 1:
-            out = _solve_jax_sparse_group(data, y, member_cfgs)
+            out = _run_jax_sparse_group(data, y, member_cfgs, plan)
         elif backend.name == "jax_shard" and len(members) > 1:
             from repro.core.solvers.jax_shard import solve_shard_group
             out = solve_shard_group(data, y, member_cfgs)

@@ -20,12 +20,17 @@ changing only ``backend=``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.losses import Loss, get_loss
+
+# FWResult.stop_reason values (DESIGN.md §9):
+STOP_MAX_STEPS = "max_steps"      # ran the full T iterations
+STOP_GAP_TOL = "gap_tol"          # duality-gap certificate reached gap_tol
+STOP_MAX_SECONDS = "max_seconds"  # wall-clock budget exhausted
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,6 +42,7 @@ class FWConfig:
     """
 
     backend: str = "dense"       # dense | jax_dense | host_sparse | jax_sparse
+                                 # | jax_shard | auto (planner picks, §9)
     lam: float = 50.0            # L1 radius λ (paper default for speed runs)
     steps: int = 4000            # T (paper default)
     loss: str = "logistic"
@@ -51,26 +57,71 @@ class FWConfig:
     # host oracle exactly, which is what makes parity testable everywhere).
     # Other backends ignore it.  A tuple keeps the config hashable/static.
     mesh: Optional[Tuple[int, int]] = None
+    # Gap-adaptive early stopping (DESIGN.md §9).  gap_tol > 0 stops the run
+    # once the FW duality-gap estimate g_t falls to ≤ gap_tol: the step that
+    # produced the certificate is still applied, every later step is a frozen
+    # no-op (bit-identical to a run of exactly stop_step iterations).  0.0
+    # (the default) disables stopping and reproduces the fixed-T program.
+    gap_tol: float = 0.0
+    # Wall-clock budget in seconds; None → unlimited.  Enforced per-iteration
+    # by the host loops (host_sparse) and at chunk boundaries by the chunked
+    # drivers (dense, jax_sparse); unsupported inside the single-scan
+    # jax_dense / jax_shard programs, which reject it loudly.
+    max_seconds: Optional[float] = None
+    # Scan-chunk length for the chunked early-stopping drivers and the
+    # batched cohort scheduler; None → planner default (steps/8 clamped to
+    # [8, 256]).  Chunking never changes iterates — only how often the host
+    # checks for convergence/timeouts and retires finished configs.
+    chunk_steps: Optional[int] = None
 
     def loss_fn(self) -> Loss:
         return get_loss(self.loss)
+
+    @property
+    def early_stopping(self) -> bool:
+        """True when this config can stop before ``steps`` iterations."""
+        return self.gap_tol > 0.0 or self.max_seconds is not None
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class FWResult:
     w: jnp.ndarray          # final iterate (D,)
-    gaps: jnp.ndarray       # FW gap g_t per iteration (T,)
-    coords: jnp.ndarray     # selected coordinate per iteration (T,)
+    gaps: jnp.ndarray       # FW gap g_t per iteration (T,); 0 after stop_step
+    coords: jnp.ndarray     # selected coordinate per iteration (T,); -1 after
+                            # stop_step (frozen steps select nothing)
     losses: jnp.ndarray     # mean loss per iteration (T,); zeros if untracked
+    # Gap-adaptive stopping report (DESIGN.md §9).  ``stop_step`` is the
+    # number of FW iterations actually applied (== len(gaps) for a full run);
+    # ``w`` is exactly the iterate a run of ``stop_step`` steps produces.
+    # None means "the backend predates stopping" and is normalized by
+    # ``stop_step_or`` / the registry adapters.
+    stop_step: Optional[Union[int, jnp.ndarray]] = None
+    stop_reason: str = STOP_MAX_STEPS  # max_steps | gap_tol | max_seconds
 
     def tree_flatten(self):
-        return (self.w, self.gaps, self.coords, self.losses), None
+        return ((self.w, self.gaps, self.coords, self.losses, self.stop_step),
+                self.stop_reason)
 
     @classmethod
-    def tree_unflatten(cls, _, leaves):
-        return cls(*leaves)
+    def tree_unflatten(cls, stop_reason, leaves):
+        return cls(*leaves, stop_reason=stop_reason)
 
     @property
     def nnz(self) -> jnp.ndarray:
         return jnp.sum(self.w != 0)
+
+    def stop_step_or(self, default: Optional[int] = None) -> int:
+        """``stop_step`` as a Python int; falls back to len(gaps)."""
+        if self.stop_step is None:
+            return int(default if default is not None else self.gaps.shape[0])
+        return int(self.stop_step)
+
+    @property
+    def gaps_valid(self) -> jnp.ndarray:
+        """The gap trace up to (and including) the stopping step."""
+        return self.gaps[: self.stop_step_or()]
+
+    @property
+    def coords_valid(self) -> jnp.ndarray:
+        return self.coords[: self.stop_step_or()]

@@ -75,32 +75,36 @@ _PROGRAMS: Dict[tuple, DistFW] = {}
 _VMAPPED: Dict[tuple, object] = {}
 
 
-def _program_key(blocks_abs, mesh, steps, loss, selection, compress_topk):
+def _program_key(blocks_abs, mesh, steps, loss, selection, compress_topk,
+                 early_stop):
     return (blocks_abs.csc_rows.shape, blocks_abs.csr_cols.shape,
             blocks_abs.shape, blocks_abs.padded, mesh.axis_names,
-            mesh.devices.shape, steps, loss, selection, compress_topk)
+            mesh.devices.shape, steps, loss, selection, compress_topk,
+            early_stop)
 
 
 def shard_program(blocks_abs, mesh, *, steps: int, loss: str, selection: str,
-                  compress_topk: int = 0) -> DistFW:
+                  compress_topk: int = 0, early_stop: bool = False) -> DistFW:
     """Memoized (setup, scan, whole) program for one block layout + mesh."""
-    key = _program_key(blocks_abs, mesh, steps, loss, selection, compress_topk)
+    key = _program_key(blocks_abs, mesh, steps, loss, selection,
+                       compress_topk, early_stop)
     if key not in _PROGRAMS:
         _PROGRAMS[key] = build_dist_fw(
             blocks_abs, mesh, steps=steps, loss=loss, selection=selection,
-            compress_topk=compress_topk)
+            compress_topk=compress_topk, early_stop=early_stop)
     return _PROGRAMS[key]
 
 
-def vmapped_scan(blocks_abs, mesh, *, steps: int, loss: str, selection: str):
-    """jit(vmap(scan)) over stacked (λ, em_scale, key) — the batched sweep
-    path on meshes where the whole stack fits one device program (1×1)."""
-    key = _program_key(blocks_abs, mesh, steps, loss, selection, 0)
+def vmapped_scan(blocks_abs, mesh, *, steps: int, loss: str, selection: str,
+                 early_stop: bool = False):
+    """jit(vmap(scan)) over stacked (λ, em_scale, gap_tol, key) — the batched
+    sweep path on meshes where the whole stack fits one device program (1×1)."""
+    key = _program_key(blocks_abs, mesh, steps, loss, selection, 0, early_stop)
     if key not in _VMAPPED:
         prog = shard_program(blocks_abs, mesh, steps=steps, loss=loss,
-                             selection=selection)
+                             selection=selection, early_stop=early_stop)
         _VMAPPED[key] = jax.jit(jax.vmap(
-            prog.scan, in_axes=(None, None, None, None, 0, 0, 0)))
+            prog.scan, in_axes=(None, None, None, None, 0, 0, 0, 0)))
     return _VMAPPED[key]
 
 
@@ -109,50 +113,73 @@ def _pad_labels(y, n_pad: int) -> jnp.ndarray:
     return jnp.zeros((n_pad,), jnp.float32).at[: y.shape[0]].set(y)
 
 
+def _shard_result(w, gaps, coords, stop_step, d: int, steps: int) -> FWResult:
+    stop = int(stop_step)
+    return FWResult(w=w[:d], gaps=gaps, coords=coords,
+                    losses=jnp.zeros_like(gaps), stop_step=stop,
+                    stop_reason="gap_tol" if stop < steps else "max_steps")
+
+
+def _reject_max_seconds(config: FWConfig) -> None:
+    if config.max_seconds is not None:
+        raise ValueError(
+            "jax_shard runs as one compiled collective scan and cannot "
+            "watch a wall clock; use gap_tol, or a host backend for "
+            "max_seconds")
+
+
 def shard_fw(src: ShardSource, y, config: FWConfig) -> FWResult:
     """One solve through the sharded collective schedule."""
+    _reject_max_seconds(config)
     a, b = mesh_grid(config)
     mesh = make_shard_mesh(a, b)
     blocks = src.blocks(a, b)
     n, d = src.shape
     prog = shard_program(blocks, mesh, steps=config.steps, loss=config.loss,
-                         selection=config.queue)
+                         selection=config.queue,
+                         early_stop=config.gap_tol > 0)
     with mesh:
         setup = prog.setup(blocks, _pad_labels(y, blocks.padded[0]))
-        w, gaps, coords = prog.scan(
+        w, gaps, coords, stop_step = prog.scan(
             blocks, *setup, jnp.float32(config.lam),
             jnp.float32(shard_em_scale(config, n)),
+            jnp.float32(config.gap_tol),
             jax.random.PRNGKey(config.seed))
-    return FWResult(w=w[:d], gaps=gaps, coords=coords,
-                    losses=jnp.zeros_like(gaps))
+    return _shard_result(w, gaps, coords, stop_step, d, config.steps)
 
 
 def solve_shard_group(src: ShardSource, y, configs) -> list:
     """A compatible config group on one shared setup: vmapped on a 1×1 mesh,
-    sequential re-entries of the one compiled scan otherwise (λ/ε/key are
-    traced either way, so the grid never recompiles)."""
+    sequential re-entries of the one compiled scan otherwise (λ/ε/gap_tol/key
+    are traced either way, so the grid never recompiles)."""
     c0 = configs[0]
+    for c in configs:
+        _reject_max_seconds(c)
     a, b = mesh_grid(c0)
     mesh = make_shard_mesh(a, b)
     blocks = src.blocks(a, b)
     n, d = src.shape
+    early = any(c.gap_tol > 0 for c in configs)
     prog = shard_program(blocks, mesh, steps=c0.steps, loss=c0.loss,
-                         selection=c0.queue)
+                         selection=c0.queue, early_stop=early)
     lams = jnp.asarray([c.lam for c in configs], jnp.float32)
     scales = jnp.asarray([shard_em_scale(c, n) for c in configs], jnp.float32)
+    tols = jnp.asarray([c.gap_tol for c in configs], jnp.float32)
     keys = jnp.stack([jax.random.PRNGKey(c.seed) for c in configs])
     with mesh:
         setup = prog.setup(blocks, _pad_labels(y, blocks.padded[0]))
         if a * b == 1:
             vscan = vmapped_scan(blocks, mesh, steps=c0.steps, loss=c0.loss,
-                                 selection=c0.queue)
-            w, gaps, coords = vscan(blocks, *setup, lams, scales, keys)
-            outs = [(w[i], gaps[i], coords[i]) for i in range(len(configs))]
-        else:
-            outs = [prog.scan(blocks, *setup, lams[i], scales[i], keys[i])
+                                 selection=c0.queue, early_stop=early)
+            w, gaps, coords, stops = vscan(blocks, *setup, lams, scales,
+                                           tols, keys)
+            outs = [(w[i], gaps[i], coords[i], stops[i])
                     for i in range(len(configs))]
-    return [FWResult(w=w[:d], gaps=g, coords=c, losses=jnp.zeros_like(g))
-            for (w, g, c) in outs]
+        else:
+            outs = [prog.scan(blocks, *setup, lams[i], scales[i], tols[i],
+                              keys[i])
+                    for i in range(len(configs))]
+    return [_shard_result(w, g, c, s, d, c0.steps) for (w, g, c, s) in outs]
 
 
 def shard_lowering(n: int, d: int, mesh, *, steps: int, kc: int, kr: int,
@@ -181,9 +208,10 @@ def shard_lowering(n: int, d: int, mesh, *, steps: int, kc: int, kr: int,
     b_shd, y_shd = dist_fw_shardings(blocks_abs, mesh)
     repl = NamedSharding(mesh, P())
     jitted = jax.jit(prog.whole,
-                     in_shardings=(b_shd, y_shd, repl, repl, repl))
+                     in_shardings=(b_shd, y_shd, repl, repl, repl, repl))
     f32 = jax.ShapeDtypeStruct
     key_abs = jax.eval_shape(lambda: jax.random.PRNGKey(0))
     args = (blocks_abs, f32((blocks_abs.padded[0],), jnp.float32),
-            f32((), jnp.float32), f32((), jnp.float32), key_abs)
+            f32((), jnp.float32), f32((), jnp.float32), f32((), jnp.float32),
+            key_abs)
     return jitted, args

@@ -35,10 +35,22 @@ over stacked per-config scalars, and a ``repro.data.store.DatasetStore``
 persists ``fw_setup_jit``'s output so warm solves skip the setup sweep and
 replay bit-identical state — both reuse paths are exact because they feed
 the very arrays this module would have computed.
+
+Gap-adaptive scheduling (DESIGN.md §9) splits the scan once more:
+``fw_carry_init`` builds the full loop carry and ``fw_scan_chunk`` advances
+it ``steps`` iterations starting at a *traced* global offset ``t0`` — so one
+compiled chunk program is re-entered until the run converges (the FW gap
+certificate g_t ≤ ``gap_tol``), times out, or exhausts T.  Early stopping is
+a **masked scan**: once a chunk step observes the certificate the carry
+freezes (``jnp.where`` selects the old state bit-for-bit, the PRNG key stops
+splitting so DP noise draws after the stop are never consumed) and the
+outputs emit (gap=0, coord=-1) sentinels.  Chunk boundaries never change the
+arithmetic — iterates are bit-identical to the single whole-run scan at every
+prefix, which is what the early-stopping parity tests pin.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,7 +59,9 @@ from repro.core.dp.accountant import em_log_weight_scale
 from repro.core.losses import get_loss
 from repro.core.samplers.bsls_jax import tl_init, tl_update
 from repro.core.samplers.group_argmax import ga_get_next, ga_init, ga_update
-from repro.core.solvers.config import FWConfig, FWResult
+from repro.core.solvers.config import STOP_MAX_STEPS, FWConfig, FWResult
+from repro.core.solvers.stopping import (assemble_outputs, drive_chunks,
+                                         resolve_chunk)
 from repro.core.sparse.formats import PaddedCSC, PaddedCSR
 from repro.kernels.bsls_draw.ops import two_level_draw
 from repro.kernels.coord_update.ops import coord_update
@@ -73,19 +87,67 @@ def fw_setup(
     return vbar0, qbar0, alpha0
 
 
-def fw_scan(
-    pcsr: PaddedCSR, pcsc: PaddedCSC,
-    vbar0: jnp.ndarray, qbar0: jnp.ndarray, alpha0: jnp.ndarray,
-    lam, em_scale, key: jax.Array,
+class FWCarry(NamedTuple):
+    """Full loop state of one Frank-Wolfe run, chunk-resumable.
+
+    ``done``/``stop_at`` are the masked-scan early-stopping flags: once
+    ``done`` flips, every later step is a frozen no-op and ``stop_at`` holds
+    the number of iterations actually applied.
+    """
+
+    w: jnp.ndarray
+    w_m: jnp.ndarray
+    g_tilde: jnp.ndarray
+    vbar: jnp.ndarray
+    qbar: jnp.ndarray
+    alpha: jnp.ndarray
+    sampler: object
+    key: jax.Array
+    done: jnp.ndarray       # bool scalar
+    stop_at: jnp.ndarray    # int32 scalar; valid when done
+
+
+def fw_carry_init(
+    d: int, dtype, vbar0, qbar0, alpha0, em_scale, key: jax.Array,
+    *, private: bool,
+) -> FWCarry:
+    """Loop carry at t = 0 (``em_scale``/``key`` may be traced — vmappable)."""
+    em_scale = jnp.asarray(em_scale, dtype)
+    if private:
+        sampler0 = tl_init(jnp.abs(alpha0) * em_scale)
+    else:
+        sampler0 = ga_init(jnp.abs(alpha0))
+    return FWCarry(
+        w=jnp.zeros(d, dtype), w_m=jnp.asarray(1.0, dtype),
+        g_tilde=jnp.asarray(0.0, dtype), vbar=vbar0, qbar=qbar0, alpha=alpha0,
+        sampler=sampler0, key=key, done=jnp.asarray(False),
+        stop_at=jnp.asarray(0, jnp.int32))
+
+
+def fw_scan_chunk(
+    pcsr: PaddedCSR, pcsc: PaddedCSC, carry: FWCarry,
+    lam, em_scale, gap_tol, t0,
     *, steps: int, loss: str, private: bool, fused: bool, interpret: bool,
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """T Frank-Wolfe iterations; returns (w, gaps, coords).
+    early_stop: bool = False,
+) -> Tuple[FWCarry, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Advance the carry by ``steps`` iterations starting after global step
+    ``t0``; returns (carry, (gaps, coords)) for this chunk.
 
     ``lam`` (L1 radius), ``em_scale`` (exponential-mechanism log-weight
-    scale; 1.0 when non-private) and ``key`` may be traced scalars — this is
-    the vmap axis of ``solvers.batched``.  Everything shape- or
-    branch-affecting (``steps``/``private``/``fused``/``interpret``) is
-    static, which is exactly what makes a sweep group batchable.
+    scale; 1.0 when non-private), ``gap_tol`` and ``t0`` may be traced
+    scalars — the first two are the vmap axis of ``solvers.batched``, the
+    offset is what lets one compiled chunk be re-entered across a run.
+    Everything shape- or branch-affecting (``steps``/``private``/``fused``/
+    ``interpret``/``early_stop``) is static, which is exactly what makes a
+    sweep group batchable.
+
+    With ``early_stop`` the scan is masked: the iteration that observes
+    g_t ≤ gap_tol is still applied (the certificate speaks for the iterate it
+    was computed from; applying one more FW step from a converged point stays
+    inside the ball), after which the carry — PRNG key included, so no DP
+    noise draw is ever consumed past the stop — freezes bit-for-bit and the
+    outputs emit (0.0, -1).  ``gap_tol <= 0`` never triggers, so mixed
+    cohorts are safe.
     """
     n, d = pcsr.shape
     h = get_loss(loss).split_grad
@@ -93,15 +155,14 @@ def fw_scan(
     inv_n = 1.0 / n
     lam = jnp.asarray(lam, dtype)
     em_scale = jnp.asarray(em_scale, dtype)
+    gap_tol = jnp.asarray(gap_tol, dtype)
+    t0 = jnp.asarray(t0, jnp.int32)
 
-    if private:
-        sampler0 = tl_init(jnp.abs(alpha0) * em_scale)
-    else:
-        sampler0 = ga_init(jnp.abs(alpha0))
-
-    def step(carry, t):
-        w, w_m, g_tilde, vbar, qbar, alpha, sampler, key = carry
-        key, sel_key = jax.random.split(key)
+    def step(carry: FWCarry, i):
+        (w, w_m, g_tilde, vbar, qbar, alpha, sampler, key,
+         done, stop_at) = carry
+        t = (t0 + i).astype(dtype)
+        key_next, sel_key = jax.random.split(key)
         # ---- line 15: select coordinate -------------------------------------
         if private:
             j = two_level_draw(sampler.c, sampler.v, sel_key, interpret=interpret)
@@ -139,21 +200,63 @@ def fw_scan(
             sampler = tl_update(sampler_after_sel, flat_idx, fresh)
         else:
             sampler = ga_update(sampler_after_sel, flat_idx, fresh)
-        return (w, w_m, g_tilde, vbar, qbar, alpha, sampler, key), (gap, j)
+        new = FWCarry(w, w_m, g_tilde, vbar, qbar, alpha, sampler, key_next,
+                      done, stop_at)
+        if not early_stop:
+            return new, (gap, j.astype(jnp.int32))
+        # ---- §9 masked stopping: freeze frames once the certificate lands ---
+        newly = jnp.logical_and(~done, jnp.logical_and(gap_tol > 0,
+                                                       gap <= gap_tol))
+        frozen = carry._replace(
+            done=jnp.logical_or(done, newly),
+            stop_at=jnp.where(newly, t0 + i, stop_at))
+        merged = jax.tree_util.tree_map(
+            lambda old, fresh_leaf: jnp.where(done, old, fresh_leaf),
+            frozen,
+            new._replace(done=frozen.done, stop_at=frozen.stop_at))
+        out_gap = jnp.where(done, jnp.asarray(0.0, dtype), gap)
+        out_j = jnp.where(done, -1, j.astype(jnp.int32))
+        return merged, (out_gap, out_j)
 
-    carry0 = (
-        jnp.zeros(d, dtype), jnp.asarray(1.0, dtype), jnp.asarray(0.0, dtype),
-        vbar0, qbar0, alpha0, sampler0, key,
-    )
-    ts = jnp.arange(1, steps + 1, dtype=dtype)
-    (w, w_m, *_), (gaps, coords) = jax.lax.scan(step, carry0, ts)
-    return w * w_m, gaps, coords
+    ts = jnp.arange(1, steps + 1, dtype=jnp.int32)
+    return jax.lax.scan(step, carry, ts)
+
+
+def fw_scan(
+    pcsr: PaddedCSR, pcsc: PaddedCSC,
+    vbar0: jnp.ndarray, qbar0: jnp.ndarray, alpha0: jnp.ndarray,
+    lam, em_scale, key: jax.Array, gap_tol=0.0,
+    *, steps: int, loss: str, private: bool, fused: bool, interpret: bool,
+    early_stop: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Whole run as one scan; returns (w, gaps, coords, stop_step).
+
+    ``stop_step`` is the number of iterations actually applied — ``steps``
+    unless ``early_stop`` observed the gap certificate earlier.
+    """
+    dtype = pcsr.values.dtype
+    carry0 = fw_carry_init(pcsr.shape[1], dtype, vbar0, qbar0, alpha0,
+                           em_scale, key, private=private)
+    carry, (gaps, coords) = fw_scan_chunk(
+        pcsr, pcsc, carry0, lam, em_scale, gap_tol, 0,
+        steps=steps, loss=loss, private=private, fused=fused,
+        interpret=interpret, early_stop=early_stop)
+    stop_step = jnp.where(carry.done, carry.stop_at,
+                          jnp.asarray(steps, jnp.int32))
+    return carry.w * carry.w_m, gaps, coords, stop_step
 
 
 fw_setup_jit = jax.jit(fw_setup, static_argnames=("loss", "interpret"))
 fw_scan_jit = jax.jit(
     fw_scan,
-    static_argnames=("steps", "loss", "private", "fused", "interpret"))
+    static_argnames=("steps", "loss", "private", "fused", "interpret",
+                     "early_stop"))
+fw_scan_chunk_jit = jax.jit(
+    fw_scan_chunk,
+    static_argnames=("steps", "loss", "private", "fused", "interpret",
+                     "early_stop"))
+fw_carry_init_jit = jax.jit(fw_carry_init, static_argnames=("d", "dtype",
+                                                            "private"))
 
 
 def em_scale_for(config: FWConfig, n_rows: int) -> float:
@@ -166,6 +269,32 @@ def em_scale_for(config: FWConfig, n_rows: int) -> float:
         n_rows=n_rows, lipschitz=config.loss_fn().lipschitz)
 
 
+def _chunked_fw(pcsr, pcsc, setup, config: FWConfig, em_scale: float,
+                private: bool, fused: bool) -> FWResult:
+    """Host-driven chunk loop: re-enter one compiled ``fw_scan_chunk`` until
+    the gap certificate lands, ``max_seconds`` expires, or T is spent
+    (shared driver/assembly contract: ``solvers.stopping``)."""
+    dtype = pcsr.values.dtype
+    carry0 = fw_carry_init_jit(pcsr.shape[1], dtype, *setup, em_scale,
+                               jax.random.PRNGKey(config.seed),
+                               private=private)
+
+    def advance(carry, t0, c):
+        return fw_scan_chunk_jit(
+            pcsr, pcsc, carry, config.lam, em_scale, config.gap_tol, t0,
+            steps=c, loss=config.loss, private=private, fused=fused,
+            interpret=config.interpret, early_stop=True)
+
+    carry, outs, stop_step, stop_reason = drive_chunks(
+        advance, carry0, steps=config.steps, chunk=resolve_chunk(config),
+        max_seconds=config.max_seconds, done_of=lambda cy: cy.done,
+        stop_at_of=lambda cy: cy.stop_at)
+    gaps, coords = assemble_outputs(outs, config.steps, (0.0, -1))
+    return FWResult(w=carry.w * carry.w_m, gaps=gaps, coords=coords,
+                    losses=jnp.zeros_like(gaps), stop_step=stop_step,
+                    stop_reason=stop_reason)
+
+
 def jax_sparse_fw(
     pcsr: PaddedCSR, pcsc: PaddedCSC, y: jnp.ndarray, config: FWConfig,
     setup: Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray] = None,
@@ -175,6 +304,11 @@ def jax_sparse_fw(
     ``setup`` injects a precomputed ``fw_setup`` state — the dataset-store
     warm path; it must be the (v̄₀, q̄₀, α₀) this function would have
     computed (``PreparedDataset`` guarantees that by construction).
+
+    Fixed-T configs run the single whole-run scan exactly as before;
+    early-stopping configs (``gap_tol``/``max_seconds``) go through the
+    chunked driver — same arithmetic per step, so iterates are bit-identical
+    at every prefix.
     """
     n, _ = pcsr.shape
     private = config.queue == "two_level"
@@ -186,11 +320,15 @@ def jax_sparse_fw(
     if setup is None:
         setup = fw_setup_jit(pcsr, y, loss=config.loss,
                              interpret=config.interpret)
+    if config.early_stopping:
+        return _chunked_fw(pcsr, pcsc, setup, config, em_scale, private,
+                           fused)
     vbar0, qbar0, alpha0 = setup
-    w, gaps, coords = fw_scan_jit(
+    w, gaps, coords, stop_step = fw_scan_jit(
         pcsr, pcsc, vbar0, qbar0, alpha0,
         config.lam, em_scale, jax.random.PRNGKey(config.seed),
         steps=config.steps, loss=config.loss, private=private, fused=fused,
         interpret=config.interpret)
     return FWResult(w=w, gaps=gaps, coords=coords,
-                    losses=jnp.zeros_like(gaps))
+                    losses=jnp.zeros_like(gaps), stop_step=config.steps,
+                    stop_reason=STOP_MAX_STEPS)

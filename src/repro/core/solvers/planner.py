@@ -1,0 +1,302 @@
+"""Cost-model execution planner for the solver stack (DESIGN.md §9).
+
+Three questions every solve/sweep has to answer before any XLA program runs:
+
+  1. **Which backend?**  ``FWConfig(backend="auto")`` asks the planner to
+     pick from the problem's shape: per-iteration work of Algorithm 1 is
+     O(nnz + D) while Algorithm 2's padded tile is O(K_c·K_r + √D), so the
+     crossover is a pure cost-model question — answered with the same
+     three-term roofline machinery the dry-run audit uses
+     (``repro.roofline.analysis.roofline_terms``), fed with per-iteration
+     FLOP/byte counts instead of whole-model numbers.
+
+  2. **Vmapped or sequential grid execution?**  A vmapped sweep is one
+     program but pays every lane every step; re-entering the per-config scan
+     is many dispatches but each lane stops exactly when it converges.  On
+     accelerators the vmap lanes are nearly free (vector units are wide and
+     idle); on CPU-interpret containers each lane costs ~a full sequential
+     step (measured: the BENCH_sweep 0.7× regression this module exists to
+     fix).  The planner picks per platform, and **measured** per-iteration
+     costs recorded by the batched driver (``record_cost``) override the
+     model whenever a matching observation exists.
+
+  3. **What chunk length?**  Chunked execution (gap-adaptive early stopping,
+     cohort retirement, ``max_seconds``) trades host round-trips against
+     wasted post-convergence steps; ``steps/8`` clamped to [8, 256] keeps
+     both under ~15%.
+
+The planner never changes results — every plan runs the same state machine
+with the same keys; only scheduling differs.  ε-accounting is likewise
+untouched: admission charges by the resolved queue, not by the engine that
+realizes it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.solvers.config import FWConfig
+from repro.roofline.analysis import roofline_terms
+
+# Effective per-chip rates fed to roofline_terms.  The TPU numbers live in
+# repro.roofline.analysis; the CPU numbers are deliberately conservative
+# (one wide core of a shared CI container) — only *ratios* between candidate
+# plans matter here, not absolute seconds.
+CPU_PEAK_FLOPS = 2.0e10
+CPU_HBM_BW = 1.5e10
+# Measured lane overhead of vmapping the kernel scan on CPU interpret mode:
+# one extra lane costs ~this fraction of a full sequential step (the
+# BENCH_sweep 0.7× finding: 8 lanes ≈ 8 × 1.4 sequential steps).
+CPU_VMAP_LANE_OVERHEAD = 1.4
+ACCEL_VMAP_LANE_OVERHEAD = 0.15
+
+
+@dataclasses.dataclass(frozen=True)
+class ProblemStats:
+    """Shape facts the cost model consumes (cheap to derive, never solves)."""
+
+    n: int
+    d: int
+    nnz: int
+    kc: int   # max column nnz (Alg-2 tile height)
+    kr: int   # max row nnz (Alg-2 tile width)
+
+    @property
+    def density(self) -> float:
+        return self.nnz / max(self.n * self.d, 1)
+
+
+def data_stats(X) -> ProblemStats:
+    """Derive :class:`ProblemStats` from any layout ``solve`` accepts."""
+    from repro.core.solvers.prepared import PreparedDataset
+    from repro.core.sparse.formats import HostCSR, PaddedCSC, PaddedCSR
+    if isinstance(X, PreparedDataset):
+        X = X.pair
+    if (isinstance(X, tuple) and len(X) == 2
+            and isinstance(X[0], PaddedCSR) and isinstance(X[1], PaddedCSC)):
+        pcsr, pcsc = X
+        n, d = pcsr.shape
+        return ProblemStats(n=n, d=d, nnz=int(np.sum(np.asarray(pcsr.nnz))),
+                            kc=int(pcsc.indices.shape[1]),
+                            kr=int(pcsr.indices.shape[1]))
+    if isinstance(X, HostCSR):
+        row_nnz = np.diff(X.indptr)
+        col_nnz = np.bincount(X.indices, minlength=X.shape[1])
+        return ProblemStats(n=X.shape[0], d=X.shape[1], nnz=X.nnz,
+                            kc=int(col_nnz.max()) if X.nnz else 1,
+                            kr=int(row_nnz.max()) if X.nnz else 1)
+    store = getattr(X, "content_hash", None)
+    if store is not None and hasattr(X, "to_host_csr"):
+        return data_stats(X.to_host_csr())
+    if hasattr(X, "resolve"):                       # DatasetRef
+        resolved, _ = X.resolve()
+        return data_stats(resolved)
+    arr = np.asarray(X)
+    if arr.ndim == 2:
+        nnz_mask = arr != 0
+        row = nnz_mask.sum(axis=1)
+        col = nnz_mask.sum(axis=0)
+        return ProblemStats(n=arr.shape[0], d=arr.shape[1],
+                            nnz=int(nnz_mask.sum()),
+                            kc=int(col.max()) if col.size else 1,
+                            kr=int(row.max()) if row.size else 1)
+    raise TypeError(f"cannot derive problem stats from {type(X).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# per-iteration cost model (FLOPs / bytes per FW step, by backend)
+# ---------------------------------------------------------------------------
+
+
+def step_costs(stats: ProblemStats, backend: str) -> Tuple[float, float]:
+    """(flops, bytes) of one FW iteration — the paper's complexity table
+    turned into roofline inputs.  Coefficients follow the analytic counts in
+    ``fw_dense.dense_fw_flops`` / ``fw_sparse.sparse_fw_flops_estimate``."""
+    n, d, nnz = stats.n, stats.d, stats.nnz
+    if backend == "dense":
+        flops = 4.0 * nnz + 4.0 * n + 6.0 * d
+        bytes_ = 4.0 * (2.0 * nnz + 2.0 * n + 3.0 * d)
+        return flops, bytes_
+    # Alg-2 family: K_c×K_r fused tile + two-level/√D selection + O(K) queue
+    # refresh.  jax_dense additionally touches the D-wide sampler state.
+    tile = float(stats.kc) * float(stats.kr)
+    sqrt_d = math.sqrt(max(d, 1))
+    flops = 6.0 * tile + 4.0 * stats.kc + 3.0 * sqrt_d
+    bytes_ = 4.0 * (3.0 * tile + 4.0 * stats.kc + 2.0 * sqrt_d)
+    if backend == "jax_dense":
+        flops += 2.0 * d
+        bytes_ += 8.0 * d
+    if backend == "jax_shard":
+        # the blocked schedule trades the tile for per-shard lanes plus the
+        # collective term (charged separately by callers that know the mesh)
+        bytes_ += 4.0 * stats.kc
+    return flops, bytes_
+
+
+def step_time_model(stats: ProblemStats, backend: str,
+                    platform: str) -> float:
+    """Modeled seconds per FW iteration on ``platform`` (roofline bound)."""
+    flops, bytes_ = step_costs(stats, backend)
+    if platform == "cpu":
+        terms = roofline_terms(flops=flops, bytes_accessed=bytes_,
+                               collective_bytes=0.0, chips=1,
+                               peak_flops=CPU_PEAK_FLOPS, hbm_bw=CPU_HBM_BW)
+    else:
+        terms = roofline_terms(flops=flops, bytes_accessed=bytes_,
+                               collective_bytes=0.0, chips=1)
+    return float(terms["t_bound_s"])
+
+
+# ---------------------------------------------------------------------------
+# measured-cost book: observations beat the model
+# ---------------------------------------------------------------------------
+
+# (backend, mode, platform, n-bucket, d-bucket) -> smoothed seconds/step/lane
+_COSTBOOK: Dict[tuple, float] = {}
+# keys whose first (compile-tainted) observation has been discarded
+_WARMED: set = set()
+
+
+def _bucket(x: int) -> int:
+    return int(math.log2(max(x, 1)))
+
+
+def _cost_key(backend: str, mode: str, platform: str,
+              stats: ProblemStats) -> tuple:
+    return (backend, mode, platform, _bucket(stats.n), _bucket(stats.d))
+
+
+def record_cost(backend: str, mode: str, platform: str, stats: ProblemStats,
+                seconds_per_step_lane: float) -> None:
+    """Feed an observed per-step-per-lane time back into the planner (the
+    batched drivers call this after every chunk/group).
+
+    The very first observation per key is discarded: it times the XLA
+    compile of a fresh program, which is orders of magnitude above steady
+    state and would poison the mode choice for dozens of EWMA updates.
+    """
+    key = _cost_key(backend, mode, platform, stats)
+    if key not in _WARMED:
+        _WARMED.add(key)
+        return
+    prev = _COSTBOOK.get(key)
+    _COSTBOOK[key] = (seconds_per_step_lane if prev is None
+                      else 0.7 * prev + 0.3 * seconds_per_step_lane)
+
+
+def measured_cost(backend: str, mode: str, platform: str,
+                  stats: ProblemStats) -> Optional[float]:
+    return _COSTBOOK.get(_cost_key(backend, mode, platform, stats))
+
+
+def clear_costbook() -> None:
+    _COSTBOOK.clear()
+    _WARMED.clear()
+
+
+# ---------------------------------------------------------------------------
+# plans
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SolvePlan:
+    """How a sweep group executes — never *what* it computes.
+
+    ``mode``: "vmap" runs the group as one vmapped chunked scan with
+    power-of-two cohort retirement; "sequential" re-enters the width-free
+    per-config chunk program (one compile for any grid size).  ``chunk_steps``
+    of None defers to the per-config/planner default.
+    """
+
+    mode: str = "auto"                   # auto | vmap | sequential
+    chunk_steps: Optional[int] = None
+    backend: Optional[str] = None        # filled for backend="auto" configs
+    notes: str = ""
+
+    def resolved_mode(self, platform: Optional[str] = None) -> str:
+        if self.mode != "auto":
+            return self.mode
+        return "sequential" if _platform(platform) == "cpu" else "vmap"
+
+
+def _platform(platform: Optional[str] = None) -> str:
+    if platform is not None:
+        return platform
+    import jax
+    return jax.devices()[0].platform
+
+
+def default_chunk(steps: int) -> int:
+    return max(1, min(max(8, steps // 8), 256, steps))
+
+
+def cohort_widths(width: int) -> Tuple[int, ...]:
+    """Allowed vmap-cohort widths: powers of two down from the grid size.
+    Retiring converged configs re-enters the next bucket instead of
+    compiling one program per survivor count."""
+    widths = []
+    w = 1
+    while w < width:
+        widths.append(w)
+        w *= 2
+    widths.append(width)
+    return tuple(sorted(set(widths), reverse=True))
+
+
+def choose_backend(stats: ProblemStats, config: FWConfig,
+                   platform: Optional[str] = None) -> str:
+    """Resolve ``backend="auto"`` from the cost model.
+
+    A config that names a mesh wants the sharded engine; otherwise the
+    roofline-modeled per-iteration time decides between the Alg-1 dense scan
+    (wins on small/dense designs where O(nnz + D) ≈ O(K_c·K_r)) and the
+    Alg-2 kernel pipeline (wins everywhere the paper cares about — the
+    sparse D ≫ N regime).
+    """
+    if config.mesh is not None and config.mesh != (1, 1):
+        return "jax_shard"
+    plat = _platform(platform)
+    t_dense = step_time_model(stats, "dense", plat)
+    t_sparse = step_time_model(stats, "jax_sparse", plat)
+    return "dense" if t_dense < t_sparse else "jax_sparse"
+
+
+def group_mode(stats: ProblemStats, group_size: int,
+               plan: Optional[SolvePlan] = None,
+               platform: Optional[str] = None) -> str:
+    """vmap vs sequential for one sweep group: measured costs win, then the
+    lane-overhead model, then the platform default."""
+    if plan is not None and plan.mode != "auto":
+        return plan.mode
+    if group_size < 2:
+        return "sequential"
+    plat = _platform(platform)
+    seq = measured_cost("jax_sparse", "sequential", plat, stats)
+    vm = measured_cost("jax_sparse", "vmap", plat, stats)
+    if seq is not None and vm is not None:
+        return "vmap" if vm < seq else "sequential"
+    # First-order model: a B-lane vmap step costs lane·B sequential-step-
+    # equivalents vs B + ~5% dispatch overhead for the loop — B cancels, so
+    # without measurements the choice is a per-platform constant.  The grid
+    # size matters again only through the measured branch above, which is
+    # where the real signal lives.
+    lane = (CPU_VMAP_LANE_OVERHEAD if plat == "cpu"
+            else ACCEL_VMAP_LANE_OVERHEAD)
+    return "vmap" if lane < 1.05 else "sequential"
+
+
+def plan_for(X, configs: Sequence[FWConfig],
+             platform: Optional[str] = None) -> SolvePlan:
+    """One plan for a ``solve_many`` call (stats derived once from ``X``)."""
+    stats = data_stats(X)
+    plat = _platform(platform)
+    steps = configs[0].steps if configs else 0
+    mode = group_mode(stats, len(configs), platform=plat)
+    return SolvePlan(mode=mode, chunk_steps=default_chunk(steps) if steps
+                     else None,
+                     notes=f"platform={plat} n={stats.n} d={stats.d} "
+                           f"nnz={stats.nnz} grid={len(configs)}")

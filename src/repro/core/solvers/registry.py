@@ -43,6 +43,10 @@ class Backend:
     queues: Mapping[str, str]        # accepted queue name -> native name
     default_queue: Optional[str]     # used when config.queue is None
     doc: str = ""
+    # §9: single-compiled-scan engines cannot watch a host clock, so they
+    # reject FWConfig.max_seconds; declared here so admission layers (the
+    # fit service) can refuse such configs *before* charging DP budget.
+    supports_max_seconds: bool = True
 
     def prepare(self, X):
         """Coerce ``X`` into this backend's data layout (what solve() does
@@ -86,13 +90,15 @@ QUEUE_ALIASES: Mapping[str, Mapping[str, str]] = {
 
 
 def register(name: str, *, data_format: str, queues: Mapping[str, str],
-             default_queue: Optional[str], doc: str = "") -> Callable:
+             default_queue: Optional[str], doc: str = "",
+             supports_max_seconds: bool = True) -> Callable:
     """Decorator: add ``fn(data, y, config) -> FWResult`` under ``name``."""
 
     def deco(fn: Callable) -> Callable:
         _REGISTRY[name] = Backend(name=name, fn=fn, data_format=data_format,
                                   queues=queues, default_queue=default_queue,
-                                  doc=doc)
+                                  doc=doc,
+                                  supports_max_seconds=supports_max_seconds)
         return fn
 
     return deco
@@ -266,12 +272,21 @@ def solve(X, y=None, config: Optional[FWConfig] = None,
     (in which case ``y`` defaults to the store's labels).  ``y``: (N,)
     labels in {0, 1}.  Keyword overrides are applied on top of ``config``
     (``solve(X, y, backend="jax_sparse", steps=100)``).
+
+    ``backend="auto"`` defers the engine choice to the cost-model planner
+    (DESIGN.md §9): the problem's shape statistics pick between the Alg-1
+    dense scan, the Alg-2 kernel pipeline, and (when ``mesh`` names a real
+    grid) the sharded engine.
     """
     config = config or FWConfig()
     if overrides:
         config = dataclasses.replace(config, **overrides)
+    X, y = resolve_data(X, y)
+    if config.backend == "auto":
+        from repro.core.solvers.planner import choose_backend, data_stats
+        config = dataclasses.replace(
+            config, backend=choose_backend(data_stats(X), config))
     backend = get_backend(config.backend)
     config = resolve_queue(backend, config)
-    X, y = resolve_data(X, y)
     data = _COERCE[backend.data_format](X)
     return backend.fn(data, y, config)

@@ -1,0 +1,84 @@
+"""Shared host-side machinery for gap-adaptive early stopping (DESIGN.md §9).
+
+The masked chunk scans live with their backends (``fw_dense._dense_chunk``,
+``jax_sparse.fw_scan_chunk``); what they have in common is the *driver*: a
+host loop that re-enters one compiled chunk until the on-device ``done``
+flag lands, the wall clock runs out, or T is spent — then assembles the
+full-length sentinel-padded output arrays.  That contract (0.0-padded gaps,
+-1-padded coords, ``stop_step``/``stop_reason`` resolution) is defined once
+here so the backends cannot drift apart.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.solvers.config import (STOP_GAP_TOL, STOP_MAX_SECONDS,
+                                       STOP_MAX_STEPS, FWConfig)
+
+
+def resolve_chunk(config: FWConfig) -> int:
+    """Chunk length for the chunked drivers/cohort scheduler: the config's
+    pin if present, else the planner default (one policy, defined once in
+    ``planner.default_chunk``)."""
+    from repro.core.solvers.planner import default_chunk
+    if config.chunk_steps is not None:
+        return max(1, min(int(config.chunk_steps), config.steps))
+    return default_chunk(config.steps)
+
+
+def drive_chunks(
+    advance: Callable,      # (carry, t0, chunk_len) -> (carry, outs tuple)
+    carry,
+    *,
+    steps: int,
+    chunk: int,
+    max_seconds: Optional[float],
+    done_of: Callable,      # carry -> device bool: certificate landed
+    stop_at_of: Callable,   # carry -> device int: steps applied at freeze
+) -> Tuple[object, List[Tuple[jnp.ndarray, ...]], int, str]:
+    """Re-enter one compiled masked chunk until the run ends.
+
+    Returns ``(carry, chunk_outputs, stop_step, stop_reason)`` where
+    ``chunk_outputs`` is the list of per-chunk output tuples in order.
+    """
+    outs: List[Tuple[jnp.ndarray, ...]] = []
+    t0, stop_reason = 0, STOP_MAX_STEPS
+    t_start = time.perf_counter()
+    while t0 < steps:
+        c = min(chunk, steps - t0)
+        carry, out = advance(carry, t0, c)
+        outs.append(out if isinstance(out, tuple) else (out,))
+        t0 += c
+        if bool(done_of(carry)):
+            stop_reason = STOP_GAP_TOL
+            break
+        if (max_seconds is not None
+                and time.perf_counter() - t_start >= max_seconds):
+            stop_reason = STOP_MAX_SECONDS
+            break
+    stop_step = (int(stop_at_of(carry)) if bool(done_of(carry)) else t0)
+    return carry, outs, stop_step, stop_reason
+
+
+def assemble_outputs(
+    chunk_outputs: Sequence[Tuple[jnp.ndarray, ...]], steps: int,
+    pad_values: Sequence,
+) -> Tuple[jnp.ndarray, ...]:
+    """Concatenate per-chunk output streams and sentinel-pad each to the
+    static length ``steps`` (``pad_values[i]`` per stream — 0.0 for gaps,
+    -1 for coords...).  Steps the scan ran past the stop inside the final
+    chunk are already sentinel-masked by the scan itself."""
+    streams = []
+    for i, pad in enumerate(pad_values):
+        parts = [out[i] for out in chunk_outputs]
+        arr = (jnp.concatenate(parts) if parts
+               else jnp.zeros((0,), jnp.float32))
+        ran = arr.shape[0]
+        if ran < steps:
+            filler = jnp.full((steps - ran,), pad, arr.dtype)
+            arr = jnp.concatenate([arr, filler])
+        streams.append(arr)
+    return tuple(streams)

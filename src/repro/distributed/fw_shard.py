@@ -77,6 +77,7 @@ class DistFWConfig:
     delta: float = 1e-6
     seed: int = 0
     compress_topk: int = 0        # 0 = dense α-delta psum; k = EF-top-k exchange
+    gap_tol: float = 0.0          # §9: freeze the scan once g_t ≤ gap_tol
 
     def em_scale(self, n_rows: int) -> float:
         if self.selection != "gumbel":
@@ -90,9 +91,9 @@ class DistFW(NamedTuple):
     """The two jitted stages of one distributed FW program + composition.
 
     ``setup(blocks, y_pad) -> (v̄₀, q̄₀, α₀)`` — sharded P(rows)/P(rows)/
-    P("model"); ``scan(blocks, v̄₀, q̄₀, α₀, lam, em_scale, key) ->
-    (w, gaps, coords)``; ``whole`` is ``scan ∘ setup`` in one jit (what the
-    dry-run lowers so setup's psum is in the collective audit too).
+    P("model"); ``scan(blocks, v̄₀, q̄₀, α₀, lam, em_scale, gap_tol, key) ->
+    (w, gaps, coords, stop_step)``; ``whole`` is ``scan ∘ setup`` in one jit
+    (what the dry-run lowers so setup's psum is in the collective audit too).
     """
 
     setup: Any
@@ -106,12 +107,17 @@ def _row_axes(mesh: Mesh) -> Tuple[str, ...]:
 
 def build_dist_fw(blocks_abs, mesh: Mesh, *, steps: int,
                   loss: str = "logistic", selection: str = "gumbel",
-                  compress_topk: int = 0) -> DistFW:
+                  compress_topk: int = 0, early_stop: bool = False) -> DistFW:
     """Build the (setup, scan, whole) program for one abstract block layout.
 
-    λ, the EM scale and the PRNG key are *traced* arguments of ``scan`` —
-    the whole (λ, ε)-grid shares one compile.  Shapes, ``steps``,
-    ``selection`` and ``compress_topk`` are baked in.
+    λ, the EM scale, the gap tolerance and the PRNG key are *traced*
+    arguments of ``scan`` — the whole (λ, ε)-grid shares one compile.
+    Shapes, ``steps``, ``selection``, ``compress_topk`` and ``early_stop``
+    are baked in.  With ``early_stop`` the scan is masked (DESIGN.md §9):
+    the gap is a replicated scalar, so every device freezes its carry —
+    local w/v̄/q̄/α shards, the EF-top-k residual and the PRNG key — on the
+    same step, bit-for-bit, and the frozen steps' collectives exchange
+    discarded values; ``gap_tol <= 0`` never triggers.
     """
     rows = _row_axes(mesh)
     b_sz = blocks_abs.csc_rows.shape[1]
@@ -142,9 +148,9 @@ def build_dist_fw(blocks_abs, mesh: Mesh, *, steps: int,
         setup_body, mesh=mesh, in_specs=(blocks_spec, P(rows)),
         out_specs=(P(rows), P(rows), P("model")), check_rep=False)
 
-    # ---- scan: T iterations, (λ, em_scale, key) traced --------------------
+    # ---- scan: T iterations, (λ, em_scale, gap_tol, key) traced -----------
     def scan_body(blocks: BlockSparse, vbar0, qbar0, alpha0,
-                  lam, em_scale, key):
+                  lam, em_scale, gap_tol, key):
         csc_r = blocks.csc_rows.reshape(d_loc, -1)     # (D_loc, Kc)
         csc_v = blocks.csc_vals.reshape(d_loc, -1)
         csr_c = blocks.csr_cols.reshape(n_loc, -1)     # (N_loc, Kr)
@@ -153,6 +159,7 @@ def build_dist_fw(blocks_abs, mesh: Mesh, *, steps: int,
         col_valid = (my_b * d_loc + jnp.arange(d_loc)) < d
         lam = jnp.asarray(lam, jnp.float32)
         em_scale = jnp.asarray(em_scale, jnp.float32)
+        gap_tol = jnp.asarray(gap_tol, jnp.float32)
 
         def selection_fn(alpha, key_t):
             logits = jnp.where(col_valid, em_scale * jnp.abs(alpha), -jnp.inf)
@@ -173,9 +180,12 @@ def build_dist_fw(blocks_abs, mesh: Mesh, *, steps: int,
             alpha_j = jax.lax.psum(jnp.where(mine, alpha[j_self], 0.0), "model")
             return mine, j_loc, alpha_j
 
-        def iteration(carry, t):
-            w_loc, w_m, g_t, vbar, qbar, alpha, resid, key = carry
-            key, key_t = jax.random.split(key)
+        def iteration(carry, t_int):
+            (w_loc, w_m, g_t, vbar, qbar, alpha, resid, key,
+             done, stop_at) = carry
+            t = t_int.astype(jnp.float32)
+            old = (w_loc, w_m, g_t, vbar, qbar, alpha, resid, key)
+            key_next, key_t = jax.random.split(key)
             mine, j_loc, alpha_j = selection_fn(alpha, key_t)
 
             # ---- Alg 2 lines 16-21 (replicated scalar math)
@@ -230,27 +240,44 @@ def build_dist_fw(blocks_abs, mesh: Mesh, *, steps: int,
 
             j_global = jax.lax.psum(
                 jnp.where(mine, my_b * d_loc + j_loc, 0), "model")
-            return ((w_loc, w_m, g_t, vbar, qbar, alpha, resid, key),
-                    (gap, j_global))
+            j_global = j_global.astype(jnp.int32)
+            new = (w_loc, w_m, g_t, vbar, qbar, alpha, resid, key_next)
+            if not early_stop:
+                return new + (done, stop_at), (gap, j_global)
+            # ---- §9 masked stopping: gap is replicated, so all devices
+            # freeze the same step and the frozen lanes stay bit-identical.
+            newly = jnp.logical_and(~done, jnp.logical_and(gap_tol > 0,
+                                                           gap <= gap_tol))
+            kept = jax.tree_util.tree_map(
+                lambda o, fresh: jnp.where(done, o, fresh), old, new)
+            out = (jnp.where(done, jnp.float32(0.0), gap),
+                   jnp.where(done, -1, j_global))
+            return kept + (jnp.logical_or(done, newly),
+                           jnp.where(newly, t_int, stop_at)), out
 
         carry0 = (
             jnp.zeros((d_loc,), jnp.float32), jnp.float32(1.0),
             jnp.float32(0.0), vbar0, qbar0, alpha0,
             jnp.zeros((d_loc,), jnp.float32), key,
+            jnp.asarray(False), jnp.asarray(0, jnp.int32),
         )
-        ts = jnp.arange(1, steps + 1, dtype=jnp.float32)
-        (w_loc, w_m, *_), (gaps, coords) = jax.lax.scan(iteration, carry0, ts)
-        return w_loc * w_m, gaps, coords
+        ts = jnp.arange(1, steps + 1, dtype=jnp.int32)
+        ((w_loc, w_m, *rest), (gaps, coords)) = jax.lax.scan(
+            iteration, carry0, ts)
+        done, stop_at = rest[-2], rest[-1]
+        stop_step = jnp.where(done, stop_at, jnp.asarray(steps, jnp.int32))
+        return w_loc * w_m, gaps, coords, stop_step
 
     scalar = P()
     scan_sm = shard_map(
         scan_body, mesh=mesh,
         in_specs=(blocks_spec, P(rows), P(rows), P("model"),
-                  scalar, scalar, scalar),
-        out_specs=(P("model"), P(), P()), check_rep=False)
+                  scalar, scalar, scalar, scalar),
+        out_specs=(P("model"), P(), P(), P()), check_rep=False)
 
-    def whole(blocks, y_pad, lam, em_scale, key):
-        return scan_sm(blocks, *setup_sm(blocks, y_pad), lam, em_scale, key)
+    def whole(blocks, y_pad, lam, em_scale, gap_tol, key):
+        return scan_sm(blocks, *setup_sm(blocks, y_pad), lam, em_scale,
+                       gap_tol, key)
 
     return DistFW(setup=jax.jit(setup_sm), scan=jax.jit(scan_sm),
                   whole=jax.jit(whole))
@@ -260,14 +287,16 @@ def distributed_fw(blocks: BlockSparse, y: jnp.ndarray, cfg: DistFWConfig,
                    mesh: Mesh):
     """Run T distributed FW iterations. y: (N_pad,) f32 padded with zeros.
 
-    Returns (w, gaps, coords) with w sharded over "model".
+    Returns (w, gaps, coords, stop_step) with w sharded over "model".
     """
     prog = build_dist_fw(blocks, mesh, steps=cfg.steps, loss=cfg.loss,
                          selection=cfg.selection,
-                         compress_topk=cfg.compress_topk)
+                         compress_topk=cfg.compress_topk,
+                         early_stop=cfg.gap_tol > 0)
     n = blocks.shape[0]
     return prog.whole(blocks, y, jnp.float32(cfg.lam),
                       jnp.float32(cfg.em_scale(n)),
+                      jnp.float32(cfg.gap_tol),
                       jax.random.PRNGKey(cfg.seed))
 
 

@@ -16,6 +16,13 @@ counts and extrapolate
 
 which is exact for layer-homogeneous stacks (all ours are, per group).
 benchmarks/roofline_table.py drives this.
+
+``roofline_terms`` is also the cost kernel of the solver-scheduling planner
+(``repro.core.solvers.planner``, DESIGN.md §9): per-FW-iteration FLOP/byte
+counts are fed through the same three-term bound — with the planner's
+conservative CPU constants substituted via the ``peak_flops``/``hbm_bw``
+keywords on host platforms — to choose between Alg-1/Alg-2 engines and
+between vmapped and sequential sweep execution.
 """
 from __future__ import annotations
 

@@ -19,14 +19,25 @@ design matrix (the hyperparameter-sweep traffic pattern of Khanna et al.).
   * **batch** packs admitted requests into sweep groups (``batched.group_key``)
     and chops each group to at most ``slots`` configs — the compiled-batch
     width, directly analogous to the serving engine's decode-slot count;
-  * **drain** runs each slot-batch through ``solve_many`` (one vmapped scan
-    per ``jax_sparse`` batch; ``jax_shard`` batches share one setup +
-    compiled scan on their mesh).  Each backend's data layout is coerced
-    once per service lifetime — the service owns the ``prepared`` cache
-    ``solve_many`` fills — so per-request ``backend=`` selection (e.g. a
-    ``jax_shard`` scale-out fit next to ``jax_sparse`` traffic) costs no
-    repeated conversions and changes nothing about ε-accounting: admission
-    charges by the *resolved* queue name, whatever engine realizes it.
+  * **drain** runs each slot-batch through ``solve_many`` (one shared setup
+    + compiled scan per ``jax_sparse`` batch, scheduled by the §9 planner —
+    cohort-chunked with retirement when requests carry ``gap_tol``;
+    ``jax_shard`` batches share one setup + compiled scan on their mesh).
+    Each backend's data layout is coerced once per service lifetime — the
+    service owns the ``prepared`` cache ``solve_many`` fills — so
+    per-request ``backend=`` selection (e.g. a ``jax_shard`` scale-out fit
+    next to ``jax_sparse`` traffic) costs no repeated conversions and
+    changes nothing about ε-accounting: admission charges by the *resolved*
+    queue name, whatever engine realizes it.
+
+Per-request planning (DESIGN.md §9): a request may submit
+``backend="auto"`` — admission resolves it through the cost-model planner
+against the resident dataset's shape statistics *before* queue resolution,
+so grouping, slot packing and ε-charging all see a concrete backend.
+Early-stopping requests (``gap_tol``/``max_seconds``) are admitted and
+charged exactly like fixed-T ones: DP budget is charged up-front for the
+requested T (stopping early never refunds — the noise draws past the stop
+are simply never consumed, which only *under*-uses the charged budget).
 
 Everything is synchronous single-controller, like ``ServingEngine``: the
 host loop is the scheduler, each drained batch is one XLA program.
@@ -94,6 +105,7 @@ class FitService:
         self._coerced: Dict[str, object] = {"padded": as_padded(X)}
         self.X = self._coerced["padded"]   # kept for introspection/back-compat
         self.y = y
+        self._stats = None                 # planner ProblemStats, lazy (§9)
         self.accountants: Dict[str, PrivacyAccountant] = dict(accountants or {})
         self.cfg = config
         self.queue: List[FitRequest] = []
@@ -146,14 +158,36 @@ class FitService:
         }
 
     # --------------------------------------------------------------- internals
+    def _planned_backend(self, cfg: FWConfig) -> str:
+        """Cost-model backend choice against the resident dataset (stats
+        derived once per service lifetime from the already-coerced padded
+        layout — no extra data pass)."""
+        from repro.core.solvers.planner import choose_backend, data_stats
+        if self._stats is None:
+            self._stats = data_stats(self._coerced["padded"])
+        return choose_backend(self._stats, cfg)
+
     def _admit(self, req: FitRequest) -> bool:
         """Validate the config, resolve the queue, and charge the tenant for
         private fits.  Refusals leave the accountant untouched (spend is
         atomic — it raises before mutating), and a request is only charged
         once it can no longer fail validation."""
         try:
-            backend = get_backend(req.config.backend)
-            resolved = resolve_queue(backend, req.config)
+            cfg = req.config
+            if cfg.backend == "auto":                # §9 per-request planning
+                cfg = dataclasses.replace(
+                    cfg, backend=self._planned_backend(cfg))
+            backend = get_backend(cfg.backend)
+            if (cfg.max_seconds is not None
+                    and not backend.supports_max_seconds):
+                # the backend adapter would raise this at drain time — after
+                # the charge, and failing its whole batch; refuse here,
+                # charge-free, instead
+                raise ValueError(
+                    f"backend {backend.name!r} runs as one compiled scan "
+                    "and cannot enforce max_seconds; use gap_tol or a "
+                    "chunked backend")
+            resolved = resolve_queue(backend, cfg)
             resolved.loss_fn()                       # unknown loss -> KeyError
         except (ValueError, KeyError) as e:
             return self._reject(req, str(e))

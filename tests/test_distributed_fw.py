@@ -44,14 +44,15 @@ out["gap_dist"] = float(res.gaps[-1])
 out["gap_host"] = float(host.gaps[-1])
 
 with mesh:
-    wg, gg, cg = distributed_fw(
+    wg, gg, cg, sg = distributed_fw(
         blocks, y_pad,
         DistFWConfig(lam=8.0, steps=60, selection="gumbel", epsilon=1.0), mesh)
 out["dp_finite"] = bool(np.isfinite(np.asarray(wg)).all())
 out["dp_unique_coords"] = len(set(np.asarray(cg).tolist()))
+out["dp_stop_step"] = int(sg)
 
 with mesh:
-    wc, gc, _ = distributed_fw(
+    wc, gc, _, _ = distributed_fw(
         blocks, y_pad,
         DistFWConfig(lam=8.0, steps=80, selection="argmax", compress_topk=8),
         mesh)
@@ -86,6 +87,7 @@ def test_distributed_gap_matches(dist_result):
 def test_distributed_dp_runs(dist_result):
     assert dist_result["dp_finite"]
     assert dist_result["dp_unique_coords"] > 10   # EM explores
+    assert dist_result["dp_stop_step"] == 60      # no gap_tol → full T
 
 
 def test_topk_compression_converges(dist_result):

@@ -1,0 +1,257 @@
+"""Gap-adaptive early stopping (DESIGN.md §9): prefix parity + stop reports.
+
+The stopping contract every backend must honor:
+
+  * the iteration that produces the certificate (g_t ≤ gap_tol) is applied,
+    then the run freezes — so the returned ``w`` is **bit-identical** to a
+    fixed-budget run of exactly ``stop_step`` iterations (same config, same
+    keys), private or not;
+  * ``stop_step`` equals the first index of the full run's gap trace at (or
+    below) the tolerance, +1 — stopping is a pure function of the observable
+    trace (compared at float32, the trace's own precision);
+  * ``gaps``/``coords`` keep their full length with 0.0 / -1 sentinels past
+    the stop, and ``stop_reason`` says why the run ended;
+  * batched execution (``solve_many``) retires configs at their own stop
+    steps under every planner mode, with results identical to sequential
+    early-stopped ``solve()``.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.solvers import FWConfig, grid, solve, solve_many
+
+ALL_BACKENDS = ("dense", "jax_dense", "host_sparse", "jax_sparse")
+STEPS = 40
+
+
+@pytest.fixture(scope="module")
+def problem():
+    from repro.data.synthetic import make_sparse_classification
+    X, y, _ = make_sparse_classification(
+        n=150, d=600, nnz_per_row=10, informative=15, seed=11)
+    return X, y
+
+
+def _tol_and_expected(gaps: np.ndarray, k: int):
+    """A tolerance whose first crossing is well-defined even on noisy DP
+    traces (prefix-minimum at step k), plus that expected stop step."""
+    tol = max(float(np.min(gaps[: k + 1])), 1e-7)
+    return tol, int(np.argmax(gaps <= np.float32(tol))) + 1
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+@pytest.mark.parametrize("queue", [None, "bsls"])
+def test_stopped_run_is_prefix_of_full_run(problem, backend, queue):
+    """Acceptance: stopped iterate bit-identical to the corresponding
+    prefix of a full run, on all four backends, private + non-private."""
+    X, y = problem
+    base = FWConfig(backend=backend, lam=8.0, steps=STEPS, queue=queue,
+                    epsilon=1.0, delta=1e-6)
+    full = solve(X, y, base)
+    assert full.stop_step_or() == STEPS
+    assert full.stop_reason == "max_steps"
+
+    gaps = np.asarray(full.gaps)
+    tol, expected = _tol_and_expected(gaps, STEPS // 3)
+    stopped = solve(X, y, dataclasses.replace(base, gap_tol=tol))
+
+    assert stopped.stop_step_or() == expected
+    assert stopped.stop_reason == "gap_tol"
+    ss = expected
+    np.testing.assert_array_equal(np.asarray(stopped.coords)[:ss],
+                                  np.asarray(full.coords)[:ss])
+    np.testing.assert_array_equal(np.asarray(stopped.gaps)[:ss], gaps[:ss])
+    # sentinels past the stop
+    assert (np.asarray(stopped.coords)[ss:] == -1).all()
+    assert (np.asarray(stopped.gaps)[ss:] == 0.0).all()
+    # bit-identical to a run of exactly stop_step iterations
+    prefix = solve(X, y, dataclasses.replace(base, steps=ss))
+    np.testing.assert_array_equal(np.asarray(stopped.w),
+                                  np.asarray(prefix.w))
+
+
+def test_unreachable_tolerance_runs_full(problem):
+    X, y = problem
+    for backend in ALL_BACKENDS:
+        r = solve(X, y, FWConfig(backend=backend, lam=8.0, steps=10,
+                                 gap_tol=1e-30))
+        assert r.stop_step_or() == 10
+        assert r.stop_reason == "max_steps"
+        assert (np.asarray(r.coords) != -1).all()
+
+
+def test_negative_or_zero_tolerance_disables_stopping(problem):
+    X, y = problem
+    cfg = FWConfig(backend="jax_sparse", lam=8.0, steps=10, gap_tol=-1.0)
+    assert not cfg.early_stopping
+    r = solve(X, y, cfg)
+    assert r.stop_step_or() == 10 and r.stop_reason == "max_steps"
+
+
+@pytest.mark.parametrize("backend", ["host_sparse", "jax_sparse", "dense"])
+def test_max_seconds_stops_early(problem, backend):
+    X, y = problem
+    r = solve(X, y, FWConfig(backend=backend, lam=8.0, steps=5000,
+                             max_seconds=0.0))
+    assert r.stop_reason == "max_seconds"
+    assert 1 <= r.stop_step_or() < 5000
+    # the partial run is still a valid FW iterate trace
+    assert np.isfinite(np.asarray(r.w)).all()
+    assert (np.asarray(r.coords)[r.stop_step_or():] == -1).all()
+
+
+def test_single_scan_backends_reject_max_seconds(problem):
+    X, y = problem
+    for backend in ("jax_dense", "jax_shard"):
+        with pytest.raises(ValueError, match="max_seconds"):
+            solve(X, y, FWConfig(backend=backend, lam=8.0, steps=5,
+                                 max_seconds=1.0))
+
+
+def test_jax_shard_gap_tol_matches_prefix(problem):
+    """The masked collective scan (1×1 mesh) freezes bit-identically."""
+    X, y = problem
+    base = FWConfig(backend="jax_shard", lam=8.0, steps=STEPS)
+    full = solve(X, y, base)
+    gaps = np.asarray(full.gaps)
+    tol, expected = _tol_and_expected(gaps, STEPS // 3)
+    stopped = solve(X, y, dataclasses.replace(base, gap_tol=tol))
+    assert stopped.stop_step_or() == expected
+    assert stopped.stop_reason == "gap_tol"
+    np.testing.assert_array_equal(np.asarray(stopped.coords)[:expected],
+                                  np.asarray(full.coords)[:expected])
+    prefix = solve(X, y, dataclasses.replace(base, steps=expected))
+    np.testing.assert_array_equal(np.asarray(stopped.w),
+                                  np.asarray(prefix.w))
+
+
+# ---------------------------------------------------------------------------
+# batched: cohort retirement at per-config stop steps
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def adaptive_grid(problem):
+    """A λ grid whose configs converge at spread-out steps, with the
+    sequential early-stopped runs as the parity oracle."""
+    X, y = problem
+    configs = grid(FWConfig(backend="jax_sparse", steps=60, chunk_steps=8),
+                   lam=(4.0, 6.0, 8.0, 12.0, 16.0, 24.0))
+    seq_full = [solve(X, y, c) for c in configs]
+    adaptive = []
+    for i, (c, r) in enumerate(zip(configs, seq_full)):
+        tol, _ = _tol_and_expected(np.asarray(r.gaps), 10 + 8 * i)
+        adaptive.append(dataclasses.replace(c, gap_tol=tol))
+    oracle = [solve(X, y, c) for c in adaptive]
+    return X, y, adaptive, oracle
+
+
+@pytest.mark.parametrize("plan", ["vmap", "sequential", None])
+def test_solve_many_retires_configs_at_their_own_steps(adaptive_grid, plan):
+    """Acceptance: a solve_many grid where configs converge at different
+    steps — every planner mode reproduces the sequential stops exactly."""
+    X, y, adaptive, oracle = adaptive_grid
+    batched = solve_many(X, y, adaptive, plan=plan)
+    stops = [r.stop_step_or() for r in batched]
+    assert stops == [r.stop_step_or() for r in oracle]
+    assert len(set(stops)) >= 3, "grid should converge at varied steps"
+    for b, s in zip(batched, oracle):
+        assert b.stop_reason == s.stop_reason == "gap_tol"
+        np.testing.assert_array_equal(np.asarray(b.coords),
+                                      np.asarray(s.coords))
+        np.testing.assert_array_equal(np.asarray(b.w), np.asarray(s.w))
+        np.testing.assert_array_equal(np.asarray(b.gaps),
+                                      np.asarray(s.gaps))
+
+
+def test_solve_many_private_adaptive_grid(problem):
+    """DP sweep with per-config tolerances: batched == sequential, and the
+    unconsumed post-stop noise draws never perturb the prefix."""
+    X, y = problem
+    base = grid(FWConfig(backend="jax_sparse", steps=30, queue="bsls",
+                         delta=1e-6),
+                lam=(4.0, 16.0), epsilon=(0.5, 2.0))
+    seq_full = [solve(X, y, c) for c in base]
+    adaptive = []
+    for c, r in zip(base, seq_full):
+        tol, _ = _tol_and_expected(np.asarray(r.gaps), 12)
+        adaptive.append(dataclasses.replace(c, gap_tol=tol))
+    oracle = [solve(X, y, c) for c in adaptive]
+    batched = solve_many(X, y, adaptive)
+    for b, s in zip(batched, oracle):
+        assert b.stop_step_or() == s.stop_step_or()
+        np.testing.assert_array_equal(np.asarray(b.coords),
+                                      np.asarray(s.coords))
+        np.testing.assert_array_equal(np.asarray(b.w), np.asarray(s.w))
+
+
+def test_shard_group_adaptive(problem):
+    """jax_shard grids stack gap_tol as a traced scalar (1×1 vmapped)."""
+    X, y = problem
+    base = grid(FWConfig(backend="jax_shard", steps=30), lam=(6.0, 12.0))
+    seq_full = [solve(X, y, c) for c in base]
+    adaptive = []
+    for c, r in zip(base, seq_full):
+        tol, _ = _tol_and_expected(np.asarray(r.gaps), 10)
+        adaptive.append(dataclasses.replace(c, gap_tol=tol))
+    oracle = [solve(X, y, c) for c in adaptive]
+    batched = solve_many(X, y, adaptive)
+    for b, s in zip(batched, oracle):
+        assert b.stop_step_or() == s.stop_step_or()
+        assert b.stop_reason == s.stop_reason
+        np.testing.assert_array_equal(np.asarray(b.w), np.asarray(s.w))
+
+
+def test_fit_service_refuses_unsupportable_max_seconds_charge_free(problem):
+    """A max_seconds request for a single-scan backend must be refused at
+    admission — before any DP charge — not explode its drained batch."""
+    from repro.core.dp.accountant import PrivacyAccountant
+    from repro.serve import FitRequest, FitService
+    X, y = problem
+    svc = FitService(X, y, accountants={
+        "t": PrivacyAccountant(epsilon=4.0, delta=1e-6, total_steps=400)})
+    bad = FitRequest(uid=0, tenant="t", config=FWConfig(
+        backend="jax_dense", lam=8.0, steps=20, queue="bsls", epsilon=1.0,
+        delta=1e-6, max_seconds=5.0))
+    good = FitRequest(uid=1, tenant="t", config=FWConfig(
+        backend="jax_dense", lam=8.0, steps=20, queue="bsls", epsilon=1.0,
+        delta=1e-6))
+    svc.submit(bad)
+    svc.submit(good)
+    done = {r.uid: r for r in svc.run()}
+    assert done[0].status == "rejected"
+    assert "max_seconds" in done[0].reason
+    assert done[1].status == "done"        # batch-mate unharmed
+    # only the good request was charged
+    spent = svc.accountants["t"].spent_steps
+    solo = FitService(X, y, accountants={
+        "t": PrivacyAccountant(epsilon=4.0, delta=1e-6, total_steps=400)})
+    solo.submit(FitRequest(uid=0, tenant="t", config=good.config))
+    solo.run()
+    assert spent == solo.accountants["t"].spent_steps
+
+
+def test_fit_service_charges_full_T_for_early_stopped_fits(problem):
+    """ε-accounting is untouched by stopping: budget is charged up-front for
+    the requested T whether or not the certificate lands early."""
+    from repro.core.dp.accountant import PrivacyAccountant
+    from repro.serve import FitRequest, FitService
+    X, y = problem
+    mk = lambda: {"t": PrivacyAccountant(epsilon=4.0, delta=1e-6,
+                                         total_steps=400)}
+    fixed_svc = FitService(X, y, accountants=mk())
+    fixed_svc.submit(FitRequest(uid=0, tenant="t", config=FWConfig(
+        backend="jax_sparse", lam=8.0, steps=30, queue="bsls", epsilon=1.0,
+        delta=1e-6)))
+    fixed_svc.run()
+    adaptive_svc = FitService(X, y, accountants=mk())
+    adaptive_svc.submit(FitRequest(uid=0, tenant="t", config=FWConfig(
+        backend="jax_sparse", lam=8.0, steps=30, queue="bsls", epsilon=1.0,
+        delta=1e-6, gap_tol=1e30)))
+    done = adaptive_svc.run()
+    assert done[0].status == "done"
+    assert done[0].result.stop_step_or() < 30
+    assert (adaptive_svc.accountants["t"].spent_steps
+            == fixed_svc.accountants["t"].spent_steps)

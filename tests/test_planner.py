@@ -1,0 +1,144 @@
+"""Cost-model planner (DESIGN.md §9): stats, backend choice, mode choice,
+and the plan-independence of results through solve()/solve_many()/FitService.
+"""
+import numpy as np
+import pytest
+
+from repro.core.solvers import FWConfig, SolvePlan, grid, plan_for, solve, solve_many
+from repro.core.solvers import planner
+
+
+@pytest.fixture(scope="module")
+def problem():
+    from repro.data.synthetic import make_sparse_classification
+    X, y, _ = make_sparse_classification(
+        n=120, d=500, nnz_per_row=8, informative=12, seed=3)
+    return X, y
+
+
+def test_data_stats_layout_agnostic(problem):
+    from repro.core.sparse.formats import host_to_padded
+    X, _ = problem
+    s_host = planner.data_stats(X)
+    s_pair = planner.data_stats(host_to_padded(X))
+    s_dense = planner.data_stats(X.to_dense())
+    assert s_host.n == s_pair.n == s_dense.n == 120
+    assert s_host.d == s_pair.d == s_dense.d == 500
+    assert s_host.nnz == s_pair.nnz == s_dense.nnz == X.nnz
+    assert s_host.kc == s_dense.kc and s_host.kr == s_dense.kr
+    assert 0 < s_host.density < 1
+
+
+def test_choose_backend_regimes():
+    # the paper's regime: sparse, D ≫ N → the Alg-2 kernel pipeline
+    sparse = planner.ProblemStats(n=2000, d=500_000, nnz=80_000, kc=64,
+                                  kr=40)
+    assert planner.choose_backend(sparse, FWConfig()) == "jax_sparse"
+    # small dense designs: Alg 1's O(nnz + D) beats the padded tile
+    dense = planner.ProblemStats(n=80, d=50, nnz=4000, kc=80, kr=50)
+    assert planner.choose_backend(dense, FWConfig()) == "dense"
+    # a real mesh always means the sharded engine
+    assert planner.choose_backend(
+        sparse, FWConfig(mesh=(2, 2))) == "jax_shard"
+
+
+def test_group_mode_cpu_defaults_sequential():
+    stats = planner.ProblemStats(n=2000, d=4800, nnz=80_000, kc=64, kr=40)
+    planner.clear_costbook()
+    assert planner.group_mode(stats, 8, platform="cpu") == "sequential"
+    assert planner.group_mode(stats, 8, platform="tpu") == "vmap"
+    assert planner.group_mode(stats, 1, platform="tpu") == "sequential"
+    # measured costs override the platform default (first observation per
+    # key is compile-tainted and discarded, so record twice)
+    for _ in range(2):
+        planner.record_cost("jax_sparse", "vmap", "cpu", stats, 0.001)
+        planner.record_cost("jax_sparse", "sequential", "cpu", stats, 0.010)
+    assert planner.group_mode(stats, 8, platform="cpu") == "vmap"
+    planner.clear_costbook()
+
+
+def test_costbook_ewma_and_warmup_discard():
+    stats = planner.ProblemStats(n=1000, d=4000, nnz=50_000, kc=32, kr=32)
+    planner.clear_costbook()
+    assert planner.measured_cost("jax_sparse", "vmap", "cpu", stats) is None
+    # first observation per key times a fresh compile — discarded
+    planner.record_cost("jax_sparse", "vmap", "cpu", stats, 999.0)
+    assert planner.measured_cost("jax_sparse", "vmap", "cpu", stats) is None
+    planner.record_cost("jax_sparse", "vmap", "cpu", stats, 1.0)
+    planner.record_cost("jax_sparse", "vmap", "cpu", stats, 0.0)
+    got = planner.measured_cost("jax_sparse", "vmap", "cpu", stats)
+    assert got == pytest.approx(0.7)
+    planner.clear_costbook()
+
+
+def test_plan_for_and_default_chunk(problem):
+    X, _ = problem
+    cfgs = grid(FWConfig(backend="jax_sparse", steps=64), lam=(1.0, 2.0))
+    plan = plan_for(X, cfgs, platform="cpu")
+    assert plan.resolved_mode("cpu") == "sequential"
+    assert plan.chunk_steps == planner.default_chunk(64) == 8
+    assert planner.default_chunk(4000) == 256
+    assert planner.default_chunk(3) == 3
+    assert "grid=2" in plan.notes
+
+
+def test_cohort_widths_buckets():
+    assert planner.cohort_widths(8) == (8, 4, 2, 1)
+    assert planner.cohort_widths(6) == (6, 4, 2, 1)
+    assert planner.cohort_widths(1) == (1,)
+
+
+def test_solve_auto_backend_matches_explicit(problem):
+    X, y = problem
+    auto = solve(X, y, FWConfig(backend="auto", lam=8.0, steps=15))
+    explicit = solve(X, y, FWConfig(
+        backend=planner.choose_backend(planner.data_stats(X), FWConfig()),
+        lam=8.0, steps=15))
+    np.testing.assert_array_equal(np.asarray(auto.coords),
+                                  np.asarray(explicit.coords))
+    np.testing.assert_array_equal(np.asarray(auto.w), np.asarray(explicit.w))
+
+
+def test_solve_many_rejects_bogus_plan(problem):
+    X, y = problem
+    with pytest.raises(ValueError, match="plan"):
+        solve_many(X, y, [FWConfig(backend="jax_sparse", steps=2)],
+                   plan="turbo")
+
+
+def test_solve_many_plan_object_chunk_override(problem):
+    X, y = problem
+    cfgs = grid(FWConfig(backend="jax_sparse", steps=20, gap_tol=1e-30),
+                lam=(4.0, 8.0, 12.0))
+    a = solve_many(X, y, cfgs, plan=SolvePlan(mode="vmap", chunk_steps=5))
+    b = solve_many(X, y, cfgs, plan=SolvePlan(mode="vmap", chunk_steps=20))
+    c = solve_many(X, y, cfgs, plan="sequential")
+    for ra, rb, rc in zip(a, b, c):
+        np.testing.assert_array_equal(np.asarray(ra.w), np.asarray(rb.w))
+        np.testing.assert_array_equal(np.asarray(ra.w), np.asarray(rc.w))
+        np.testing.assert_array_equal(np.asarray(ra.coords),
+                                      np.asarray(rc.coords))
+
+
+def test_fit_service_auto_backend_charges_like_explicit(problem):
+    """Per-request planning resolves backend='auto' at admission; ε-charging
+    is identical to the explicitly-routed request (charge is by resolved
+    queue, not engine)."""
+    from repro.core.dp.accountant import PrivacyAccountant
+    from repro.serve import FitRequest, FitService
+    X, y = problem
+    mk = lambda: {"t": PrivacyAccountant(epsilon=4.0, delta=1e-6,
+                                         total_steps=200)}
+    cfg = dict(lam=8.0, steps=20, queue="bsls", epsilon=1.0, delta=1e-6)
+    svc_auto = FitService(X, y, accountants=mk())
+    svc_auto.submit(FitRequest(uid=0, tenant="t",
+                               config=FWConfig(backend="auto", **cfg)))
+    done_auto = svc_auto.run()
+    svc_exp = FitService(X, y, accountants=mk())
+    svc_exp.submit(FitRequest(uid=0, tenant="t",
+                              config=FWConfig(backend="jax_sparse", **cfg)))
+    done_exp = svc_exp.run()
+    assert done_auto[0].status == done_exp[0].status == "done"
+    assert done_auto[0].config.backend in ("jax_sparse", "dense")
+    assert (svc_auto.accountants["t"].spent_steps
+            == svc_exp.accountants["t"].spent_steps)
