@@ -64,16 +64,23 @@ def _pick_tols(seq_results, steps: int, frac_lo: float, frac_hi: float):
 def run(datasets=("rcv1", "news20"), lams=(10.0, 20.0, 40.0, 80.0),
         epsilons=(0.5, 2.0), steps: int = 60, backend: str = "jax_sparse",
         stop_fracs=(0.3, 0.9)):
+    """``datasets`` entries are either a name (logistic loss) or a
+    ``(name, loss)`` pair — e.g. ``("rcv1", "huber")`` sweeps the same grid
+    under a non-logistic registered objective (result row ``rcv1_huber``),
+    so the perf gate pins scheduling + parity per loss, not just for the
+    paper's logistic runs."""
     from benchmarks.common import load_problem
     from repro.core.solvers import FWConfig, grid, solve, solve_many
     from repro.core.solvers.planner import plan_for
 
     out = {"grid": {"lam": list(lams), "epsilon": list(epsilons)},
            "steps": steps, "backend": backend, "datasets": {}}
-    for name in datasets:
+    for entry in datasets:
+        name, loss = entry if isinstance(entry, tuple) else (entry, "logistic")
+        row_key = name if loss == "logistic" else f"{name}_{loss}"
         prob = load_problem(name)
         configs = grid(FWConfig(backend=backend, steps=steps, queue="bsls",
-                                delta=1e-6),
+                                delta=1e-6, loss=loss),
                        lam=lams, epsilon=epsilons)
 
         # ---- warm every compiled program off the clock -------------------
@@ -125,6 +132,7 @@ def run(datasets=("rcv1", "news20"), lams=(10.0, 20.0, 40.0, 80.0),
                            np.asarray(f.coords)[:ss])
             for b, f, ss in zip(batched, seq, stop_steps))
         row = {
+            "loss": loss,
             "n": prob.X.shape[0], "d": prob.X.shape[1],
             "density": prob.X.nnz / (prob.X.shape[0] * prob.X.shape[1]),
             "configs": len(configs),
@@ -141,8 +149,8 @@ def run(datasets=("rcv1", "news20"), lams=(10.0, 20.0, 40.0, 80.0),
             "pass_parity": bool(coords_equal and prefix_equal
                                 and max_w_dev == 0.0),
         }
-        out["datasets"][name] = row
-        print(f"[sweep] {name}: {len(configs)} cfgs  "
+        out["datasets"][row_key] = row
+        print(f"[sweep] {row_key}: {len(configs)} cfgs  "
               f"seq-fixed {sequential_s:.1f}s  batched-adaptive "
               f"{batched_s:.1f}s  ({row['sweep_speedup']}x)  "
               f"stops={stop_steps}  parity={row['pass_parity']}  "

@@ -67,7 +67,7 @@ def main():
             datasets=("rcv1",) if fast else ("rcv1", "news20", "url"),
             steps=800 if fast else 2000, backend=alg2_backend),
         "sweep": lambda: bench_sweep.run(
-            datasets=("rcv1", "news20"),
+            datasets=("rcv1", "news20", ("rcv1", "huber")),
             lams=(10.0, 20.0, 40.0, 80.0), epsilons=(0.5, 2.0),
             steps=40 if fast else 120,
             backend=args.backend or "jax_sparse"),

@@ -69,15 +69,22 @@ def _dense_step(X: Design, y: jnp.ndarray, config: FWConfig, masked: bool):
     else:
         b, em_scale = 0.0, 0.0
 
-    ybar = _rmatvec(X, y) / n  # precomputed label part of the gradient
+    # Separable objectives precompute the label part of the gradient; the
+    # label-coupled ones evaluate the full row gradient each pass.
+    separable = loss.separable
+    ybar = _rmatvec(X, y) / n if separable else None
 
     def step(carry, t_int):
         w, key, done, stop_at = carry
         t = t_int.astype(jnp.float32)
         key_next, sel_key = jax.random.split(key)
         v = _matvec(X, w)                        # O(N·S_c)
-        q = loss.split_grad(v)                   # O(N)
-        alpha = _rmatvec(X, q) / n - ybar        # O(N·S_c) + O(D)
+        if separable:
+            q = loss.split_grad(v)               # O(N)
+            alpha = _rmatvec(X, q) / n - ybar    # O(N·S_c) + O(D)
+        else:
+            q = loss.grad(v, y)                  # O(N)
+            alpha = _rmatvec(X, q) / n           # O(N·S_c) + O(D)
         mean_loss = jnp.mean(loss.value(v, y))
 
         score = lam * jnp.abs(alpha)

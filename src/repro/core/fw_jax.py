@@ -40,6 +40,7 @@ def sparse_fw_jax(
     lam = config.lam
     loss = config.loss_fn()
     h = loss.split_grad
+    separable = loss.separable
     private = config.queue == "two_level"
     if private:
         eps_step = per_step_epsilon(config.epsilon, config.delta, config.steps)
@@ -48,13 +49,19 @@ def sparse_fw_jax(
         em_scale = 1.0  # priorities are raw |α|
 
     dtype = pcsr.values.dtype
-    ybar = pcsr.rmatvec(y) / n
 
     # ---- first-iteration dense pass (paper Alg 2 lines 8-14) ----------------
+    # Separable objectives use the ȳ decomposition; label-coupled ones carry
+    # the full row gradient in q̄ (α = Xᵀq̄/N, no ȳ term).
     w0 = jnp.zeros(d, dtype)
     vbar0 = jnp.zeros(n, dtype)
-    qbar0 = h(vbar0)
-    alpha0 = pcsr.rmatvec(qbar0) / n - ybar
+    if separable:
+        ybar = pcsr.rmatvec(y) / n
+        qbar0 = h(vbar0)
+        alpha0 = pcsr.rmatvec(qbar0) / n - ybar
+    else:
+        qbar0 = loss.grad(vbar0, y)
+        alpha0 = pcsr.rmatvec(qbar0) / n
 
     if private:
         sampler0 = tl_init(jnp.abs(alpha0) * em_scale)
@@ -90,7 +97,8 @@ def sparse_fw_jax(
         dv = jnp.where(mask, eta * d_tilde * xvals / w_m_new, 0.0)
         vbar_new = vbar.at[rows].add(dv)
         margins = w_m_new * vbar_new[rows]
-        gamma = jnp.where(mask, h(margins) - qbar[rows], 0.0)
+        hm = h(margins) if separable else loss.grad(margins, y[rows])
+        gamma = jnp.where(mask, hm - qbar[rows], 0.0)
         qbar_new = qbar.at[rows].add(gamma)
         row_idx = pcsr.indices[rows]                      # (Kc, Kr)
         row_val = pcsr.values[rows]                       # (Kc, Kr) — 0 at padding

@@ -37,16 +37,23 @@ from repro.core.samplers.fib_heap import FibHeapQueue
 from repro.core.sparse.formats import HostCSC, HostCSR
 
 
-def _split_grad_np(loss_name: str):
-    if loss_name == "logistic":
-        def h(m):
-            return 1.0 / (1.0 + np.exp(-m))
-    elif loss_name == "squared":
-        def h(m):
-            return m
-    else:
-        raise ValueError(loss_name)
-    return h
+def _row_grad_np(loss_name: str, y: np.ndarray):
+    """float64 per-row gradient map over row subsets: ``h(m, rows)``.
+
+    Separable objectives ignore the rows (``h(m) = split_grad(m)``); the
+    label-coupled ones gather their labels (``grad(m, y[rows])``).  ``rows``
+    may be an index array or a scalar row id.
+    """
+    obj = get_loss(loss_name)
+    if obj.separable:
+        h_np = obj.split_grad_np
+        if h_np is None:
+            raise ValueError(f"loss {loss_name!r} has no numpy twin")
+        return lambda m, rows: h_np(m)
+    g_np = obj.grad_np
+    if g_np is None:
+        raise ValueError(f"loss {loss_name!r} has no numpy twin")
+    return lambda m, rows: g_np(m, y[rows])
 
 
 @dataclasses.dataclass
@@ -86,7 +93,8 @@ def sparse_fw(
     max_seconds: Optional[float] = None,  # §9: wall-clock budget
 ) -> SparseFWResult:
     n, d = X_csr.shape
-    h = _split_grad_np(loss)
+    y = np.asarray(y)
+    h = _row_grad_np(loss, y)
     loss_obj = get_loss(loss)
     csc = X_csc if X_csc is not None else X_csr.tocsc()
     flops = 0
@@ -109,10 +117,10 @@ def sparse_fw(
     flops += 2 * X_csr.nnz + d
 
     vbar = np.zeros(n)         # stored v̄ (true = w_m·v̄)
-    qbar = h(np.zeros(n))      # q̄ = h(0) at w = 0
-    alpha = -ybar.copy()       # α = (Xᵀq̄(0) − ȳ)... fixed below for h(0)≠0
+    qbar = h(np.zeros(n), slice(None))   # q̄ = h(0) at w = 0
     z0 = X_csr.rmatvec(qbar) / n
-    alpha = z0 - ybar
+    # separable: α = Xᵀq̄/N − ȳ; label-coupled: q̄ already carries the label
+    alpha = z0 - ybar if loss_obj.separable else z0
     flops += 2 * X_csr.nnz + n + 2 * d
 
     # --- queue ----------------------------------------------------------------
@@ -162,7 +170,7 @@ def sparse_fw(
             # per-row loop below (rows are unique; α adds commute), the per-
             # element work moved from the interpreter to the vector unit.
             vbar[rows] += eta * d_tilde * xvals / w_m            # line 23
-            gamma = h(w_m * vbar[rows]) - qbar[rows]             # line 24
+            gamma = h(w_m * vbar[rows], rows) - qbar[rows]       # line 24
             qbar[rows] += gamma                                  # line 25
             starts, ends = indptr[rows], indptr[rows + 1]
             sizes = (ends - starts).astype(np.int64)
@@ -186,7 +194,7 @@ def sparse_fw(
                 i = rows[i_idx]
                 x_ij = xvals[i_idx]
                 vbar[i] += eta * d_tilde * x_ij / w_m          # line 23
-                gamma = h(w_m * vbar[i]) - qbar[i]             # line 24 (q̄⁽ⁱ⁾)
+                gamma = h(w_m * vbar[i], i) - qbar[i]          # line 24 (q̄⁽ⁱ⁾)
                 qbar[i] += gamma                               # line 25
                 r_idx, r_val = X_csr.row(i)
                 contrib = (gamma / n) * r_val

@@ -1,8 +1,11 @@
-"""Loss functions for L1-constrained (LASSO) generalized linear models.
+"""Objectives for L1-constrained (LASSO) generalized linear models.
 
 The paper (Raff, Khanna & Lu, NeurIPS 2023) uses the logistic loss to avoid
 exploiting closed-form linear-regression updates; squared loss is included
-because the authors note the results transfer to linear regression.
+because the authors note the results transfer to linear regression.  The
+engine itself is loss-agnostic: only the per-row gradient ``h`` and the
+L1-Lipschitz constant enter Algorithm 2 and the DP noise scale, so new
+objectives (smoothed LAD, huber, smoothed hinge) plug into every backend.
 
 Conventions
 -----------
@@ -10,31 +13,49 @@ Labels are y ∈ {0, 1}.  A model scores a row with ``m = w · x`` and the
 per-row loss is ``L(m, y)``.  ``grad`` returns dL/dm (the scalar "row
 gradient" called q̄ in the paper's Algorithm 1/2).
 
+Separable vs. label-coupled gradients
+-------------------------------------
+Logistic and squared losses satisfy ``dL/dm = h(m) − y``: the
+label-dependent part ``ȳ = Xᵀy/N`` is precomputed once and only the
+``q̄ = h(v̄)`` half is updated each iteration (the decomposition Algorithms
+1/2 exploit).  Objectives whose gradient couples margin and label (LAD,
+huber, hinge) set ``split_grad=None``; the engine then carries the full
+``q̄_i = grad(m_i, y_i)`` and drops the ȳ term (``label_weight == 0``).
+Both forms keep the same sparse update structure — only the per-row map
+changes — so every backend serves both through ``Objective.h``.
+
 The L1-Lipschitz constant ``L`` enters the DP sensitivity Δu = L·λ/N and the
-Laplace/exponential mechanism scales, so each loss carries it.
+Laplace/exponential mechanism scales, so each objective carries it.  The
+``smooth`` flag gates duality-gap certificates: FW's gap bound assumes a
+curvature (smoothness) constant, so gap-based early stopping
+(``FWConfig.gap_tol > 0``) is refused for non-smooth objectives.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
-class Loss:
-    """A scalar margin loss with its gradient and Lipschitz metadata.
+class Objective:
+    """A scalar margin loss with its gradient, host twins, and DP metadata.
 
     Attributes:
-      value: ``(margins, labels) -> per-row loss`` (elementwise).
-      grad: ``(margins, labels) -> dL/dmargin`` (elementwise).
-      split_grad: ``margins -> h(margins)`` with ``dL/dm = h(m) - y``.  This
-        is the decomposition the paper's Algorithms 1/2 exploit: the
-        label-dependent part ``ȳ = Xᵀy`` is precomputed once, and only the
-        ``q̄ = h(v̄)`` part is updated each iteration.
+      value: ``(margins, labels) -> per-row loss`` (elementwise, traceable).
+      grad: ``(margins, labels) -> dL/dmargin`` (elementwise, traceable).
+      split_grad: ``margins -> h(margins)`` with ``dL/dm = h(m) - y``, or
+        ``None`` when the gradient does not separate from the label.
+      grad_np: float64 numpy twin of ``grad`` for the faithful host backend.
+      split_grad_np: float64 numpy twin of ``split_grad`` (None when
+        ``split_grad`` is None).
       lipschitz: bound on |dL/dmargin| assuming features in [-1, 1]; this is
         the ``L`` of the paper's noise scale ``λ·L·sqrt(8T log(1/δ))/(N·ε)``.
+      smooth: whether dL/dm is Lipschitz in m (C¹ loss) — required for the
+        FW duality-gap certificate, hence for ``gap_tol`` early stopping.
       curvature_note: how the FW curvature constant Γ is bounded.
       name: identifier used by configs.
     """
@@ -42,12 +63,52 @@ class Loss:
     name: str
     value: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
     grad: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
-    split_grad: Callable[[jnp.ndarray], jnp.ndarray]
+    split_grad: Optional[Callable[[jnp.ndarray], jnp.ndarray]]
     lipschitz: float
+    grad_np: Optional[Callable[[np.ndarray, np.ndarray], np.ndarray]] = None
+    split_grad_np: Optional[Callable[[np.ndarray], np.ndarray]] = None
+    smooth: bool = True
     curvature_note: str = ""
+
+    @property
+    def separable(self) -> bool:
+        """True when dL/dm = split_grad(m) − y (logistic/squared form)."""
+        return self.split_grad is not None
+
+    @property
+    def label_weight(self) -> float:
+        """Coefficient of the precomputed ȳ = Xᵀy/N term in α updates."""
+        return 1.0 if self.separable else 0.0
+
+    def h(self, margins: jnp.ndarray, labels: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """The per-row map q̄ tracks: ``split_grad(m)`` for separable
+        objectives, the full ``grad(m, y)`` otherwise."""
+        if self.separable:
+            return self.split_grad(margins)
+        if labels is None:
+            raise ValueError(
+                f"objective {self.name!r} is label-coupled; h() needs labels")
+        return self.grad(margins, labels)
+
+    def h_np(self, margins: np.ndarray, labels: Optional[np.ndarray] = None) -> np.ndarray:
+        """float64 numpy twin of ``h`` for the faithful host backend."""
+        if self.separable:
+            if self.split_grad_np is None:
+                raise ValueError(f"objective {self.name!r} has no numpy twin")
+            return self.split_grad_np(margins)
+        if self.grad_np is None:
+            raise ValueError(f"objective {self.name!r} has no numpy twin")
+        if labels is None:
+            raise ValueError(
+                f"objective {self.name!r} is label-coupled; h_np() needs labels")
+        return self.grad_np(margins, labels)
 
     def mean_value(self, margins: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
         return jnp.mean(self.value(margins, labels))
+
+
+# Back-compat alias: the engine grew up calling this ``Loss``.
+Loss = Objective
 
 
 def _logistic_value(m, y):
@@ -60,11 +121,13 @@ def _logistic_grad(m, y):
     return jax.nn.sigmoid(m) - y
 
 
-LOGISTIC = Loss(
+LOGISTIC = Objective(
     name="logistic",
     value=_logistic_value,
     grad=_logistic_grad,
     split_grad=jax.nn.sigmoid,
+    grad_np=lambda m, y: 1.0 / (1.0 + np.exp(-m)) - y,
+    split_grad_np=lambda m: 1.0 / (1.0 + np.exp(-m)),
     lipschitz=1.0,  # |sigmoid(m) - y| <= 1
     curvature_note="Γ_L <= λ² · max_i ‖x_i‖∞² / 4 for logistic loss",
 )
@@ -78,22 +141,130 @@ def _squared_grad(m, y):
     return m - y
 
 
-SQUARED = Loss(
+SQUARED = Objective(
     name="squared",
     value=_squared_value,
     grad=_squared_grad,
     split_grad=lambda m: m,
+    grad_np=lambda m, y: m - y,
+    split_grad_np=lambda m: m,
     # Unbounded in general; bounded by max |m - y| on the L1 ball with
     # features in [-1,1]: |m| <= λ, so L <= λ + 1.  Callers may override.
     lipschitz=1.0,
     curvature_note="Γ = λ² · max eig(XᵀX)/N for squared loss",
 )
 
-LOSSES = {l.name: l for l in (LOGISTIC, SQUARED)}
+
+# --- smoothed least-absolute-deviation (pseudo-Huber) ----------------------
+# |r| is not differentiable at 0, which would void the gap certificate and
+# break the traced kernels' finite-difference contracts; the pseudo-Huber
+# smoothing sqrt(r² + μ²) − μ is C∞, → |r| as μ → 0, and keeps |grad| ≤ 1.
+_LAD_MU = 0.25
 
 
-def get_loss(name: str) -> Loss:
+def _lad_value(m, y):
+    r = m - y
+    return jnp.sqrt(r * r + _LAD_MU * _LAD_MU) - _LAD_MU
+
+
+def _lad_grad(m, y):
+    r = m - y
+    return r / jnp.sqrt(r * r + _LAD_MU * _LAD_MU)
+
+
+LAD = Objective(
+    name="lad",
+    value=_lad_value,
+    grad=_lad_grad,
+    split_grad=None,  # r/√(r²+μ²) does not separate into h(m) − y
+    grad_np=lambda m, y: (m - y) / np.sqrt((m - y) ** 2 + _LAD_MU * _LAD_MU),
+    lipschitz=1.0,  # |r|/√(r²+μ²) < 1
+    curvature_note="Γ <= λ²·max_i ‖x_i‖∞²/μ (pseudo-Huber second derivative ≤ 1/μ)",
+)
+
+
+# --- huber ------------------------------------------------------------------
+# δ = 0.5 deliberately gives L = 0.5 ≠ 1.0 so the per-loss sensitivity path
+# through accountant.em_log_weight_scale is exercised (and pinned) by a loss
+# whose scale differs from logistic's.
+_HUBER_DELTA = 0.5
+
+
+def _huber_value(m, y):
+    r = m - y
+    a = jnp.abs(r)
+    return jnp.where(a <= _HUBER_DELTA, 0.5 * r * r,
+                     _HUBER_DELTA * (a - 0.5 * _HUBER_DELTA))
+
+
+def _huber_grad(m, y):
+    return jnp.clip(m - y, -_HUBER_DELTA, _HUBER_DELTA)
+
+
+HUBER = Objective(
+    name="huber",
+    value=_huber_value,
+    grad=_huber_grad,
+    split_grad=None,  # clip(m − y, ·) does not separate into h(m) − y
+    grad_np=lambda m, y: np.clip(m - y, -_HUBER_DELTA, _HUBER_DELTA),
+    lipschitz=_HUBER_DELTA,  # |clip(r, −δ, δ)| <= δ
+    curvature_note="Γ <= λ²·max_i ‖x_i‖∞² (huber second derivative ≤ 1)",
+)
+
+
+# --- smoothed hinge (Rennie & Srebro 2005) ----------------------------------
+# SVM-style margin loss on ỹ = 2y − 1 ∈ {−1, +1}, quadratically smoothed on
+# the hinge corner so it stays C¹ (gap certificates remain valid).
+def _smoothed_hinge_value(m, y):
+    z = (2.0 * y - 1.0) * m
+    return jnp.where(z <= 0.0, 0.5 - z,
+                     jnp.where(z < 1.0, 0.5 * (1.0 - z) ** 2, 0.0))
+
+
+def _smoothed_hinge_grad(m, y):
+    yt = 2.0 * y - 1.0
+    z = yt * m
+    dz = jnp.where(z <= 0.0, -1.0, jnp.where(z < 1.0, z - 1.0, 0.0))
+    return yt * dz
+
+
+def _smoothed_hinge_grad_np(m, y):
+    yt = 2.0 * y - 1.0
+    z = yt * m
+    dz = np.where(z <= 0.0, -1.0, np.where(z < 1.0, z - 1.0, 0.0))
+    return yt * dz
+
+
+SMOOTHED_HINGE = Objective(
+    name="smoothed_hinge",
+    value=_smoothed_hinge_value,
+    grad=_smoothed_hinge_grad,
+    split_grad=None,  # gradient depends on the sign flip ỹ·m
+    grad_np=_smoothed_hinge_grad_np,
+    lipschitz=1.0,  # |dz| <= 1
+    curvature_note="Γ <= λ²·max_i ‖x_i‖∞² (quadratic zone second derivative = 1)",
+)
+
+
+OBJECTIVES = {o.name: o for o in (LOGISTIC, SQUARED, LAD, HUBER, SMOOTHED_HINGE)}
+# Back-compat alias (same dict object — registration is visible through both).
+LOSSES = OBJECTIVES
+
+
+def register_objective(obj: Objective) -> Objective:
+    """Register a custom objective so configs can name it; returns it."""
+    if obj.name in OBJECTIVES:
+        raise ValueError(f"objective {obj.name!r} already registered")
+    OBJECTIVES[obj.name] = obj
+    return obj
+
+
+def get_objective(name: str) -> Objective:
     try:
-        return LOSSES[name]
+        return OBJECTIVES[name]
     except KeyError:
-        raise KeyError(f"unknown loss {name!r}; have {sorted(LOSSES)}") from None
+        raise KeyError(f"unknown loss {name!r}; have {sorted(OBJECTIVES)}") from None
+
+
+# Back-compat alias.
+get_loss = get_objective

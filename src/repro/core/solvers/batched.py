@@ -61,7 +61,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.solvers.config import (STOP_GAP_TOL, STOP_MAX_SECONDS,
-                                       STOP_MAX_STEPS, FWConfig, FWResult)
+                                       STOP_MAX_STEPS, FWConfig, FWResult,
+                                       check_gap_certificate)
 from repro.core.solvers.planner import SolvePlan, record_cost
 from repro.core.solvers.registry import (get_backend, resolve_data,
                                          resolve_queue)
@@ -126,16 +127,18 @@ def group_key(config: FWConfig) -> Tuple:
 
 
 def _sweep_scan(pcsr, pcsc, vbar0, qbar0, alpha0, lams, em_scales, keys,
-                *, steps, loss, private, fused, interpret):
+                y=None, *, steps, loss, private, fused, interpret):
     """One compiled program for a whole sweep group: the vmapped T-step scan
     over shared setup state.  ``lams``/``em_scales``/``keys`` are stacked
     per-config; (v̄₀, q̄₀, α₀) come from ``fw_setup_jit`` — computed once per
-    group, or replayed from a dataset store's persisted cache."""
+    group, or replayed from a dataset store's persisted cache.  ``y`` is the
+    shared label vector, broadcast across lanes (label-coupled objectives
+    only; separable ones pass None)."""
     from repro.core.solvers.jax_sparse import fw_scan
 
     def one(lam, em_scale, key):
         w, gaps, coords, _ = fw_scan(
-            pcsr, pcsc, vbar0, qbar0, alpha0, lam, em_scale, key,
+            pcsr, pcsc, vbar0, qbar0, alpha0, lam, em_scale, key, 0.0, y,
             steps=steps, loss=loss, private=private, fused=fused,
             interpret=interpret)
         return w, gaps, coords
@@ -149,7 +152,7 @@ _sweep_scan_jit = jax.jit(
 
 
 def _cohort_chunk(pcsr, pcsc, carry, lams, em_scales, gap_tols, t0,
-                  *, steps, loss, private, fused, interpret):
+                  y=None, *, steps, loss, private, fused, interpret):
     """One vmapped chunk of the cohort scheduler: every lane advances
     ``steps`` masked iterations from offset ``t0`` (lanes that already hold
     their certificate stay frozen, bit-for-bit)."""
@@ -157,7 +160,7 @@ def _cohort_chunk(pcsr, pcsc, carry, lams, em_scales, gap_tols, t0,
 
     def one(carry_i, lam, em_scale, gap_tol):
         return fw_scan_chunk(pcsr, pcsc, carry_i, lam, em_scale, gap_tol, t0,
-                             steps=steps, loss=loss, private=private,
+                             y, steps=steps, loss=loss, private=private,
                              fused=fused, interpret=interpret,
                              early_stop=True)
 
@@ -194,6 +197,15 @@ def _group_context(data, y, configs: Sequence[FWConfig]):
     return pcsr, pcsc, setup, scalars
 
 
+def _group_labels(c0: FWConfig, y):
+    """Label operand for the group's scan: None for separable objectives
+    (their compiled programs never read labels), the shared f32 vector for
+    label-coupled ones."""
+    if c0.loss_fn().separable:
+        return None
+    return jnp.asarray(y, jnp.float32)
+
+
 def _group_stats(pcsr, pcsc):
     from repro.core.solvers.planner import ProblemStats
     n, d = pcsr.shape
@@ -209,16 +221,18 @@ def _solve_jax_sparse_group(
     c0 = configs[0]
     pcsr, pcsc, setup, sc = _group_context(data, y, configs)
     private = c0.queue == "two_level"
-    fused = c0.loss == "logistic"
+    fused = True
     t0 = time.perf_counter()
     w, gaps, coords = _sweep_scan_jit(
         pcsr, pcsc, *setup, sc["lams"], sc["em_scales"], sc["keys"],
+        _group_labels(c0, y),
         steps=c0.steps, loss=c0.loss, private=private, fused=fused,
         interpret=c0.interpret)
     jax.block_until_ready(w)
     record_cost("jax_sparse", "vmap", jax.devices()[0].platform,
                 _group_stats(pcsr, pcsc),
-                (time.perf_counter() - t0) / (c0.steps * len(configs)))
+                (time.perf_counter() - t0) / (c0.steps * len(configs)),
+                loss=c0.loss)
     return [FWResult(w=w[i], gaps=gaps[i], coords=coords[i],
                      losses=jnp.zeros_like(gaps[i]), stop_step=c0.steps,
                      stop_reason=STOP_MAX_STEPS)
@@ -244,7 +258,7 @@ def _solve_jax_sparse_group_sequential(
         jax.block_until_ready(res.w)
         ran = max(res.stop_step_or(cfg.steps), 1)
         record_cost("jax_sparse", "sequential", platform, stats,
-                    (time.perf_counter() - t0) / ran)
+                    (time.perf_counter() - t0) / ran, loss=cfg.loss)
         out.append(res)
     return out
 
@@ -266,7 +280,8 @@ def _solve_jax_sparse_group_cohort(
     stats = _group_stats(pcsr, pcsc)
     platform = jax.devices()[0].platform
     private = c0.queue == "two_level"
-    fused = c0.loss == "logistic"
+    fused = True
+    y_scan = _group_labels(c0, y)
     n_cfg = len(configs)
     steps = c0.steps
     chunk = resolve_chunk(c0)
@@ -309,12 +324,12 @@ def _solve_jax_sparse_group_cohort(
         tw = time.perf_counter()
         padded, (g, j) = _cohort_chunk_jit(
             pcsr, pcsc, padded, sc["lams"][cfg_sel], sc["em_scales"][cfg_sel],
-            sc["gap_tols"][cfg_sel], t0,
+            sc["gap_tols"][cfg_sel], t0, y_scan,
             steps=c, loss=c0.loss, private=private, fused=fused,
             interpret=c0.interpret)
         jax.block_until_ready(g)
         record_cost("jax_sparse", "vmap", platform, stats,
-                    (time.perf_counter() - tw) / (c * width))
+                    (time.perf_counter() - tw) / (c * width), loss=c0.loss)
         cur = jax.tree_util.tree_map(lambda a: a[: len(active)], padded)
         g_np, j_np = np.asarray(g), np.asarray(j)
         for lane, cfg_id in enumerate(active):
@@ -374,7 +389,8 @@ def _run_jax_sparse_group(data, y, member_cfgs: Sequence[FWConfig],
         from repro.core.solvers.planner import group_mode
         pcsr = (data.pcsr if hasattr(data, "pcsr") else data[0])
         pcsc = (data.pcsc if hasattr(data, "pcsc") else data[1])
-        mode = group_mode(_group_stats(pcsr, pcsc), len(member_cfgs))
+        mode = group_mode(_group_stats(pcsr, pcsc), len(member_cfgs),
+                          loss=member_cfgs[0].loss)
     if mode == "sequential":
         return _solve_jax_sparse_group_sequential(data, y, member_cfgs)
     if early:
@@ -418,6 +434,7 @@ def solve_many(X, y=None, configs: Sequence[FWConfig] = (), *,
             if auto_stats is None:
                 auto_stats = data_stats(X)
             c = dataclasses.replace(c, backend=choose_backend(auto_stats, c))
+        check_gap_certificate(c)
         backend = get_backend(c.backend)
         resolved.append((backend, resolve_queue(backend, c)))
 

@@ -83,6 +83,26 @@ class FWConfig:
         return self.gap_tol > 0.0 or self.max_seconds is not None
 
 
+def check_gap_certificate(config: FWConfig) -> None:
+    """Refuse ``gap_tol`` stopping when the objective cannot certify it.
+
+    The FW duality gap g_t upper-bounds primal suboptimality only for
+    smooth (curvature-bounded) objectives; an ``Objective`` registered with
+    ``smooth=False`` has no valid gap certificate, so a config asking to
+    stop on one is a contract error — refused up front (charge-free in the
+    fit service) rather than silently mis-stopping.  Also surfaces unknown
+    loss names early (``KeyError`` from the objective registry).
+    """
+    obj = config.loss_fn()
+    if config.gap_tol > 0.0 and not obj.smooth:
+        note = obj.curvature_note or "no curvature bound"
+        raise ValueError(
+            f"loss {config.loss!r} is not smooth ({note}): the FW gap "
+            "certificate is invalid, so gap_tol early stopping is "
+            "unavailable — run fixed steps or use max_seconds on a host "
+            "backend")
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class FWResult:

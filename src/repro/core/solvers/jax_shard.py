@@ -104,7 +104,7 @@ def vmapped_scan(blocks_abs, mesh, *, steps: int, loss: str, selection: str,
         prog = shard_program(blocks_abs, mesh, steps=steps, loss=loss,
                              selection=selection, early_stop=early_stop)
         _VMAPPED[key] = jax.jit(jax.vmap(
-            prog.scan, in_axes=(None, None, None, None, 0, 0, 0, 0)))
+            prog.scan, in_axes=(None, None, None, None, None, 0, 0, 0, 0)))
     return _VMAPPED[key]
 
 
@@ -139,9 +139,10 @@ def shard_fw(src: ShardSource, y, config: FWConfig) -> FWResult:
                          selection=config.queue,
                          early_stop=config.gap_tol > 0)
     with mesh:
-        setup = prog.setup(blocks, _pad_labels(y, blocks.padded[0]))
+        ypad = _pad_labels(y, blocks.padded[0])
+        setup = prog.setup(blocks, ypad)
         w, gaps, coords, stop_step = prog.scan(
-            blocks, *setup, jnp.float32(config.lam),
+            blocks, ypad, *setup, jnp.float32(config.lam),
             jnp.float32(shard_em_scale(config, n)),
             jnp.float32(config.gap_tol),
             jax.random.PRNGKey(config.seed))
@@ -167,17 +168,18 @@ def solve_shard_group(src: ShardSource, y, configs) -> list:
     tols = jnp.asarray([c.gap_tol for c in configs], jnp.float32)
     keys = jnp.stack([jax.random.PRNGKey(c.seed) for c in configs])
     with mesh:
-        setup = prog.setup(blocks, _pad_labels(y, blocks.padded[0]))
+        ypad = _pad_labels(y, blocks.padded[0])
+        setup = prog.setup(blocks, ypad)
         if a * b == 1:
             vscan = vmapped_scan(blocks, mesh, steps=c0.steps, loss=c0.loss,
                                  selection=c0.queue, early_stop=early)
-            w, gaps, coords, stops = vscan(blocks, *setup, lams, scales,
+            w, gaps, coords, stops = vscan(blocks, ypad, *setup, lams, scales,
                                            tols, keys)
             outs = [(w[i], gaps[i], coords[i], stops[i])
                     for i in range(len(configs))]
         else:
-            outs = [prog.scan(blocks, *setup, lams[i], scales[i], tols[i],
-                              keys[i])
+            outs = [prog.scan(blocks, ypad, *setup, lams[i], scales[i],
+                              tols[i], keys[i])
                     for i in range(len(configs))]
     return [_shard_result(w, g, c, s, d, c0.steps) for (w, g, c, s) in outs]
 

@@ -76,14 +76,22 @@ def fw_setup(
 
     Depends only on (X, y, loss) — a λ/ε sweep over one design matrix
     computes this once and shares it across every problem in the batch.
+
+    Separable objectives use the paper's ȳ decomposition; label-coupled ones
+    carry the full row gradient in q̄ (α = Xᵀq̄/N with no ȳ term).
     """
     n = pcsr.shape[0]
     dtype = pcsr.values.dtype
-    h = get_loss(loss).split_grad
-    ybar = ell_rmatvec(pcsr, y, interpret=interpret) / n
+    obj = get_loss(loss)
     vbar0 = jnp.zeros(n, dtype)
-    qbar0 = h(vbar0)
-    alpha0 = ell_rmatvec(pcsr, qbar0, interpret=interpret) / n - ybar
+    if obj.separable:
+        h = obj.split_grad
+        ybar = ell_rmatvec(pcsr, y, interpret=interpret) / n
+        qbar0 = h(vbar0)
+        alpha0 = ell_rmatvec(pcsr, qbar0, interpret=interpret) / n - ybar
+    else:
+        qbar0 = obj.grad(vbar0, y)
+        alpha0 = ell_rmatvec(pcsr, qbar0, interpret=interpret) / n
     return vbar0, qbar0, alpha0
 
 
@@ -126,7 +134,7 @@ def fw_carry_init(
 
 def fw_scan_chunk(
     pcsr: PaddedCSR, pcsc: PaddedCSC, carry: FWCarry,
-    lam, em_scale, gap_tol, t0,
+    lam, em_scale, gap_tol, t0, y=None,
     *, steps: int, loss: str, private: bool, fused: bool, interpret: bool,
     early_stop: bool = False,
 ) -> Tuple[FWCarry, Tuple[jnp.ndarray, jnp.ndarray]]:
@@ -148,9 +156,16 @@ def fw_scan_chunk(
     noise draw is ever consumed past the stop — freezes bit-for-bit and the
     outputs emit (0.0, -1).  ``gap_tol <= 0`` never triggers, so mixed
     cohorts are safe.
+
+    ``y`` is the label vector, required (traced) for label-coupled
+    objectives; separable objectives pass ``None`` so their compiled
+    programs are unchanged.
     """
     n, d = pcsr.shape
-    h = get_loss(loss).split_grad
+    obj = get_loss(loss)
+    if not obj.separable and y is None:
+        raise ValueError(f"loss {loss!r} is label-coupled; pass y")
+    h = obj.split_grad
     dtype = pcsr.values.dtype
     inv_n = 1.0 / n
     lam = jnp.asarray(lam, dtype)
@@ -183,15 +198,17 @@ def fw_scan_chunk(
         rows, xvals, mask = pcsc.col(j)                  # (Kc,)
         row_idx = pcsr.indices[rows]                     # (Kc, Kr)
         row_val = pcsr.values[rows]                      # (Kc, Kr) — 0 at padding
+        y_col = None if obj.separable else y[rows]
         if fused:
             vbar, qbar, alpha, g_delta = coord_update(
                 vbar, qbar, alpha, w, rows, xvals, mask, row_idx, row_val,
                 eta=eta, d_tilde=d_tilde, w_m=w_m, inv_n=inv_n,
-                interpret=interpret)
+                loss=loss, y_col=y_col, interpret=interpret)
         else:
             vbar, qbar, alpha, g_delta = coord_update_ref(
                 vbar, qbar, alpha, w, rows, xvals, mask, row_idx, row_val,
-                eta=eta, d_tilde=d_tilde, w_m=w_m, inv_n=inv_n, h=h)
+                eta=eta, d_tilde=d_tilde, w_m=w_m, inv_n=inv_n,
+                h=h if obj.separable else obj.grad, y_col=y_col)
         g_tilde = g_tilde + g_delta
         # ---- line 29: refresh queue priorities for touched coordinates ------
         flat_idx = row_idx.reshape(-1)
@@ -225,7 +242,7 @@ def fw_scan_chunk(
 def fw_scan(
     pcsr: PaddedCSR, pcsc: PaddedCSC,
     vbar0: jnp.ndarray, qbar0: jnp.ndarray, alpha0: jnp.ndarray,
-    lam, em_scale, key: jax.Array, gap_tol=0.0,
+    lam, em_scale, key: jax.Array, gap_tol=0.0, y=None,
     *, steps: int, loss: str, private: bool, fused: bool, interpret: bool,
     early_stop: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
@@ -238,7 +255,7 @@ def fw_scan(
     carry0 = fw_carry_init(pcsr.shape[1], dtype, vbar0, qbar0, alpha0,
                            em_scale, key, private=private)
     carry, (gaps, coords) = fw_scan_chunk(
-        pcsr, pcsc, carry0, lam, em_scale, gap_tol, 0,
+        pcsr, pcsc, carry0, lam, em_scale, gap_tol, 0, y,
         steps=steps, loss=loss, private=private, fused=fused,
         interpret=interpret, early_stop=early_stop)
     stop_step = jnp.where(carry.done, carry.stop_at,
@@ -270,7 +287,7 @@ def em_scale_for(config: FWConfig, n_rows: int) -> float:
 
 
 def _chunked_fw(pcsr, pcsc, setup, config: FWConfig, em_scale: float,
-                private: bool, fused: bool) -> FWResult:
+                private: bool, fused: bool, y=None) -> FWResult:
     """Host-driven chunk loop: re-enter one compiled ``fw_scan_chunk`` until
     the gap certificate lands, ``max_seconds`` expires, or T is spent
     (shared driver/assembly contract: ``solvers.stopping``)."""
@@ -281,7 +298,7 @@ def _chunked_fw(pcsr, pcsc, setup, config: FWConfig, em_scale: float,
 
     def advance(carry, t0, c):
         return fw_scan_chunk_jit(
-            pcsr, pcsc, carry, config.lam, em_scale, config.gap_tol, t0,
+            pcsr, pcsc, carry, config.lam, em_scale, config.gap_tol, t0, y,
             steps=c, loss=config.loss, private=private, fused=fused,
             interpret=config.interpret, early_stop=True)
 
@@ -312,21 +329,21 @@ def jax_sparse_fw(
     """
     n, _ = pcsr.shape
     private = config.queue == "two_level"
-    # The fused kernel hardwires logistic h = σ; other losses fall back to the
-    # jnp oracle (same math, unfused).
-    fused = config.loss == "logistic"
+    # Every registered objective lowers its own fused kernel.
+    fused = True
     em_scale = em_scale_for(config, n)
+    y_scan = None if config.loss_fn().separable else jnp.asarray(y)
 
     if setup is None:
         setup = fw_setup_jit(pcsr, y, loss=config.loss,
                              interpret=config.interpret)
     if config.early_stopping:
         return _chunked_fw(pcsr, pcsc, setup, config, em_scale, private,
-                           fused)
+                           fused, y=y_scan)
     vbar0, qbar0, alpha0 = setup
     w, gaps, coords, stop_step = fw_scan_jit(
         pcsr, pcsc, vbar0, qbar0, alpha0,
-        config.lam, em_scale, jax.random.PRNGKey(config.seed),
+        config.lam, em_scale, jax.random.PRNGKey(config.seed), 0.0, y_scan,
         steps=config.steps, loss=config.loss, private=private, fused=fused,
         interpret=config.interpret)
     return FWResult(w=w, gaps=gaps, coords=coords,

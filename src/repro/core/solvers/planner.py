@@ -154,7 +154,10 @@ def step_time_model(stats: ProblemStats, backend: str,
 # measured-cost book: observations beat the model
 # ---------------------------------------------------------------------------
 
-# (backend, mode, platform, n-bucket, d-bucket) -> smoothed seconds/step/lane
+# (backend, mode, platform, loss, n-bucket, d-bucket) -> smoothed s/step/lane
+# Keyed per objective: the per-row gradient map changes the fused kernel's
+# arithmetic (and label-coupled objectives add a gather), so observations of
+# one loss never steer another's mode choice.
 _COSTBOOK: Dict[tuple, float] = {}
 # keys whose first (compile-tainted) observation has been discarded
 _WARMED: set = set()
@@ -165,12 +168,13 @@ def _bucket(x: int) -> int:
 
 
 def _cost_key(backend: str, mode: str, platform: str,
-              stats: ProblemStats) -> tuple:
-    return (backend, mode, platform, _bucket(stats.n), _bucket(stats.d))
+              stats: ProblemStats, loss: str = "logistic") -> tuple:
+    return (backend, mode, platform, loss, _bucket(stats.n), _bucket(stats.d))
 
 
 def record_cost(backend: str, mode: str, platform: str, stats: ProblemStats,
-                seconds_per_step_lane: float) -> None:
+                seconds_per_step_lane: float, *,
+                loss: str = "logistic") -> None:
     """Feed an observed per-step-per-lane time back into the planner (the
     batched drivers call this after every chunk/group).
 
@@ -178,7 +182,7 @@ def record_cost(backend: str, mode: str, platform: str, stats: ProblemStats,
     compile of a fresh program, which is orders of magnitude above steady
     state and would poison the mode choice for dozens of EWMA updates.
     """
-    key = _cost_key(backend, mode, platform, stats)
+    key = _cost_key(backend, mode, platform, stats, loss)
     if key not in _WARMED:
         _WARMED.add(key)
         return
@@ -188,8 +192,9 @@ def record_cost(backend: str, mode: str, platform: str, stats: ProblemStats,
 
 
 def measured_cost(backend: str, mode: str, platform: str,
-                  stats: ProblemStats) -> Optional[float]:
-    return _COSTBOOK.get(_cost_key(backend, mode, platform, stats))
+                  stats: ProblemStats, *,
+                  loss: str = "logistic") -> Optional[float]:
+    return _COSTBOOK.get(_cost_key(backend, mode, platform, stats, loss))
 
 
 def clear_costbook() -> None:
@@ -267,7 +272,8 @@ def choose_backend(stats: ProblemStats, config: FWConfig,
 
 def group_mode(stats: ProblemStats, group_size: int,
                plan: Optional[SolvePlan] = None,
-               platform: Optional[str] = None) -> str:
+               platform: Optional[str] = None,
+               loss: str = "logistic") -> str:
     """vmap vs sequential for one sweep group: measured costs win, then the
     lane-overhead model, then the platform default."""
     if plan is not None and plan.mode != "auto":
@@ -275,8 +281,8 @@ def group_mode(stats: ProblemStats, group_size: int,
     if group_size < 2:
         return "sequential"
     plat = _platform(platform)
-    seq = measured_cost("jax_sparse", "sequential", plat, stats)
-    vm = measured_cost("jax_sparse", "vmap", plat, stats)
+    seq = measured_cost("jax_sparse", "sequential", plat, stats, loss=loss)
+    vm = measured_cost("jax_sparse", "vmap", plat, stats, loss=loss)
     if seq is not None and vm is not None:
         return "vmap" if vm < seq else "sequential"
     # First-order model: a B-lane vmap step costs lane·B sequential-step-

@@ -27,7 +27,8 @@ from typing import Callable, Dict, Mapping, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.solvers.config import FWConfig, FWResult
+from repro.core.solvers.config import (FWConfig, FWResult,
+                                       check_gap_certificate)
 from repro.core.solvers.prepared import PreparedDataset
 from repro.core.sparse.formats import (HostCSR, PaddedCSC, PaddedCSR,
                                        dense_to_host, host_to_padded)
@@ -281,6 +282,7 @@ def solve(X, y=None, config: Optional[FWConfig] = None,
     config = config or FWConfig()
     if overrides:
         config = dataclasses.replace(config, **overrides)
+    check_gap_certificate(config)   # non-smooth loss + gap_tol, unknown loss
     X, y = resolve_data(X, y)
     if config.backend == "auto":
         from repro.core.solvers.planner import choose_backend, data_stats

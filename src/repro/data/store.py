@@ -568,23 +568,37 @@ class DatasetStore:
     def setup_streamed(self, loss: str = "logistic"):
         """Out-of-core fw_setup: (v̄₀, q̄₀, α₀) in O(D) from column stats.
 
-        Because v̄₀ = 0, every supported loss has constant q̄₀ = h(0)·1, so
-        α₀ = h(0)·col_sum/N − col_y_sum/N needs **no pass over the data** —
-        the ingest-time column stats suffice.  Float64 accumulation on host,
-        cast to the device dtype; agrees with the kernel ``fw_setup`` to
-        float32 tolerance (not bit-for-bit — use ``prepared()`` when exact
-        replay matters and the padded pair fits in memory).
+        Because v̄₀ = 0 and labels are binary, the initial row gradient is an
+        affine function of y: q̄₀_i = grad(0, y_i) = a + b·y_i with
+        a = grad(0, 0) and b = grad(0, 1) − a (exact on y ∈ {0, 1}, the
+        store's label contract — for separable losses this is the familiar
+        constant h(0) minus the ȳ residual).  α₀ = Xᵀq̄₀/N then needs **no
+        pass over the data**: (a·col_sum + b·col_y_sum)/N from the
+        ingest-time column stats.  Float64 accumulation on host, cast to the
+        device dtype; agrees with the kernel ``fw_setup`` to float32
+        tolerance (not bit-for-bit — use ``prepared()`` when exact replay
+        matters and the padded pair fits in memory).
         """
         import jax.numpy as jnp
 
         from repro.core.losses import get_loss
-        h0 = float(get_loss(loss).split_grad(jnp.zeros(())))
+        obj = get_loss(loss)
         stats = self.col_stats()
         inv_n = 1.0 / max(self.n, 1)
-        ybar = stats.col_y_sum * inv_n
-        alpha0 = h0 * stats.col_sum * inv_n - ybar
-        return (jnp.zeros(self.n, jnp.float32),
-                jnp.full(self.n, h0, jnp.float32),
+        if obj.separable:
+            # q̄₀ = h(0)·1; the engine keeps the ȳ residual out of q̄
+            h0 = float(obj.split_grad(jnp.zeros(())))
+            alpha0 = h0 * stats.col_sum * inv_n - stats.col_y_sum * inv_n
+            qbar0 = jnp.full(self.n, h0, jnp.float32)
+        else:
+            # label-coupled: q̄₀ carries the full row gradient, no ȳ term
+            zero = jnp.zeros(())
+            a = float(obj.grad(zero, jnp.float32(0.0)))
+            b = float(obj.grad(zero, jnp.float32(1.0))) - a
+            alpha0 = (a * stats.col_sum + b * stats.col_y_sum) * inv_n
+            y_host = np.asarray(self.labels(), np.float64)
+            qbar0 = jnp.asarray(a + b * y_host, jnp.float32)
+        return (jnp.zeros(self.n, jnp.float32), qbar0,
                 jnp.asarray(alpha0, jnp.float32))
 
 

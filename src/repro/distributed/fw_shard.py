@@ -91,8 +91,8 @@ class DistFW(NamedTuple):
     """The two jitted stages of one distributed FW program + composition.
 
     ``setup(blocks, y_pad) -> (v̄₀, q̄₀, α₀)`` — sharded P(rows)/P(rows)/
-    P("model"); ``scan(blocks, v̄₀, q̄₀, α₀, lam, em_scale, gap_tol, key) ->
-    (w, gaps, coords, stop_step)``; ``whole`` is ``scan ∘ setup`` in one jit
+    P("model"); ``scan(blocks, y_pad, v̄₀, q̄₀, α₀, lam, em_scale, gap_tol,
+    key) -> (w, gaps, coords, stop_step)``; ``whole`` is ``scan ∘ setup`` in one jit
     (what the dry-run lowers so setup's psum is in the collective audit too).
     """
 
@@ -133,12 +133,18 @@ def build_dist_fw(blocks_abs, mesh: Mesh, *, steps: int,
                               shape=blocks_abs.shape, padded=blocks_abs.padded)
 
     # ---- setup: first-iteration dense pass (Alg 2 lines 8-14) -------------
+    # Separable objectives fold the label into the residual (q̄ − y);
+    # label-coupled ones carry the full row gradient in q̄ directly.
     def setup_body(blocks: BlockSparse, y_loc: jnp.ndarray):
         csr_c = blocks.csr_cols.reshape(n_loc, -1)     # (N_loc, Kr)
         csr_v = blocks.csr_vals.reshape(n_loc, -1)
         vbar0 = jnp.zeros((n_loc,), jnp.float32)
-        qbar0 = loss_fn.split_grad(vbar0)
-        resid_q = (qbar0 - y_loc) / n                  # (N_loc,)
+        if loss_fn.separable:
+            qbar0 = loss_fn.split_grad(vbar0)
+            resid_q = (qbar0 - y_loc) / n              # (N_loc,)
+        else:
+            qbar0 = loss_fn.grad(vbar0, y_loc)
+            resid_q = qbar0 / n
         alpha_part = jnp.zeros((d_loc,), jnp.float32).at[csr_c.reshape(-1)].add(
             (resid_q[:, None] * csr_v).reshape(-1))
         alpha0 = jax.lax.psum(alpha_part, rows)
@@ -149,7 +155,9 @@ def build_dist_fw(blocks_abs, mesh: Mesh, *, steps: int,
         out_specs=(P(rows), P(rows), P("model")), check_rep=False)
 
     # ---- scan: T iterations, (λ, em_scale, gap_tol, key) traced -----------
-    def scan_body(blocks: BlockSparse, vbar0, qbar0, alpha0,
+    # ``y_loc`` is the local row shard's labels — read only by label-coupled
+    # objectives (dead for separable ones, whose programs are unchanged).
+    def scan_body(blocks: BlockSparse, y_loc, vbar0, qbar0, alpha0,
                   lam, em_scale, gap_tol, key):
         csc_r = blocks.csc_rows.reshape(d_loc, -1)     # (D_loc, Kc)
         csc_v = blocks.csc_vals.reshape(d_loc, -1)
@@ -208,8 +216,9 @@ def build_dist_fw(blocks_abs, mesh: Mesh, *, steps: int,
             dv = jnp.where(lane_ok, eta * d_tilde * val_j / w_m, 0.0)
             vbar = vbar.at[rows_j].add(dv)
             margins = w_m * vbar[rows_j]
-            gamma = jnp.where(
-                lane_ok, loss_fn.split_grad(margins) - qbar[rows_j], 0.0)
+            hm = (loss_fn.split_grad(margins) if loss_fn.separable
+                  else loss_fn.grad(margins, y_loc[rows_j]))
+            gamma = jnp.where(lane_ok, hm - qbar[rows_j], 0.0)
             qbar = qbar.at[rows_j].add(gamma)
 
             # ---- α-shard delta from the touched rows' local columns
@@ -271,12 +280,12 @@ def build_dist_fw(blocks_abs, mesh: Mesh, *, steps: int,
     scalar = P()
     scan_sm = shard_map(
         scan_body, mesh=mesh,
-        in_specs=(blocks_spec, P(rows), P(rows), P("model"),
+        in_specs=(blocks_spec, P(rows), P(rows), P(rows), P("model"),
                   scalar, scalar, scalar, scalar),
         out_specs=(P("model"), P(), P(), P()), check_rep=False)
 
     def whole(blocks, y_pad, lam, em_scale, gap_tol, key):
-        return scan_sm(blocks, *setup_sm(blocks, y_pad), lam, em_scale,
+        return scan_sm(blocks, y_pad, *setup_sm(blocks, y_pad), lam, em_scale,
                        gap_tol, key)
 
     return DistFW(setup=jax.jit(setup_sm), scan=jax.jit(scan_sm),

@@ -45,10 +45,15 @@ def reference_fw(blocks: BlockSparse, y_pad: jnp.ndarray, *, lam: float,
     lam = jnp.float32(lam)
     em_scale = jnp.float32(em_scale)
 
-    # setup (Alg 2 lines 8-14)
+    # setup (Alg 2 lines 8-14); label-coupled objectives carry the full row
+    # gradient in q̄ (no ȳ residual), mirroring fw_shard.setup_body
     vbar = jnp.zeros((n_pad,), jnp.float32)
-    qbar = loss_fn.split_grad(vbar)
-    resid_q = (qbar - y_pad) / n
+    if loss_fn.separable:
+        qbar = loss_fn.split_grad(vbar)
+        resid_q = (qbar - y_pad) / n
+    else:
+        qbar = loss_fn.grad(vbar, y_pad)
+        resid_q = qbar / n
     alpha = jnp.zeros((d_pad,), jnp.float32).at[csr_c.reshape(-1)].add(
         (resid_q[:, None] * csr_v).reshape(-1))
 
@@ -82,8 +87,9 @@ def reference_fw(blocks: BlockSparse, y_pad: jnp.ndarray, *, lam: float,
         dv = jnp.where(lane_ok, eta * d_tilde * val_j / w_m, 0.0)
         vbar = vbar.at[rows_j].add(dv)
         margins = w_m * vbar[rows_j]
-        gamma = jnp.where(lane_ok, loss_fn.split_grad(margins) - qbar[rows_j],
-                          0.0)
+        hm = (loss_fn.split_grad(margins) if loss_fn.separable
+              else loss_fn.grad(margins, y_pad[rows_j]))
+        gamma = jnp.where(lane_ok, hm - qbar[rows_j], 0.0)
         qbar = qbar.at[rows_j].add(gamma)
 
         gsc = gamma / n

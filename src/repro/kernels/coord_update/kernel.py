@@ -15,6 +15,11 @@ read-modify-write accumulation across column tiles is race-free (the same
 trick kernels/spmv uses).  The scalar step state (η, d̃, w_m, 1/N) rides in
 SMEM; the g̃ increment is accumulated in SMEM and added by the wrapper.
 
+The per-row gradient map is a specialization point: each registered
+objective gets its own lowered kernel (memoized per loss name).  Separable
+objectives (``dL/dm = h(m) − y``) trace ``h`` alone; label-coupled ones take
+the column's labels as an extra (TC,) tile and trace ``grad(m, y)``.
+
 Padding convention: lanes with mask=0 carry row=0/value=0 and contribute
 nothing (their dv and γ are forced to 0 before any scatter).
 """
@@ -27,49 +32,103 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.losses import get_objective
+
 DEF_TC = 128  # column-tile lanes per grid step
 
 
-def _coord_update_kernel(scal_ref, rows_ref, xcol_ref, mask_ref, ridx_ref, rval_ref,
-                         vbar_in, qbar_in, alpha_in, w_ref,
-                         vbar_o, qbar_o, alpha_o, gd_o):
-    t = pl.program_id(0)
+@functools.lru_cache(maxsize=None)
+def _build_kernel(loss: str):
+    """Kernel body specialized to one objective's row-gradient map.
 
-    @pl.when(t == 0)
-    def _init():
-        vbar_o[...] = vbar_in[...]
-        qbar_o[...] = qbar_in[...]
-        alpha_o[...] = alpha_in[...]
-        gd_o[0] = jnp.float32(0.0)
+    Returns ``(kernel_fn, labeled)`` where ``labeled`` says whether the body
+    expects the extra (TC,) label tile (label-coupled objectives).
+    """
+    obj = get_objective(loss)
 
-    eta, d_tilde, w_m, inv_n = (scal_ref[0], scal_ref[1], scal_ref[2], scal_ref[3])
-    r = rows_ref[...]
-    m = mask_ref[...].astype(bool)
-    # line 23: v̄[rows] += η·d̃·x/w_m  (true margin change rides on w_m scale)
-    dv = jnp.where(m, eta * d_tilde * xcol_ref[...] / w_m, 0.0)
-    vb = vbar_o[...].at[r].add(dv)
-    vbar_o[...] = vb
-    # line 24: γ = h(w_m·v̄) − q̄   (logistic h = σ; stale rows untouched)
-    margins = w_m * vb[r]
-    gamma = jnp.where(m, jax.nn.sigmoid(margins) - qbar_o[...][r], 0.0)
-    # line 25
-    qbar_o[...] = qbar_o[...].at[r].add(gamma)
-    # line 26: α += (γ/N)·X[rows,:]  — scatter over the rows' nnz
-    gscaled = gamma * inv_n
-    contrib = gscaled[:, None] * rval_ref[...]
-    alpha_o[...] = alpha_o[...].at[ridx_ref[...].reshape(-1)].add(contrib.reshape(-1))
-    # line 27: g̃ += w_m·Σᵢ (γᵢ/N)·⟨X[i,:], w⟩
-    dots = jnp.sum(rval_ref[...] * w_ref[...][ridx_ref[...]], axis=1)
-    gd_o[0] += w_m * jnp.sum(gscaled * dots)
+    if obj.separable:
+        h = obj.split_grad
+
+        def kernel(scal_ref, rows_ref, xcol_ref, mask_ref, ridx_ref, rval_ref,
+                   vbar_in, qbar_in, alpha_in, w_ref,
+                   vbar_o, qbar_o, alpha_o, gd_o):
+            t = pl.program_id(0)
+
+            @pl.when(t == 0)
+            def _init():
+                vbar_o[...] = vbar_in[...]
+                qbar_o[...] = qbar_in[...]
+                alpha_o[...] = alpha_in[...]
+                gd_o[0] = jnp.float32(0.0)
+
+            eta, d_tilde, w_m, inv_n = (scal_ref[0], scal_ref[1], scal_ref[2], scal_ref[3])
+            r = rows_ref[...]
+            m = mask_ref[...].astype(bool)
+            # line 23: v̄[rows] += η·d̃·x/w_m  (true margin change rides on w_m scale)
+            dv = jnp.where(m, eta * d_tilde * xcol_ref[...] / w_m, 0.0)
+            vb = vbar_o[...].at[r].add(dv)
+            vbar_o[...] = vb
+            # line 24: γ = h(w_m·v̄) − q̄   (h = split_grad; stale rows untouched)
+            margins = w_m * vb[r]
+            gamma = jnp.where(m, h(margins) - qbar_o[...][r], 0.0)
+            # line 25
+            qbar_o[...] = qbar_o[...].at[r].add(gamma)
+            # line 26: α += (γ/N)·X[rows,:]  — scatter over the rows' nnz
+            gscaled = gamma * inv_n
+            contrib = gscaled[:, None] * rval_ref[...]
+            alpha_o[...] = alpha_o[...].at[ridx_ref[...].reshape(-1)].add(contrib.reshape(-1))
+            # line 27: g̃ += w_m·Σᵢ (γᵢ/N)·⟨X[i,:], w⟩
+            dots = jnp.sum(rval_ref[...] * w_ref[...][ridx_ref[...]], axis=1)
+            gd_o[0] += w_m * jnp.sum(gscaled * dots)
+
+        return kernel, False
+
+    grad = obj.grad
+
+    def kernel(scal_ref, rows_ref, xcol_ref, mask_ref, ycol_ref, ridx_ref, rval_ref,
+               vbar_in, qbar_in, alpha_in, w_ref,
+               vbar_o, qbar_o, alpha_o, gd_o):
+        t = pl.program_id(0)
+
+        @pl.when(t == 0)
+        def _init():
+            vbar_o[...] = vbar_in[...]
+            qbar_o[...] = qbar_in[...]
+            alpha_o[...] = alpha_in[...]
+            gd_o[0] = jnp.float32(0.0)
+
+        eta, d_tilde, w_m, inv_n = (scal_ref[0], scal_ref[1], scal_ref[2], scal_ref[3])
+        r = rows_ref[...]
+        m = mask_ref[...].astype(bool)
+        dv = jnp.where(m, eta * d_tilde * xcol_ref[...] / w_m, 0.0)
+        vb = vbar_o[...].at[r].add(dv)
+        vbar_o[...] = vb
+        # line 24 (label-coupled): γ = grad(w_m·v̄, y) − q̄
+        margins = w_m * vb[r]
+        gamma = jnp.where(m, grad(margins, ycol_ref[...]) - qbar_o[...][r], 0.0)
+        qbar_o[...] = qbar_o[...].at[r].add(gamma)
+        gscaled = gamma * inv_n
+        contrib = gscaled[:, None] * rval_ref[...]
+        alpha_o[...] = alpha_o[...].at[ridx_ref[...].reshape(-1)].add(contrib.reshape(-1))
+        dots = jnp.sum(rval_ref[...] * w_ref[...][ridx_ref[...]], axis=1)
+        gd_o[0] += w_m * jnp.sum(gscaled * dots)
+
+    return kernel, True
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+@functools.partial(jax.jit, static_argnames=("loss", "tile", "interpret"))
 def coord_update_pallas(vbar, qbar, alpha, w, rows, x_col, mask, row_idx, row_val,
-                        scalars, *, tile: int = DEF_TC, interpret: bool = True):
+                        scalars, y_col=None, *, loss: str = "logistic",
+                        tile: int = DEF_TC, interpret: bool = True):
     """Apply one fused coordinate update; returns (v̄', q̄', α', g̃-increment).
 
-    ``scalars`` = f32[4] = [η, d̃, w_m, 1/N] (SMEM).
+    ``scalars`` = f32[4] = [η, d̃, w_m, 1/N] (SMEM).  ``y_col`` is the
+    selected column's (Kc,) labels — required for label-coupled objectives,
+    ignored for separable ones.
     """
+    kernel, labeled = _build_kernel(loss)
+    if labeled and y_col is None:
+        raise ValueError(f"loss {loss!r} is label-coupled; pass y_col")
     kc, kr = row_idx.shape
     tc = min(tile, kc)
     if kc % tc:
@@ -77,20 +136,29 @@ def coord_update_pallas(vbar, qbar, alpha, w, rows, x_col, mask, row_idx, row_va
         rows = jnp.pad(rows, (0, pad))
         x_col = jnp.pad(x_col, (0, pad))
         mask = jnp.pad(mask, (0, pad))
+        if labeled:
+            y_col = jnp.pad(y_col, (0, pad))
         row_idx = jnp.pad(row_idx, ((0, pad), (0, 0)))
         row_val = jnp.pad(row_val, ((0, pad), (0, 0)))
     kp = rows.shape[0]
     n, d = vbar.shape[0], alpha.shape[0]
     grid = (kp // tc,)
     full = lambda sz: pl.BlockSpec((sz,), lambda i: (0,))
+    tile_specs = [
+        pl.BlockSpec((tc,), lambda i: (i,)),             # rows
+        pl.BlockSpec((tc,), lambda i: (i,)),             # x_col
+        pl.BlockSpec((tc,), lambda i: (i,)),             # mask
+    ]
+    operands = [rows, x_col, mask.astype(jnp.int32)]
+    if labeled:
+        tile_specs.append(pl.BlockSpec((tc,), lambda i: (i,)))   # y_col
+        operands.append(y_col)
     out = pl.pallas_call(
-        _coord_update_kernel,
+        kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),           # scalars
-            pl.BlockSpec((tc,), lambda i: (i,)),             # rows
-            pl.BlockSpec((tc,), lambda i: (i,)),             # x_col
-            pl.BlockSpec((tc,), lambda i: (i,)),             # mask
+            *tile_specs,
             pl.BlockSpec((tc, kr), lambda i: (i, 0)),        # row_idx
             pl.BlockSpec((tc, kr), lambda i: (i, 0)),        # row_val
             full(n), full(n), full(d), full(d),              # v̄, q̄, α, w
@@ -106,7 +174,6 @@ def coord_update_pallas(vbar, qbar, alpha, w, rows, x_col, mask, row_idx, row_va
             jax.ShapeDtypeStruct((1,), jnp.float32),
         ],
         interpret=interpret,
-    )(scalars, rows, x_col, mask.astype(jnp.int32), row_idx, row_val,
-      vbar, qbar, alpha, w)
+    )(scalars, *operands, row_idx, row_val, vbar, qbar, alpha, w)
     vb, qb, al, gd = out
     return vb, qb, al, gd[0]

@@ -7,15 +7,18 @@ from repro.kernels.coord_update.kernel import coord_update_pallas
 
 
 def coord_update(vbar, qbar, alpha, w, rows, x_col, mask, row_idx, row_val,
-                 *, eta, d_tilde, w_m, inv_n, interpret: bool = True):
+                 *, eta, d_tilde, w_m, inv_n, loss: str = "logistic",
+                 y_col=None, interpret: bool = True):
     """Fused Alg-2 lines 22-28 for one selected coordinate.
 
     Returns (v̄', q̄', α', g̃_increment); the caller folds the increment into
-    its running gap estimate (fw_jax step, line 27 analogue).
+    its running gap estimate (fw_jax step, line 27 analogue).  ``y_col`` is
+    the selected column's labels, required when ``loss`` is label-coupled.
     """
     scalars = jnp.stack([
         jnp.asarray(eta, jnp.float32), jnp.asarray(d_tilde, jnp.float32),
         jnp.asarray(w_m, jnp.float32), jnp.asarray(inv_n, jnp.float32),
     ])
     return coord_update_pallas(vbar, qbar, alpha, w, rows, x_col, mask,
-                               row_idx, row_val, scalars, interpret=interpret)
+                               row_idx, row_val, scalars, y_col,
+                               loss=loss, interpret=interpret)

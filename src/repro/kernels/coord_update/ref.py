@@ -23,14 +23,16 @@ def coord_update_ref(
     rows: jnp.ndarray, x_col: jnp.ndarray, mask: jnp.ndarray,
     row_idx: jnp.ndarray, row_val: jnp.ndarray,
     *, eta: jnp.ndarray, d_tilde: jnp.ndarray, w_m: jnp.ndarray,
-    inv_n: float, h: Callable = None,
+    inv_n: float, h: Callable = None, y_col: jnp.ndarray = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     import jax
     h = h or jax.nn.sigmoid
     dv = jnp.where(mask, eta * d_tilde * x_col / w_m, 0.0)
     vbar = vbar.at[rows].add(dv)
     margins = w_m * vbar[rows]
-    gamma = jnp.where(mask, h(margins) - qbar[rows], 0.0)
+    # label-coupled objectives pass the column's labels: γ = grad(m, y) − q̄
+    hm = h(margins) if y_col is None else h(margins, y_col)
+    gamma = jnp.where(mask, hm - qbar[rows], 0.0)
     qbar = qbar.at[rows].add(gamma)
     contrib = (gamma * inv_n)[:, None] * row_val                 # (Kc, Kr)
     alpha = alpha.at[row_idx.reshape(-1)].add(contrib.reshape(-1))

@@ -51,7 +51,8 @@ from typing import Dict, List, Mapping, Optional
 
 from repro.core.dp.accountant import PrivacyAccountant, per_step_epsilon
 from repro.core.solvers.batched import group_key, solve_many
-from repro.core.solvers.config import FWConfig, FWResult
+from repro.core.solvers.config import (FWConfig, FWResult,
+                                       check_gap_certificate)
 from repro.core.solvers.registry import get_backend, resolve_queue
 
 # Native queue/selection names that consume privacy budget (the DP
@@ -188,7 +189,9 @@ class FitService:
                     "and cannot enforce max_seconds; use gap_tol or a "
                     "chunked backend")
             resolved = resolve_queue(backend, cfg)
-            resolved.loss_fn()                       # unknown loss -> KeyError
+            # unknown loss -> KeyError; gap_tol on a non-smooth objective ->
+            # ValueError — both refused here, before any budget is charged
+            check_gap_certificate(resolved)
         except (ValueError, KeyError) as e:
             return self._reject(req, str(e))
         req.config = resolved

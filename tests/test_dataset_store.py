@@ -324,3 +324,18 @@ def test_fit_service_accepts_dataset_store(problem, store):
     ref = solve(X, y, cfg)
     np.testing.assert_array_equal(np.asarray(done[0].result.coords),
                                   np.asarray(ref.coords))
+
+
+def test_setup_streamed_matches_kernel_setup_label_coupled(problem, store):
+    """huber is label-coupled: setup_streamed's q̄₀ = a + b·y affine path
+    (exact for binary labels) must agree with the kernel fw_setup."""
+    import jax.numpy as jnp
+
+    from repro.core.solvers.jax_sparse import fw_setup_jit
+    X, y = problem
+    v0, q0, a0 = store.setup_streamed("huber")
+    ref = fw_setup_jit(store.prepared().pcsr, jnp.asarray(y, jnp.float32),
+                       loss="huber", interpret=True)
+    np.testing.assert_allclose(np.asarray(a0), np.asarray(ref[2]), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(q0), np.asarray(ref[1]), atol=1e-6)
+    assert float(np.abs(np.asarray(v0)).max()) == 0.0

@@ -111,3 +111,83 @@ def test_sampler_concentrates_with_budget(em_problem, name):
         jnp.asarray(scores, jnp.float32), 5.0, SENS))
     assert hits[5.0] > hits[0.2] + 0.1, name
     assert hits[5.0] == pytest.approx(float(probs_tight[top]), abs=0.05), name
+
+
+# ---------------------------------------------------------------------------
+# per-loss sensitivity flow (DESIGN.md §10): every engine scores coordinate j
+# with scale·|α_j| where scale = ε'·N/(2·L_loss) from
+# ``accountant.em_log_weight_scale``.  That realizes the analytic mechanism
+# P(j) ∝ exp(ε'·u/(2Δu)) with u = λ|α_j| and per-loss sensitivity
+# Δu = λ·L_loss/N — pinned here empirically for each registered objective's
+# Lipschitz constant, plus exact drift pins on the formula itself.
+# ---------------------------------------------------------------------------
+
+import dataclasses
+import math
+
+from repro.core.dp.accountant import em_log_weight_scale, per_step_epsilon
+from repro.core.losses import OBJECTIVES
+from repro.core.solvers.config import FWConfig
+
+EPS_RUN, DELTA_RUN, T_RUN, N_ROWS, LAM = 1.0, 1e-6, 50, 400, 8.0
+
+
+@pytest.fixture(scope="module")
+def alpha_scores():
+    """A fixed |α| surrogate; per-loss scales change its EM concentration."""
+    return np.random.default_rng(9).uniform(0.0, 1.1, D)
+
+
+@pytest.mark.parametrize("loss", sorted(OBJECTIVES))
+def test_em_draws_match_per_loss_sensitivity_law(alpha_scores, loss):
+    """Empirical two-level draws under scale·|α| agree (chi-square + TVD)
+    with the analytic EM at utility λ|α| and sensitivity λ·L_loss/N."""
+    lip = OBJECTIVES[loss].lipschitz
+    scale = em_log_weight_scale(epsilon=EPS_RUN, delta=DELTA_RUN,
+                                steps=T_RUN, n_rows=N_ROWS, lipschitz=lip)
+    eps_step = per_step_epsilon(EPS_RUN, DELTA_RUN, T_RUN)
+    probs = np.asarray(exponential_mechanism_probs(
+        jnp.asarray(LAM * alpha_scores, jnp.float32), eps_step,
+        LAM * lip / N_ROWS))
+    state = tl_init(jnp.asarray(scale * alpha_scores, jnp.float32))
+    keys = jax.random.split(jax.random.PRNGKey(106), N_DRAWS)
+    draws = np.asarray(jax.vmap(lambda k: tl_sample(state, k))(keys))
+    assert _chi2_ratio(draws, probs) < 1.5, loss
+    freq = np.bincount(draws, minlength=D) / len(draws)
+    assert 0.5 * np.abs(freq - probs).sum() < 0.02, loss
+
+
+def test_logistic_em_scale_drift_pin():
+    """Bit-identical to the formula the seed shipped: ε'·N/(2L), L = 1."""
+    got = em_log_weight_scale(epsilon=1.3, delta=1e-5, steps=77,
+                              n_rows=1234, lipschitz=1.0)
+    expect = (1.3 / math.sqrt(8.0 * 77 * math.log(1.0 / 1e-5))) \
+        * 1234 / (2.0 * 1.0)
+    assert got == expect
+
+
+def test_huber_em_scale_doubles_logistic():
+    """L_huber = 0.5 halves the sensitivity, so the scale exactly doubles —
+    the per-loss path is live, not a constant."""
+    kw = dict(epsilon=0.9, delta=1e-6, steps=40, n_rows=500)
+    s_log = em_log_weight_scale(lipschitz=OBJECTIVES["logistic"].lipschitz,
+                                **kw)
+    s_hub = em_log_weight_scale(lipschitz=OBJECTIVES["huber"].lipschitz,
+                                **kw)
+    assert s_hub == 2.0 * s_log
+
+
+def test_engine_scales_agree_per_loss():
+    """jax_sparse and jax_shard derive their EM scales from the same
+    accountant formula — per loss, bit-identically."""
+    from repro.core.solvers.jax_shard import shard_em_scale
+    from repro.core.solvers.jax_sparse import em_scale_for
+    for loss in sorted(OBJECTIVES):
+        cfg = FWConfig(loss=loss, epsilon=1.0, delta=1e-6, steps=50,
+                       queue="two_level")
+        expect = em_log_weight_scale(
+            epsilon=1.0, delta=1e-6, steps=50, n_rows=N_ROWS,
+            lipschitz=OBJECTIVES[loss].lipschitz)
+        assert em_scale_for(cfg, N_ROWS) == expect, loss
+        shard_cfg = dataclasses.replace(cfg, queue="gumbel")
+        assert shard_em_scale(shard_cfg, N_ROWS) == expect, loss

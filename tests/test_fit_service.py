@@ -215,3 +215,57 @@ def test_fit_service_slot_width_one(service_problem):
     with pytest.raises(ValueError, match="slots"):
         FitService(X, y, {}, dataclasses.replace(
             FitServiceConfig(), slots=0))
+
+
+def test_fit_service_gap_gate_rejects_nonsmooth_charge_free(service_problem):
+    """A gap_tol request on a registered-but-non-smooth objective is refused
+    at admission (the FW gap certificate needs curvature) without charging
+    the tenant; the same objective with fixed steps is admitted."""
+    import jax.numpy as jnp
+
+    from repro.core.losses import OBJECTIVES, Objective, register_objective
+
+    X, y = service_problem
+    probe = Objective(
+        name="_svc_abs_probe",
+        value=lambda m, yy: jnp.abs(m - yy),
+        grad=lambda m, yy: jnp.sign(m - yy),
+        split_grad=None,
+        grad_np=lambda m, yy: np.sign(m - yy),
+        lipschitz=1.0, smooth=False, curvature_note="|m-y| kink at 0")
+    register_objective(probe)
+    try:
+        svc = _fresh_service(X, y)
+        svc.submit(FitRequest(uid=0, tenant="acme", config=FWConfig(
+            backend="jax_sparse", steps=STEPS, queue="bsls", epsilon=0.5,
+            delta=1e-6, loss="_svc_abs_probe", gap_tol=1e-3)))
+        # fixed-step run of the same objective: certificate never consulted
+        svc.submit(FitRequest(uid=1, tenant="acme", config=FWConfig(
+            backend="host_sparse", steps=5, loss="_svc_abs_probe")))
+        done = {r.uid: r for r in svc.run()}
+        assert done[0].status == "rejected"
+        assert "not smooth" in done[0].reason
+        assert done[1].status == "done"
+        # the rejection was charge-free; the fixed run was non-private
+        assert svc.accountants["acme"].spent_steps == 0
+    finally:
+        OBJECTIVES.pop("_svc_abs_probe", None)
+
+
+def test_fit_service_nonlogistic_private_fit_charges_normally(service_problem):
+    """Per-request losses flow through serving: a private huber fit is
+    admitted, solved, and charged by the same ε²-equivalent law as logistic
+    (the per-loss sensitivity enters the solver's EM scale, not the
+    accountant's currency)."""
+    X, y = service_problem
+    svc = _fresh_service(X, y)
+    cfg = FWConfig(backend="jax_sparse", steps=STEPS, queue="bsls",
+                   epsilon=0.5, delta=1e-6, lam=8.0, loss="huber")
+    svc.submit(FitRequest(uid=0, tenant="acme", config=cfg))
+    (r,) = svc.run()
+    assert r.status == "done"
+    assert np.isfinite(np.asarray(r.result.w)).all()
+    assert svc.accountants["acme"].spent_steps == 1   # ε=0.5 vs pool ε=6,T=144
+    ref = solve(X, y, cfg)
+    np.testing.assert_array_equal(np.asarray(r.result.coords),
+                                  np.asarray(ref.coords))

@@ -1,0 +1,181 @@
+"""Property tests of the Objective contract, per registered loss.
+
+Four invariants every objective must satisfy (DESIGN.md §10):
+
+  1. |dL/dm| ≤ lipschitz on the loss's valid margin domain — the bound the
+     DP sensitivity Δu = λ·L/N (hence every noise scale) is derived from;
+  2. the split-gradient law: ``grad(m, y) == split_grad(m) − y`` for
+     separable objectives, and ``h(m, y) == grad(m, y)`` with
+     ``label_weight == 0`` for label-coupled ones — the q̄ update contract
+     every backend's inner loop relies on;
+  3. finite-difference agreement of ``value``/``grad``;
+  4. smooth objectives drive the FW loss trace down (dense backend).
+
+Each invariant lives in a ``_check_*`` helper.  The always-on tests sweep
+the helpers over dense seeded grids (so CI exercises them without extra
+dependencies); when ``hypothesis`` is installed, `@given`-driven variants
+of the same helpers also engage for adversarial float hunting.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.losses import OBJECTIVES, get_loss
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # container ships without hypothesis: the seeded
+    HAVE_HYPOTHESIS = False  # sweeps below still cover every invariant
+
+LOSSES = sorted(OBJECTIVES)
+
+# Margin domain on which each loss's lipschitz constant is claimed.  The
+# squared loss is only 1-Lipschitz on |m − y| ≤ 1 (its gradient is m − y);
+# every other registered loss has a globally bounded gradient.
+_GLOBAL_DOMAIN = (-30.0, 30.0)
+
+
+def _margins_for(name: str, rng: np.ndarray, y: np.ndarray) -> np.ndarray:
+    if name == "squared":
+        return y + rng                       # residual r = rng ∈ [−1, 1]
+    lo, hi = _GLOBAL_DOMAIN
+    return lo + (rng + 1.0) * 0.5 * (hi - lo)
+
+
+# ---------------------------------------------------------------------------
+# invariant helpers (shared by the seeded sweeps and the hypothesis variants)
+# ---------------------------------------------------------------------------
+
+
+def _check_lipschitz(name: str, m: np.ndarray, y: np.ndarray) -> None:
+    loss = get_loss(name)
+    g = np.asarray(loss.grad(jnp.asarray(m, jnp.float32),
+                             jnp.asarray(y, jnp.float32)))
+    assert np.all(np.abs(g) <= loss.lipschitz + 1e-5), (
+        f"{name}: |grad| max {np.abs(g).max()} > L={loss.lipschitz}")
+
+
+def _check_split_grad(name: str, m: np.ndarray, y: np.ndarray) -> None:
+    loss = get_loss(name)
+    mj = jnp.asarray(m, jnp.float32)
+    yj = jnp.asarray(y, jnp.float32)
+    if loss.separable:
+        np.testing.assert_allclose(
+            np.asarray(loss.grad(mj, yj)),
+            np.asarray(loss.split_grad(mj) - yj), atol=1e-5,
+            err_msg=f"{name}: grad != split_grad(m) - y")
+    else:
+        assert loss.label_weight == 0.0
+        np.testing.assert_allclose(
+            np.asarray(loss.h(mj, yj)), np.asarray(loss.grad(mj, yj)),
+            atol=0.0, err_msg=f"{name}: h must be the full row gradient")
+
+
+def _check_finite_difference(name: str, m: np.ndarray, y: np.ndarray) -> None:
+    loss = get_loss(name)
+    mj = jnp.asarray(m, jnp.float32)
+    yj = jnp.asarray(y, jnp.float32)
+    eps = 1e-2   # f32: large step beats roundoff; C¹ corners cost O(eps)
+    num = (loss.value(mj + eps, yj) - loss.value(mj - eps, yj)) / (2 * eps)
+    np.testing.assert_allclose(np.asarray(loss.grad(mj, yj)),
+                               np.asarray(num), atol=1e-2,
+                               err_msg=f"{name}: grad vs central difference")
+
+
+# ---------------------------------------------------------------------------
+# always-on seeded sweeps
+# ---------------------------------------------------------------------------
+
+
+def _seeded_batch(name: str, seed: int, k: int = 257):
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, 2, k).astype(np.float64)
+    r = rng.uniform(-1.0, 1.0, k)
+    return _margins_for(name, r, y), y
+
+
+@pytest.mark.parametrize("name", LOSSES)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_grad_bounded_by_lipschitz(name, seed):
+    m, y = _seeded_batch(name, seed)
+    _check_lipschitz(name, m, y)
+
+
+@pytest.mark.parametrize("name", LOSSES)
+@pytest.mark.parametrize("seed", [3, 4])
+def test_split_grad_consistency(name, seed):
+    m, y = _seeded_batch(name, seed)
+    _check_split_grad(name, m, y)
+
+
+@pytest.mark.parametrize("name", LOSSES)
+@pytest.mark.parametrize("seed", [5, 6])
+def test_value_grad_finite_difference(name, seed):
+    m, y = _seeded_batch(name, seed)
+    _check_finite_difference(name, m, y)
+
+
+@pytest.mark.parametrize("name", LOSSES)
+def test_lipschitz_tight_somewhere(name):
+    """L is a *useful* bound, not just safe: some margin attains ≥ L/4 —
+    catches an objective registering a wildly inflated sensitivity (which
+    would silently overdose the DP noise)."""
+    loss = get_loss(name)
+    m, y = _seeded_batch(name, 7, k=4097)
+    g = np.abs(np.asarray(loss.grad(jnp.asarray(m, jnp.float32),
+                                    jnp.asarray(y, jnp.float32))))
+    assert g.max() >= loss.lipschitz / 4.0
+
+
+@pytest.mark.parametrize("name", [n for n in LOSSES if OBJECTIVES[n].smooth])
+def test_fw_drives_loss_down_per_smooth_objective(name):
+    """The dense backend's per-iteration mean-loss trace must fall: FW with
+    η_t = 2/(t+2) is not per-step monotone, but on a smooth objective the
+    trace's running best strictly improves and the tail beats the head."""
+    from repro.core.solvers import FWConfig, solve
+    rng = np.random.default_rng(17)
+    n, d = 60, 40
+    X = rng.normal(size=(n, d)) / np.sqrt(d)
+    w_star = np.zeros(d)
+    w_star[rng.choice(d, 6, replace=False)] = rng.normal(0, 2, 6)
+    y = (X @ w_star > 0).astype(np.float64)
+    r = solve(X, y, FWConfig(backend="dense", lam=4.0, steps=60, loss=name))
+    trace = np.asarray(r.losses)
+    assert np.all(np.isfinite(trace)), name
+    assert trace[-1] < trace[0], name
+    # running best at the end improves on the first quarter's best
+    q = len(trace) // 4
+    assert trace[-q:].min() < trace[:q].min(), name
+    assert trace[-q:].mean() < trace[:q].mean(), name
+
+
+# ---------------------------------------------------------------------------
+# hypothesis variants (engage when the dependency is present)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    _unit = st.floats(-1.0, 1.0, allow_nan=False, allow_infinity=False)
+    _label = st.integers(0, 1)
+
+    @given(r=_unit, yv=_label)
+    @settings(max_examples=60, deadline=None)
+    @pytest.mark.parametrize("name", LOSSES)
+    def test_hypothesis_lipschitz(name, r, yv):
+        y = np.asarray([float(yv)])
+        _check_lipschitz(name, _margins_for(name, np.asarray([r]), y), y)
+
+    @given(r=_unit, yv=_label)
+    @settings(max_examples=60, deadline=None)
+    @pytest.mark.parametrize("name", LOSSES)
+    def test_hypothesis_split_grad(name, r, yv):
+        y = np.asarray([float(yv)])
+        _check_split_grad(name, _margins_for(name, np.asarray([r]), y), y)
+
+    @given(r=_unit, yv=_label)
+    @settings(max_examples=60, deadline=None)
+    @pytest.mark.parametrize("name", LOSSES)
+    def test_hypothesis_finite_difference(name, r, yv):
+        y = np.asarray([float(yv)])
+        _check_finite_difference(name, _margins_for(name, np.asarray([r]), y),
+                                 y)

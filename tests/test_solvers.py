@@ -364,3 +364,202 @@ def test_solve_requires_labels_for_plain_matrices(sweep_problem):
     X, _ = sweep_problem
     with pytest.raises(TypeError, match="y is required"):
         solve(X, config=FWConfig(backend="host_sparse", steps=2))
+
+
+# ---------------------------------------------------------------------------
+# pluggable objectives (DESIGN.md §10): every registered loss must run on
+# every backend with exact cross-backend step parity, match the straight-line
+# reference oracle on both selection paths, and keep the fused batched sweep.
+# ---------------------------------------------------------------------------
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.losses import OBJECTIVES, Objective  # noqa: E402
+
+REGISTERED_LOSSES = sorted(OBJECTIVES)
+FIVE_BACKENDS = ALL_BACKENDS + ("jax_shard",)
+
+
+def _cfg_for(backend: str, **kw) -> FWConfig:
+    if backend == "jax_shard":
+        kw.setdefault("mesh", (1, 1))
+    return FWConfig(backend=backend, **kw)
+
+
+@pytest.mark.parametrize("loss", REGISTERED_LOSSES)
+def test_all_backends_parity_per_loss(dense_problem, loss):
+    """Acceptance: identical non-private steps 5 ways, for every objective
+    (on a dense design, where Alg 1's lazy refresh never goes stale)."""
+    X, y = dense_problem
+    runs = {b: solve(X, y, _cfg_for(b, lam=6.0, steps=50, loss=loss))
+            for b in FIVE_BACKENDS}
+    ref = runs["dense"]
+    for b, r in runs.items():
+        np.testing.assert_array_equal(
+            np.asarray(r.coords), np.asarray(ref.coords),
+            err_msg=f"{loss}/{b}: coords diverged from dense")
+        np.testing.assert_allclose(np.asarray(r.w), np.asarray(ref.w),
+                                   atol=1e-4, err_msg=f"{loss}/{b}: weights")
+        assert np.asarray(r.gaps)[-1] < np.asarray(r.gaps)[0], f"{loss}/{b}"
+
+
+@pytest.mark.parametrize("loss", REGISTERED_LOSSES)
+def test_private_parity_per_loss(dense_problem, loss):
+    """DP path per loss: the two jit engines consume the same key stream and
+    must take bit-identical steps; the host EM realization draws different
+    bits of the same law (documented), so it is checked for validity only."""
+    X, y = dense_problem
+    kw = dict(lam=6.0, steps=25, loss=loss, queue="bsls", epsilon=1.0,
+              delta=1e-6)
+    a = solve(X, y, _cfg_for("jax_dense", **kw))
+    b = solve(X, y, _cfg_for("jax_sparse", **kw))
+    np.testing.assert_array_equal(np.asarray(a.coords), np.asarray(b.coords),
+                                  err_msg=f"{loss}: private jax engines")
+    host = solve(X, y, _cfg_for("host_sparse", **kw))
+    assert np.isfinite(np.asarray(host.w)).all(), loss
+
+
+@pytest.mark.parametrize("loss", REGISTERED_LOSSES)
+@pytest.mark.parametrize("private", [False, True])
+def test_jax_sparse_matches_reference_oracle(sweep_problem, loss, private):
+    """Acceptance: the kernel pipeline replays the straight-line host oracle
+    bit-for-bit on coords — per loss, private and non-private, on genuinely
+    sparse data."""
+    from repro.core.solvers.jax_sparse import em_scale_for
+    from repro.core.solvers.reference import reference_fw
+    from repro.core.sparse.formats import host_to_padded
+    X, y = sweep_problem
+    cfg = FWConfig(backend="jax_sparse", lam=8.0, steps=30, loss=loss,
+                   queue="bsls" if private else None, epsilon=1.0,
+                   delta=1e-6)
+    r = solve(X, y, cfg)
+    pcsr, pcsc = host_to_padded(X)
+    resolved = resolve_queue(get_backend("jax_sparse"), cfg)
+    w, gaps, coords = reference_fw(
+        pcsr, pcsc, y, lam=cfg.lam, steps=cfg.steps, private=private,
+        em_scale=em_scale_for(resolved, X.shape[0]), seed=cfg.seed, loss=loss)
+    np.testing.assert_array_equal(np.asarray(r.coords), np.asarray(coords),
+                                  err_msg=f"{loss} private={private}")
+    np.testing.assert_allclose(np.asarray(r.w), np.asarray(w), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(r.gaps), np.asarray(gaps),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("loss", REGISTERED_LOSSES)
+def test_early_stop_prefix_identical_per_loss(sweep_problem, loss):
+    """gap_tol runs are bit-identical prefixes of the fixed-T program, for
+    every (smooth) objective."""
+    X, y = sweep_problem
+    full = solve(X, y, FWConfig(backend="jax_sparse", lam=8.0, steps=40,
+                                loss=loss))
+    tol = float(np.asarray(full.gaps)[len(np.asarray(full.gaps)) // 2])
+    stopped = solve(X, y, FWConfig(backend="jax_sparse", lam=8.0, steps=40,
+                                   loss=loss, gap_tol=tol))
+    stop = stopped.stop_step_or()
+    assert 0 < stop < 40, loss
+    np.testing.assert_array_equal(
+        np.asarray(stopped.coords)[:stop], np.asarray(full.coords)[:stop],
+        err_msg=f"{loss}: early-stop prefix")
+    assert np.all(np.asarray(stopped.coords)[stop:] == -1), loss
+
+
+def test_solve_many_nonlogistic_grid_runs_fused(sweep_problem, monkeypatch):
+    """Regression (ISSUE 6 satellite): a loss="squared" 8-config grid runs as
+    ONE fused vmapped compiled scan — the old engine silently dropped every
+    non-logistic group to the slow path (`fused = loss == "logistic"`) —
+    with exact parity to per-config sequential solve()."""
+    from repro.core.solvers import batched
+    X, y = sweep_problem
+    calls = []
+    real = batched._sweep_scan_jit
+
+    def counting(*args, **kwargs):
+        calls.append(kwargs)
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(batched, "_sweep_scan_jit", counting)
+    configs = grid(FWConfig(backend="jax_sparse", steps=20, loss="squared",
+                            queue="bsls", delta=1e-6),
+                   lam=(4.0, 8.0, 16.0, 32.0), epsilon=(0.5, 2.0))
+    assert len(configs) == 8
+    results = solve_many(X, y, configs, plan="vmap")
+    assert len(calls) == 1, "grid must run as one compiled vmapped scan"
+    assert calls[0]["loss"] == "squared" and calls[0]["fused"] is True
+    for i, cfg in enumerate(configs):
+        _assert_same_result(results[i], solve(X, y, cfg),
+                            f"squared grid cfg {i}")
+
+
+@pytest.mark.parametrize("loss", REGISTERED_LOSSES)
+def test_solve_many_per_loss_matches_sequential(sweep_problem, loss):
+    """The batched sweep takes the same steps as sequential solve() for
+    every registered objective (private grid, mixed λ/ε)."""
+    X, y = sweep_problem
+    configs = grid(FWConfig(backend="jax_sparse", steps=15, loss=loss,
+                            queue="bsls", delta=1e-6),
+                   lam=(4.0, 16.0), epsilon=(0.5, 2.0))
+    batched_rs = solve_many(X, y, configs)
+    for i, cfg in enumerate(configs):
+        _assert_same_result(batched_rs[i], solve(X, y, cfg),
+                            f"{loss} cfg {i}")
+
+
+def test_solve_from_store_warm_cache_huber(stored_problem):
+    """DatasetRef/warm-cache replay for a label-coupled loss: a fresh open
+    replays the per-loss persisted fw_setup state and labels bit-for-bit."""
+    from repro.data.store import DatasetStore
+    store, X, y = stored_problem
+    for cfg in (FWConfig(backend="jax_sparse", lam=8.0, steps=20,
+                         loss="huber"),
+                FWConfig(backend="jax_sparse", lam=8.0, steps=20,
+                         loss="huber", queue="bsls", epsilon=1.0,
+                         delta=1e-6)):
+        solve(store, config=cfg)                  # populates cache/
+        warm = DatasetStore.open(store.root)
+        r_warm = solve(warm, config=cfg)
+        r_mem = solve(X, y, cfg)
+        np.testing.assert_array_equal(np.asarray(r_warm.coords),
+                                      np.asarray(r_mem.coords))
+        np.testing.assert_array_equal(np.asarray(r_warm.w),
+                                      np.asarray(r_mem.w))
+
+
+# ---------------------------------------------------------------------------
+# gap-certificate validity gate: a non-smooth objective has no FW duality-gap
+# bound, so gap_tol early stopping must be refused up front.
+# ---------------------------------------------------------------------------
+
+
+def _nonsmooth_probe():
+    return Objective(
+        name="_abs_probe", value=lambda m, y: jnp.abs(m - y),
+        grad=lambda m, y: jnp.sign(m - y), split_grad=None,
+        grad_np=lambda m, y: np.sign(m - y), lipschitz=1.0,
+        smooth=False, curvature_note="|r| has no curvature bound at 0")
+
+
+def test_gap_tol_refused_for_nonsmooth_objective(sweep_problem):
+    from repro.core.losses import register_objective
+    X, y = sweep_problem
+    register_objective(_nonsmooth_probe())
+    try:
+        with pytest.raises(ValueError, match="not smooth"):
+            solve(X, y, FWConfig(backend="jax_sparse", steps=5,
+                                 loss="_abs_probe", gap_tol=1e-3))
+        with pytest.raises(ValueError, match="not smooth"):
+            solve_many(X, y, [FWConfig(backend="jax_sparse", steps=5,
+                                       loss="_abs_probe", gap_tol=1e-3)])
+        # fixed-T (no certificate requested) is allowed
+        r = solve(X, y, FWConfig(backend="host_sparse", steps=5,
+                                 loss="_abs_probe"))
+        assert np.isfinite(np.asarray(r.w)).all()
+    finally:
+        OBJECTIVES.pop("_abs_probe", None)
+
+
+def test_gap_tol_allowed_for_every_registered_loss():
+    from repro.core.solvers.config import check_gap_certificate
+    for loss in REGISTERED_LOSSES:
+        check_gap_certificate(FWConfig(loss=loss, gap_tol=1e-4))
+    with pytest.raises(KeyError, match="unknown loss"):
+        check_gap_certificate(FWConfig(loss="nope", gap_tol=0.0))
