@@ -54,6 +54,15 @@ SPEC = {
         # (lower is better; ratio of same-run timings)
         ("rel_max", "shard_over_sparse", 3.0),
     ],
+    "BENCH_autotune.json": [
+        ("flags",),              # pass_tuned_parity: bitwise, never a timing
+        # the §11 search must never pick a layout slower than the flat
+        # default, and on the power-law text regimes it must find a real
+        # win (ISSUE-7 acceptance: ≤ 0.8× default per-iter on rcv1)
+        ("max", "tuned_over_default", 0.8),
+        ("min", "tuned_speedup", 1.0),
+        ("rel_min", "tuned_speedup", 0.5),
+    ],
     "BENCH_ingest.json": [
         ("flags",),
         # warm store opens must keep skipping the setup sweep

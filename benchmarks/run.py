@@ -8,6 +8,7 @@
   (sweeps) bench_sweep         sequential solve() vs batched solve_many()
   (store)  bench_ingest        dataset-store ingest + cold/warm prepare
   (shard)  bench_shard         jax_sparse vs jax_shard + step-parity audit
+  (§11)    bench_autotune      layout/chunk autotuner gains + parity gate
   §Roofline roofline_table     three-term model from dryrun_results.json
 
 ``python -m benchmarks.run [--fast] [--only NAME] [--backend B]`` — results
@@ -38,10 +39,10 @@ def main():
                          "engine with a batched fast path)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_accuracy, bench_convergence, bench_flops,
-                            bench_heap_pops, bench_ingest, bench_scaling,
-                            bench_shard, bench_speedup, bench_sweep,
-                            roofline_table)
+    from benchmarks import (bench_accuracy, bench_autotune, bench_convergence,
+                            bench_flops, bench_heap_pops, bench_ingest,
+                            bench_scaling, bench_shard, bench_speedup,
+                            bench_sweep, roofline_table)
     from repro.core.solvers import available_backends
 
     if args.backend is not None and args.backend not in available_backends():
@@ -74,6 +75,9 @@ def main():
         "shard": lambda: bench_shard.run(
             datasets=("rcv1",) if fast else ("rcv1", "news20"),
             steps=30 if fast else 80),
+        "autotune": lambda: bench_autotune.run(
+            datasets=("rcv1",) if fast else ("rcv1", "news20"),
+            steps=20 if fast else 40),
         "ingest": lambda: bench_ingest.run(
             datasets=("rcv1_like",) if fast else
             ("rcv1_like", "url_small_like"),
@@ -115,7 +119,8 @@ def main():
                                     "accuracy_pct", "pops_over_nnz_ratio",
                                     "final_gap_rel_diff", "sweep_speedup",
                                     "ingest_s", "warm_setup_speedup",
-                                    "shard_over_sparse", "block_waste")
+                                    "shard_over_sparse", "block_waste",
+                                    "tuned_over_default", "tuned_speedup")
                         if k in row]
                 kv = {k: row[k] for k in keys}
                 for eps_k in ("eps_1.0", "eps_0.1"):

@@ -110,6 +110,15 @@ def _jax_sparse_backend(data, y, config: FWConfig) -> FWResult:
         # dataset-store path: replay the cached fw_setup state (bit-exact)
         setup = data.setup_for(y, config.loss, config.interpret)
         pcsr, pcsc = data.pair
+        # §11: the store's autotuned layout/chunk winner, when one exists —
+        # parity-gated at tuning time, so iterates are bit-identical
+        rec = data.tuning_for("jax_sparse", config.loss)
+        if rec is not None:
+            if rec.ell_width is not None:
+                pcsc = data.tuned_pcsc(rec)
+            if config.chunk_steps is None and rec.chunk_steps is not None:
+                config = dataclasses.replace(config,
+                                             chunk_steps=rec.chunk_steps)
     else:
         pcsr, pcsc = data
     return jax_sparse_fw(pcsr, pcsc, jnp.asarray(y, jnp.float32), config,

@@ -180,6 +180,11 @@ def _group_context(data, y, configs: Sequence[FWConfig]):
     c0 = configs[0]
     if isinstance(data, PreparedDataset):
         pcsr, pcsc = data.pair
+        # §11: replay the store's autotuned layout — parity-gated at tuning
+        # time, so the whole group's iterates are bit-identical either way
+        rec = data.tuning_for("jax_sparse", c0.loss)
+        if rec is not None and rec.ell_width is not None:
+            pcsc = data.tuned_pcsc(rec)
         setup = data.setup_for(y, c0.loss, c0.interpret)
     else:
         pcsr, pcsc = data
@@ -207,11 +212,9 @@ def _group_labels(c0: FWConfig, y):
 
 
 def _group_stats(pcsr, pcsc):
-    from repro.core.solvers.planner import ProblemStats
-    n, d = pcsr.shape
-    return ProblemStats(n=n, d=d, nnz=int(np.sum(np.asarray(pcsr.nnz))),
-                        kc=int(pcsc.indices.shape[1]),
-                        kr=int(pcsr.indices.shape[1]))
+    # planner.data_stats knows every pair layout (flat and §11 tiered)
+    from repro.core.solvers.planner import data_stats
+    return data_stats((pcsr, pcsc))
 
 
 def _solve_jax_sparse_group(
@@ -229,7 +232,7 @@ def _solve_jax_sparse_group(
         steps=c0.steps, loss=c0.loss, private=private, fused=fused,
         interpret=c0.interpret)
     jax.block_until_ready(w)
-    record_cost("jax_sparse", "vmap", jax.devices()[0].platform,
+    record_cost(c0.backend, "vmap", jax.devices()[0].platform,
                 _group_stats(pcsr, pcsc),
                 (time.perf_counter() - t0) / (c0.steps * len(configs)),
                 loss=c0.loss)
@@ -257,7 +260,7 @@ def _solve_jax_sparse_group_sequential(
         res = jax_sparse_fw(pcsr, pcsc, y32, cfg, setup=setup)
         jax.block_until_ready(res.w)
         ran = max(res.stop_step_or(cfg.steps), 1)
-        record_cost("jax_sparse", "sequential", platform, stats,
+        record_cost(cfg.backend, "sequential", platform, stats,
                     (time.perf_counter() - t0) / ran, loss=cfg.loss)
         out.append(res)
     return out
@@ -328,7 +331,7 @@ def _solve_jax_sparse_group_cohort(
             steps=c, loss=c0.loss, private=private, fused=fused,
             interpret=c0.interpret)
         jax.block_until_ready(g)
-        record_cost("jax_sparse", "vmap", platform, stats,
+        record_cost(c0.backend, "vmap", platform, stats,
                     (time.perf_counter() - tw) / (c * width), loss=c0.loss)
         cur = jax.tree_util.tree_map(lambda a: a[: len(active)], padded)
         g_np, j_np = np.asarray(g), np.asarray(j)
@@ -376,6 +379,11 @@ def _as_plan(plan: Union[None, str, SolvePlan]) -> SolvePlan:
 def _run_jax_sparse_group(data, y, member_cfgs: Sequence[FWConfig],
                           plan: SolvePlan) -> List[FWResult]:
     """Dispatch one jax_sparse sweep group per the §9 plan."""
+    if plan.chunk_steps is None and hasattr(data, "tuning_for"):
+        # §11: the store's autotuned chunk length is the plan default
+        rec = data.tuning_for("jax_sparse", member_cfgs[0].loss)
+        if rec is not None and rec.chunk_steps is not None:
+            plan = dataclasses.replace(plan, chunk_steps=rec.chunk_steps)
     if plan.chunk_steps is not None:
         # the plan's chunk is a default, not an override: a per-config pin
         # (which is a GROUP_FIELDS member, so uniform here) still wins
@@ -390,7 +398,8 @@ def _run_jax_sparse_group(data, y, member_cfgs: Sequence[FWConfig],
         pcsr = (data.pcsr if hasattr(data, "pcsr") else data[0])
         pcsc = (data.pcsc if hasattr(data, "pcsc") else data[1])
         mode = group_mode(_group_stats(pcsr, pcsc), len(member_cfgs),
-                          loss=member_cfgs[0].loss)
+                          loss=member_cfgs[0].loss,
+                          backend=member_cfgs[0].backend)
     if mode == "sequential":
         return _solve_jax_sparse_group_sequential(data, y, member_cfgs)
     if early:

@@ -25,6 +25,7 @@ benchmarks/perf_lasso.py).
 from __future__ import annotations
 
 import functools
+import time
 from typing import Dict, Tuple
 
 import jax
@@ -54,8 +55,31 @@ def make_shard_mesh(a: int, b: int):
     return jax.make_mesh((a, b), ("data", "model"))
 
 
-def mesh_grid(config: FWConfig) -> Tuple[int, int]:
-    return tuple(int(v) for v in (config.mesh or (1, 1)))
+def mesh_grid(config: FWConfig, src: ShardSource = None) -> Tuple[int, int]:
+    """The (a × b) grid for one solve: the config's pin, else the dataset's
+    §11 autotuned geometry (when ``src`` is store-backed and a record
+    exists), else 1×1."""
+    if config.mesh is not None:
+        return tuple(int(v) for v in config.mesh)
+    store = getattr(src, "store", None)
+    if store is not None and hasattr(store, "autotune_load"):
+        rec = store.autotune_load("jax_shard", config.loss,
+                                  jax.devices()[0].platform)
+        if rec is not None and rec.mesh is not None:
+            return tuple(int(v) for v in rec.mesh)
+    return (1, 1)
+
+
+def _record_shard_cost(src: ShardSource, mode: str, seconds_per_step_lane:
+                       float, *, loss: str) -> None:
+    """Feed the group timing to the planner under the **jax_shard** key (the
+    mis-keying this module used to dodge by not recording at all)."""
+    from repro.core.solvers.planner import data_stats, record_cost
+    source = src.csr if src.csr is not None else src.store
+    if source is None:
+        return
+    record_cost("jax_shard", mode, jax.devices()[0].platform,
+                data_stats(source), seconds_per_step_lane, loss=loss)
 
 
 def shard_em_scale(config: FWConfig, n_rows: int) -> float:
@@ -131,13 +155,14 @@ def _reject_max_seconds(config: FWConfig) -> None:
 def shard_fw(src: ShardSource, y, config: FWConfig) -> FWResult:
     """One solve through the sharded collective schedule."""
     _reject_max_seconds(config)
-    a, b = mesh_grid(config)
+    a, b = mesh_grid(config, src)
     mesh = make_shard_mesh(a, b)
     blocks = src.blocks(a, b)
     n, d = src.shape
     prog = shard_program(blocks, mesh, steps=config.steps, loss=config.loss,
                          selection=config.queue,
                          early_stop=config.gap_tol > 0)
+    t0 = time.perf_counter()
     with mesh:
         ypad = _pad_labels(y, blocks.padded[0])
         setup = prog.setup(blocks, ypad)
@@ -146,6 +171,10 @@ def shard_fw(src: ShardSource, y, config: FWConfig) -> FWResult:
             jnp.float32(shard_em_scale(config, n)),
             jnp.float32(config.gap_tol),
             jax.random.PRNGKey(config.seed))
+    jax.block_until_ready(w)
+    _record_shard_cost(src, "sequential",
+                       (time.perf_counter() - t0) / max(config.steps, 1),
+                       loss=config.loss)
     return _shard_result(w, gaps, coords, stop_step, d, config.steps)
 
 
@@ -156,7 +185,7 @@ def solve_shard_group(src: ShardSource, y, configs) -> list:
     c0 = configs[0]
     for c in configs:
         _reject_max_seconds(c)
-    a, b = mesh_grid(c0)
+    a, b = mesh_grid(c0, src)
     mesh = make_shard_mesh(a, b)
     blocks = src.blocks(a, b)
     n, d = src.shape
@@ -167,6 +196,7 @@ def solve_shard_group(src: ShardSource, y, configs) -> list:
     scales = jnp.asarray([shard_em_scale(c, n) for c in configs], jnp.float32)
     tols = jnp.asarray([c.gap_tol for c in configs], jnp.float32)
     keys = jnp.stack([jax.random.PRNGKey(c.seed) for c in configs])
+    t0 = time.perf_counter()
     with mesh:
         ypad = _pad_labels(y, blocks.padded[0])
         setup = prog.setup(blocks, ypad)
@@ -175,12 +205,20 @@ def solve_shard_group(src: ShardSource, y, configs) -> list:
                                  selection=c0.queue, early_stop=early)
             w, gaps, coords, stops = vscan(blocks, ypad, *setup, lams, scales,
                                            tols, keys)
+            jax.block_until_ready(w)
             outs = [(w[i], gaps[i], coords[i], stops[i])
                     for i in range(len(configs))]
+            mode = "vmap"
         else:
             outs = [prog.scan(blocks, ypad, *setup, lams[i], scales[i],
                               tols[i], keys[i])
                     for i in range(len(configs))]
+            jax.block_until_ready(outs[-1][0])
+            mode = "sequential"
+    _record_shard_cost(
+        src, mode,
+        (time.perf_counter() - t0) / max(c0.steps * len(configs), 1),
+        loss=c0.loss)
     return [_shard_result(w, g, c, s, d, c0.steps) for (w, g, c, s) in outs]
 
 

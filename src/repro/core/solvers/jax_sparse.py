@@ -62,7 +62,7 @@ from repro.core.samplers.group_argmax import ga_get_next, ga_init, ga_update
 from repro.core.solvers.config import STOP_MAX_STEPS, FWConfig, FWResult
 from repro.core.solvers.stopping import (assemble_outputs, drive_chunks,
                                          resolve_chunk)
-from repro.core.sparse.formats import PaddedCSC, PaddedCSR
+from repro.core.sparse.formats import PaddedCSC, PaddedCSR, TieredCSC
 from repro.kernels.bsls_draw.ops import two_level_draw
 from repro.kernels.coord_update.ops import coord_update
 from repro.kernels.coord_update.ref import coord_update_ref
@@ -133,7 +133,7 @@ def fw_carry_init(
 
 
 def fw_scan_chunk(
-    pcsr: PaddedCSR, pcsc: PaddedCSC, carry: FWCarry,
+    pcsr: PaddedCSR, pcsc, carry: FWCarry,
     lam, em_scale, gap_tol, t0, y=None,
     *, steps: int, loss: str, private: bool, fused: bool, interpret: bool,
     early_stop: bool = False,
@@ -195,28 +195,46 @@ def fw_scan_chunk(
         w = w.at[j].add(eta * d_tilde / w_m)
         g_tilde = g_tilde * (1.0 - eta) + eta * d_tilde * a_j
         # ---- lines 22-28: one fused VMEM sweep ------------------------------
-        rows, xvals, mask = pcsc.col(j)                  # (Kc,)
-        row_idx = pcsr.indices[rows]                     # (Kc, Kr)
-        row_val = pcsr.values[rows]                      # (Kc, Kr) — 0 at padding
-        y_col = None if obj.separable else y[rows]
-        if fused:
-            vbar, qbar, alpha, g_delta = coord_update(
-                vbar, qbar, alpha, w, rows, xvals, mask, row_idx, row_val,
-                eta=eta, d_tilde=d_tilde, w_m=w_m, inv_n=inv_n,
-                loss=loss, y_col=y_col, interpret=interpret)
+        def apply_tile(col):
+            """Lines 22-29 on one column tile: the fused coordinate update
+            plus the queue refresh of every touched coordinate.  The tile
+            width is whatever the layout hands us — the flat (Kc,) lanes, or
+            one tier of the autotuned split; padded lanes are inert either
+            way, so the tier only changes how many zero lanes ride along."""
+            rows, xvals, mask = col                      # (K,)
+            row_idx = pcsr.indices[rows]                 # (K, Kr)
+            row_val = pcsr.values[rows]                  # (K, Kr) — 0 at padding
+            y_col = None if obj.separable else y[rows]
+            if fused:
+                vbar_t, qbar_t, alpha_t, g_delta = coord_update(
+                    vbar, qbar, alpha, w, rows, xvals, mask, row_idx, row_val,
+                    eta=eta, d_tilde=d_tilde, w_m=w_m, inv_n=inv_n,
+                    loss=loss, y_col=y_col, interpret=interpret)
+            else:
+                vbar_t, qbar_t, alpha_t, g_delta = coord_update_ref(
+                    vbar, qbar, alpha, w, rows, xvals, mask, row_idx, row_val,
+                    eta=eta, d_tilde=d_tilde, w_m=w_m, inv_n=inv_n,
+                    h=h if obj.separable else obj.grad, y_col=y_col)
+            # line 29: refresh queue priorities for touched coordinates
+            flat_idx = row_idx.reshape(-1)
+            fresh = jnp.abs(alpha_t[flat_idx]) * (em_scale if private
+                                                  else 1.0)
+            if private:
+                sampler_t = tl_update(sampler_after_sel, flat_idx, fresh)
+            else:
+                sampler_t = ga_update(sampler_after_sel, flat_idx, fresh)
+            return vbar_t, qbar_t, alpha_t, g_delta, sampler_t
+
+        if isinstance(pcsc, TieredCSC):
+            # §11 tiered layout: the few heavy columns run the full-width
+            # tile, everything else the narrow one — same sums, fewer lanes
+            vbar, qbar, alpha, g_delta, sampler = jax.lax.cond(
+                pcsc.is_heavy(j),
+                lambda: apply_tile(pcsc.col_heavy(j)),
+                lambda: apply_tile(pcsc.col_light(j)))
         else:
-            vbar, qbar, alpha, g_delta = coord_update_ref(
-                vbar, qbar, alpha, w, rows, xvals, mask, row_idx, row_val,
-                eta=eta, d_tilde=d_tilde, w_m=w_m, inv_n=inv_n,
-                h=h if obj.separable else obj.grad, y_col=y_col)
+            vbar, qbar, alpha, g_delta, sampler = apply_tile(pcsc.col(j))
         g_tilde = g_tilde + g_delta
-        # ---- line 29: refresh queue priorities for touched coordinates ------
-        flat_idx = row_idx.reshape(-1)
-        fresh = jnp.abs(alpha[flat_idx]) * (em_scale if private else 1.0)
-        if private:
-            sampler = tl_update(sampler_after_sel, flat_idx, fresh)
-        else:
-            sampler = ga_update(sampler_after_sel, flat_idx, fresh)
         new = FWCarry(w, w_m, g_tilde, vbar, qbar, alpha, sampler, key_next,
                       done, stop_at)
         if not early_stop:
@@ -240,7 +258,7 @@ def fw_scan_chunk(
 
 
 def fw_scan(
-    pcsr: PaddedCSR, pcsc: PaddedCSC,
+    pcsr: PaddedCSR, pcsc,
     vbar0: jnp.ndarray, qbar0: jnp.ndarray, alpha0: jnp.ndarray,
     lam, em_scale, key: jax.Array, gap_tol=0.0, y=None,
     *, steps: int, loss: str, private: bool, fused: bool, interpret: bool,
@@ -313,7 +331,7 @@ def _chunked_fw(pcsr, pcsc, setup, config: FWConfig, em_scale: float,
 
 
 def jax_sparse_fw(
-    pcsr: PaddedCSR, pcsc: PaddedCSC, y: jnp.ndarray, config: FWConfig,
+    pcsr: PaddedCSR, pcsc, y: jnp.ndarray, config: FWConfig,
     setup: Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray] = None,
 ) -> FWResult:
     """One solve through the kernel pipeline (both stages jitted).

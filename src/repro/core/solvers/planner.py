@@ -69,28 +69,68 @@ class ProblemStats:
         return self.nnz / max(self.n * self.d, 1)
 
 
+# manifest-derived stats per store, keyed by content hash: deriving them is
+# already O(1) metadata reads, but fit services re-ask on every admission
+_STORE_STATS: Dict[str, "ProblemStats"] = {}
+
+
+def store_stats(store) -> ProblemStats:
+    """:class:`ProblemStats` for a ``DatasetStore`` from its metadata alone.
+
+    n/d/nnz sit in the manifest; the ingest-pass column stats give the exact
+    max column nnz (``df`` counts one hit per stored entry); the max row nnz
+    comes from the manifest when the ingest recorded it, else from one O(N)
+    sweep over the mmap'd shard indptrs.  Nothing here materializes values
+    or indices — stats for an 8M×20M store cost a few metadata reads.
+    """
+    key = store.content_hash
+    got = _STORE_STATS.get(key)
+    if got is not None:
+        return got
+    kc = store.manifest.get("col_nnz_max")
+    if kc is None:
+        df = store.col_stats().df
+        kc = int(df.max()) if df.size else 1
+    kr = store.manifest.get("row_nnz_max")
+    if kr is None:
+        kr = 1
+        for i in range(store.n_shards):
+            indptr = np.load(store._shard_base(i) + ".indptr.npy",
+                             mmap_mode="r")
+            if indptr.shape[0] > 1:
+                kr = max(kr, int(np.diff(indptr).max()))
+    stats = ProblemStats(n=store.n, d=store.d, nnz=store.nnz,
+                         kc=max(int(kc), 1), kr=max(int(kr), 1))
+    _STORE_STATS[key] = stats
+    return stats
+
+
 def data_stats(X) -> ProblemStats:
     """Derive :class:`ProblemStats` from any layout ``solve`` accepts."""
     from repro.core.solvers.prepared import PreparedDataset
-    from repro.core.sparse.formats import HostCSR, PaddedCSC, PaddedCSR
+    from repro.core.sparse.formats import (HostCSR, PaddedCSC, PaddedCSR,
+                                           TieredCSC)
     if isinstance(X, PreparedDataset):
         X = X.pair
     if (isinstance(X, tuple) and len(X) == 2
-            and isinstance(X[0], PaddedCSR) and isinstance(X[1], PaddedCSC)):
+            and isinstance(X[0], PaddedCSR)
+            and isinstance(X[1], (PaddedCSC, TieredCSC))):
         pcsr, pcsc = X
         n, d = pcsr.shape
+        # a tiered CSC's cost-relevant tile height is the true max column
+        # nnz — the full-width heavy tier, not the narrow light table
+        kc = (pcsc.full_width if isinstance(pcsc, TieredCSC)
+              else int(pcsc.indices.shape[1]))
         return ProblemStats(n=n, d=d, nnz=int(np.sum(np.asarray(pcsr.nnz))),
-                            kc=int(pcsc.indices.shape[1]),
-                            kr=int(pcsr.indices.shape[1]))
+                            kc=kc, kr=int(pcsr.indices.shape[1]))
     if isinstance(X, HostCSR):
         row_nnz = np.diff(X.indptr)
         col_nnz = np.bincount(X.indices, minlength=X.shape[1])
         return ProblemStats(n=X.shape[0], d=X.shape[1], nnz=X.nnz,
                             kc=int(col_nnz.max()) if X.nnz else 1,
                             kr=int(row_nnz.max()) if X.nnz else 1)
-    store = getattr(X, "content_hash", None)
-    if store is not None and hasattr(X, "to_host_csr"):
-        return data_stats(X.to_host_csr())
+    if getattr(X, "content_hash", None) is not None and hasattr(X, "manifest"):
+        return store_stats(X)        # O(1) from metadata, never materializes
     if hasattr(X, "resolve"):                       # DatasetRef
         resolved, _ = X.resolve()
         return data_stats(resolved)
@@ -191,6 +231,21 @@ def record_cost(backend: str, mode: str, platform: str, stats: ProblemStats,
                       else 0.7 * prev + 0.3 * seconds_per_step_lane)
 
 
+def record_measured(backend: str, mode: str, platform: str,
+                    stats: ProblemStats, seconds_per_step_lane: float, *,
+                    loss: str = "logistic") -> None:
+    """High-priority observation: the autotuner's warmed, best-of-N timings.
+
+    Unlike :func:`record_cost` there is no first-observation discard (the
+    tuner already excluded compiles) and no EWMA blending with whatever was
+    there — a deliberate steady-state measurement simply becomes the book
+    entry the next plan reads.
+    """
+    key = _cost_key(backend, mode, platform, stats, loss)
+    _WARMED.add(key)
+    _COSTBOOK[key] = float(seconds_per_step_lane)
+
+
 def measured_cost(backend: str, mode: str, platform: str,
                   stats: ProblemStats, *,
                   loss: str = "logistic") -> Optional[float]:
@@ -265,24 +320,37 @@ def choose_backend(stats: ProblemStats, config: FWConfig,
     if config.mesh is not None and config.mesh != (1, 1):
         return "jax_shard"
     plat = _platform(platform)
-    t_dense = step_time_model(stats, "dense", plat)
-    t_sparse = step_time_model(stats, "jax_sparse", plat)
-    return "dense" if t_dense < t_sparse else "jax_sparse"
+
+    def per_iter(backend: str) -> float:
+        # observed steady-state time beats the roofline model whenever the
+        # tuner/driver has recorded one for this (backend, shape, loss) key
+        got = measured_cost(backend, "sequential", plat, stats,
+                            loss=config.loss)
+        return got if got is not None else step_time_model(stats, backend,
+                                                           plat)
+
+    return "dense" if per_iter("dense") < per_iter("jax_sparse") \
+        else "jax_sparse"
 
 
 def group_mode(stats: ProblemStats, group_size: int,
                plan: Optional[SolvePlan] = None,
                platform: Optional[str] = None,
-               loss: str = "logistic") -> str:
+               loss: str = "logistic", backend: str = "jax_sparse") -> str:
     """vmap vs sequential for one sweep group: measured costs win, then the
-    lane-overhead model, then the platform default."""
+    lane-overhead model, then the platform default.
+
+    ``backend`` keys the cost-book lookup — a group running on the sharded
+    engine must read (and its driver must record) ``jax_shard`` entries, not
+    pollute/consult the ``jax_sparse`` book.
+    """
     if plan is not None and plan.mode != "auto":
         return plan.mode
     if group_size < 2:
         return "sequential"
     plat = _platform(platform)
-    seq = measured_cost("jax_sparse", "sequential", plat, stats, loss=loss)
-    vm = measured_cost("jax_sparse", "vmap", plat, stats, loss=loss)
+    seq = measured_cost(backend, "sequential", plat, stats, loss=loss)
+    vm = measured_cost(backend, "vmap", plat, stats, loss=loss)
     if seq is not None and vm is not None:
         return "vmap" if vm < seq else "sequential"
     # First-order model: a B-lane vmap step costs lane·B sequential-step-
@@ -301,7 +369,10 @@ def plan_for(X, configs: Sequence[FWConfig],
     stats = data_stats(X)
     plat = _platform(platform)
     steps = configs[0].steps if configs else 0
-    mode = group_mode(stats, len(configs), platform=plat)
+    backend = configs[0].backend if configs else "jax_sparse"
+    mode = group_mode(stats, len(configs), platform=plat,
+                      loss=configs[0].loss if configs else "logistic",
+                      backend=backend if backend != "auto" else "jax_sparse")
     return SolvePlan(mode=mode, chunk_steps=default_chunk(steps) if steps
                      else None,
                      notes=f"platform={plat} n={stats.n} d={stats.d} "

@@ -30,6 +30,8 @@ from repro.core.sparse.formats import PaddedCSC, PaddedCSR
 SetupState = Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]  # (v̄₀, q̄₀, α₀)
 SetupLoader = Callable[[str, bool], Optional[SetupState]]
 SetupSaver = Callable[[str, bool, SetupState], None]
+# (backend, loss, platform) -> persisted autotune.TuningRecord or None
+TuningLoader = Callable[[str, str, str], Optional[object]]
 
 
 @dataclasses.dataclass
@@ -41,8 +43,13 @@ class PreparedDataset:
     y: np.ndarray                         # labels the setup cache is bound to
     loader: Optional[SetupLoader] = None  # disk-cache read hook (store)
     saver: Optional[SetupSaver] = None    # disk-cache write hook (store)
+    tuning_loader: Optional[TuningLoader] = None   # §11 autotune replay hook
     _setup: Dict[Tuple[str, bool], SetupState] = dataclasses.field(
         default_factory=dict)
+    # (backend, loss, platform) -> TuningRecord | None (None memoizes a miss)
+    _tuning: Dict[Tuple[str, str, str], Optional[object]] = dataclasses.field(
+        default_factory=dict)
+    _tuned_csc: Dict[int, object] = dataclasses.field(default_factory=dict)
 
     @property
     def shape(self):
@@ -74,3 +81,35 @@ class PreparedDataset:
                     self.saver(loss, interpret, state)
             self._setup[key] = tuple(jnp.asarray(s) for s in state)
         return self._setup[key]
+
+    # ------------------------------------------------- §11 autotuned layout
+    def tuning_for(self, backend: str, loss: str,
+                   platform: Optional[str] = None):
+        """The dataset's persisted autotune winner for (backend, loss) on
+        the live platform, or None.  Misses are memoized too — a dataset
+        with no tuning record costs one loader call per key, ever."""
+        if platform is None:
+            import jax
+            platform = jax.devices()[0].platform
+        key = (backend, loss, platform)
+        if key not in self._tuning:
+            rec = (self.tuning_loader(backend, loss, platform)
+                   if self.tuning_loader else None)
+            self._tuning[key] = rec
+        return self._tuning[key]
+
+    def set_tuning(self, record) -> None:
+        """Install a freshly-searched record in-memory (the tuner's hook, so
+        the session that ran the search also benefits from it)."""
+        self._tuning[(record.backend, record.loss, record.platform)] = record
+
+    def tuned_pcsc(self, record):
+        """The CSC layout ``record`` names: the §11 tiered split at its
+        ``ell_width``, memoized per width; the flat pair when untuned."""
+        if record is None or record.ell_width is None:
+            return self.pcsc
+        width = int(record.ell_width)
+        if width not in self._tuned_csc:
+            from repro.core.sparse.formats import tiered_from_padded
+            self._tuned_csc[width] = tiered_from_padded(self.pcsc, width)
+        return self._tuned_csc[width]

@@ -3,7 +3,9 @@ from repro.core.sparse.formats import (  # noqa: F401
     HostCSR,
     PaddedCSC,
     PaddedCSR,
+    TieredCSC,
     coo_to_host,
     dense_to_host,
     dense_to_padded,
+    tiered_from_padded,
 )

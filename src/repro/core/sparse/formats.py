@@ -232,6 +232,99 @@ class PaddedCSC:
         return idx, val, mask
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TieredCSC:
+    """Two-tier padded CSC: the autotuner's exact-arithmetic ELL split.
+
+    Power-law column popularity makes a single pad width pay for its tail:
+    the rcv1-like regime has max column nnz ~8× its 99th percentile, so the
+    flat ``PaddedCSC`` tile spends >100× the true nnz in padded lanes.  The
+    tiered layout keeps a narrow ``(D, k)`` primary table for the common case
+    and a full-width ``(H, K)`` heavy table holding the few columns whose
+    nnz exceeds ``k`` verbatim; per-step dispatch (``lax.cond`` on the true
+    column count) picks the tier.  No entry is dropped and padding stays
+    ``index = 0, value = 0``, so every tile pass computes the same sums as
+    the flat layout — the tuner's bitwise parity probe pins that per dataset.
+    """
+
+    indices: jnp.ndarray        # (D, k) light-tier row ids (heavy cols truncated)
+    values: jnp.ndarray         # (D, k)
+    nnz: jnp.ndarray            # (D,) TRUE per-column counts (never clamped)
+    heavy_slot: jnp.ndarray     # (D,) int32 row in the heavy table (0 if light)
+    heavy_indices: jnp.ndarray  # (H, K) full-width rows of the heavy columns
+    heavy_values: jnp.ndarray   # (H, K)
+    shape: Shape                # static (N, D)
+
+    def tree_flatten(self):
+        return ((self.indices, self.values, self.nnz, self.heavy_slot,
+                 self.heavy_indices, self.heavy_values), self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, shape, leaves):
+        return cls(*leaves, shape=shape)
+
+    @property
+    def width(self) -> int:
+        """Light-tier pad width k (the tuner's search knob)."""
+        return int(self.indices.shape[1])
+
+    @property
+    def full_width(self) -> int:
+        """Heavy-tier pad width = the flat layout's exact max column nnz."""
+        return int(self.heavy_indices.shape[1])
+
+    def is_heavy(self, j) -> jnp.ndarray:
+        return jnp.take(self.nnz, j) > self.width
+
+    def col_light(self, j) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """Column j through the narrow tier (valid when nnz[j] <= width)."""
+        idx = jnp.take(self.indices, j, axis=0)
+        val = jnp.take(self.values, j, axis=0)
+        k = jnp.take(self.nnz, j)
+        mask = jnp.arange(idx.shape[0]) < k
+        return idx, val, mask
+
+    def col_heavy(self, j) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """Column j through the full-width tier (exact for every column)."""
+        slot = jnp.take(self.heavy_slot, j)
+        idx = jnp.take(self.heavy_indices, slot, axis=0)
+        val = jnp.take(self.heavy_values, slot, axis=0)
+        k = jnp.take(self.nnz, j)
+        mask = jnp.arange(idx.shape[0]) < k
+        return idx, val, mask
+
+
+def tiered_from_padded(pcsc: PaddedCSC, width: int) -> TieredCSC:
+    """Split a flat ``PaddedCSC`` into the two-tier layout at ``width``.
+
+    Exact by construction: columns with nnz <= width move to the narrow
+    table unchanged (their truncated lanes were all padding); wider columns
+    keep their full lanes in the heavy table and are dispatched there.
+    """
+    full = int(pcsc.indices.shape[1])
+    width = int(width)
+    if not 1 <= width < full:
+        raise ValueError(f"tier width must be in [1, {full}), got {width}")
+    ci = np.asarray(pcsc.indices)
+    cv = np.asarray(pcsc.values)
+    cn = np.asarray(pcsc.nnz)
+    heavy_cols = np.flatnonzero(cn > width)
+    h = max(1, heavy_cols.size)            # keep the table non-empty (jit-safe)
+    heavy_idx = np.zeros((h, full), ci.dtype)
+    heavy_val = np.zeros((h, full), cv.dtype)
+    heavy_slot = np.zeros(ci.shape[0], np.int32)
+    if heavy_cols.size:
+        heavy_idx[: heavy_cols.size] = ci[heavy_cols]
+        heavy_val[: heavy_cols.size] = cv[heavy_cols]
+        heavy_slot[heavy_cols] = np.arange(heavy_cols.size, dtype=np.int32)
+    return TieredCSC(
+        indices=jnp.asarray(ci[:, :width]), values=jnp.asarray(cv[:, :width]),
+        nnz=jnp.asarray(cn), heavy_slot=jnp.asarray(heavy_slot),
+        heavy_indices=jnp.asarray(heavy_idx),
+        heavy_values=jnp.asarray(heavy_val), shape=pcsc.shape)
+
+
 def _pad_rows(indptr: np.ndarray, indices: np.ndarray, data: np.ndarray, n_major: int, k: int):
     out_idx = np.zeros((n_major, k), dtype=np.int32)
     out_val = np.zeros((n_major, k), dtype=np.float32)

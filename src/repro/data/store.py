@@ -218,6 +218,7 @@ class DatasetStore:
         os.makedirs(tmp_root)
         os.makedirs(os.path.join(tmp_root, CACHE_DIR))
         writer = _ShardWriter(tmp_root, rows_per_shard)
+        row_nnz_max = 0
         # one hasher per logical stream so the digest is invariant to chunk
         # geometry: the same rows hash identically however they arrive
         h_lens, h_cols, h_vals, h_y = (hashlib.sha256() for _ in range(4))
@@ -231,7 +232,10 @@ class DatasetStore:
         for chunk in chunks:
             if chunk.n_rows == 0:
                 continue
-            h_lens.update(np.diff(chunk.indptr).astype(np.int64).tobytes())
+            row_lens = np.diff(chunk.indptr).astype(np.int64)
+            if row_lens.size:
+                row_nnz_max = max(row_nnz_max, int(row_lens.max()))
+            h_lens.update(row_lens.tobytes())
             h_cols.update(chunk.cols.astype(np.int64).tobytes())
             h_vals.update(chunk.vals.astype(np.float64).tobytes())
             h_y.update(chunk.y.astype(np.float64).tobytes())
@@ -265,6 +269,10 @@ class DatasetStore:
             "index_dtype": "int64", "value_dtype": "float64",
             "rows_per_shard": rows_per_shard,
             "shards": shards,
+            # max row/col nnz: the planner's O(1) ProblemStats source —
+            # col max is exact off the df counts (one per stored entry)
+            "row_nnz_max": row_nnz_max,
+            "col_nnz_max": int(df[:d].max()) if d else 0,
             "content_hash": hashlib.sha256(
                 b"".join(h.digest()
                          for h in (h_lens, h_cols, h_vals, h_y))).hexdigest(),
@@ -518,6 +526,32 @@ class DatasetStore:
                        "shape": list(blocks.shape),
                        "padded": list(blocks.padded)}, f)
 
+    def _autotune_path(self, backend: str, loss: str, platform: str) -> str:
+        return os.path.join(self.root, CACHE_DIR,
+                            f"autotune-{backend}-{loss}-{platform}.json")
+
+    def autotune_load(self, backend: str, loss: str, platform: str):
+        """The persisted §11 ``TuningRecord`` for (backend, loss, platform),
+        or None — fourth cache layer alongside padded/setup/blocks, guarded
+        like the others by the store's content hash (and the tuner's record
+        version, so stale search formats never replay)."""
+        path = self._autotune_path(backend, loss, platform)
+        if not os.path.exists(path):
+            return None
+        from repro.core.solvers.autotune import TuningRecord
+        with open(path) as f:
+            rec = TuningRecord.from_json(json.load(f))
+        if rec is None or rec.content_hash != self.content_hash:
+            return None
+        return rec
+
+    def autotune_save(self, record) -> None:
+        os.makedirs(os.path.join(self.root, CACHE_DIR), exist_ok=True)
+        path = self._autotune_path(record.backend, record.loss,
+                                   record.platform)
+        with open(path, "w") as f:
+            json.dump(record.to_json(), f, indent=1)
+
     def _setup_cache_path(self, loss: str, interpret: bool) -> str:
         mode = "interp" if interpret else "compiled"
         return os.path.join(self.root, CACHE_DIR, f"setup-{loss}-{mode}.npz")
@@ -562,7 +596,8 @@ class DatasetStore:
             self._prepared = PreparedDataset(
                 pcsr=pcsr, pcsc=pcsc,
                 y=np.asarray(self.labels(), np.float64),
-                loader=self._setup_load, saver=self._setup_save)
+                loader=self._setup_load, saver=self._setup_save,
+                tuning_loader=self.autotune_load)
         return self._prepared
 
     def setup_streamed(self, loss: str = "logistic"):

@@ -160,12 +160,15 @@ class FitService:
 
     # --------------------------------------------------------------- internals
     def _planned_backend(self, cfg: FWConfig) -> str:
-        """Cost-model backend choice against the resident dataset (stats
-        derived once per service lifetime from the already-coerced padded
-        layout — no extra data pass)."""
+        """Cost-model backend choice against the resident dataset.
+
+        Stats come from the resolved *source* — for a ``DatasetStore`` that
+        is O(1) manifest metadata (cached per content hash by the planner),
+        so admissions never re-derive shape facts from the coerced padded
+        pair, let alone materialize anything."""
         from repro.core.solvers.planner import choose_backend, data_stats
         if self._stats is None:
-            self._stats = data_stats(self._coerced["padded"])
+            self._stats = data_stats(self._source)
         return choose_backend(self._stats, cfg)
 
     def _admit(self, req: FitRequest) -> bool:

@@ -255,3 +255,80 @@ def test_fit_service_charges_full_T_for_early_stopped_fits(problem):
     assert done[0].result.stop_step_or() < 30
     assert (adaptive_svc.accountants["t"].spent_steps
             == fixed_svc.accountants["t"].spent_steps)
+
+
+# ---------------------------------------------------------------------------
+# chunked-driver clock and assembly contracts (§9 bugfix regressions)
+# ---------------------------------------------------------------------------
+
+
+class _FakeCarry:
+    done = False
+    stop_at = 0
+
+
+def _drive(advance, steps, chunk, max_seconds):
+    from repro.core.solvers.stopping import drive_chunks
+    import jax.numpy as jnp
+    calls = []
+
+    def wrapped(carry, t0, c):
+        advance(len(calls))
+        calls.append(t0)
+        return carry, (jnp.zeros(c), jnp.full(c, -1, jnp.int32))
+
+    out = drive_chunks(wrapped, _FakeCarry(), steps=steps, chunk=chunk,
+                       max_seconds=max_seconds,
+                       done_of=lambda c: c.done, stop_at_of=lambda c: c.stop_at)
+    return out, calls
+
+
+def test_compile_heavy_first_chunk_does_not_trip_max_seconds():
+    """The wall-clock budget must not be charged for the cold chunk's XLA
+    compile: a first chunk far over budget followed by instant chunks runs
+    to completion (the old driver stopped after chunk 1, always)."""
+    import time
+
+    def advance(i):
+        if i == 0:
+            time.sleep(0.3)          # "compile": one-off process cost
+
+    (carry, outs, stop, reason), calls = _drive(advance, steps=40, chunk=10,
+                                                max_seconds=0.2)
+    assert reason == "max_steps"
+    assert stop == 40
+    assert len(calls) == 4
+
+
+def test_max_seconds_still_enforced_after_warm_chunk():
+    """Steady-state chunks do count: the budget trips once warm wall time
+    crosses it, and the partial trace keeps its sentinel contract."""
+    import time
+    import numpy as np
+
+    def advance(i):
+        if i > 0:
+            time.sleep(0.12)
+
+    (carry, outs, stop, reason), calls = _drive(advance, steps=500, chunk=10,
+                                                max_seconds=0.2)
+    assert reason == "max_seconds"
+    assert stop == len(calls) * 10 < 500
+    assert len(calls) >= 2           # never stops on the cold chunk alone
+    from repro.core.solvers.stopping import assemble_outputs
+    gaps, coords = assemble_outputs(outs, 500, (0.0, -1))
+    assert gaps.shape == coords.shape == (500,)
+    assert (np.asarray(coords)[stop:] == -1).all()
+
+
+def test_assemble_outputs_zero_chunk_keeps_stream_dtypes():
+    """The empty-stream fallback must honor each stream's dtype contract —
+    int32 coords were silently promoted to float32 before."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.solvers.stopping import assemble_outputs
+    gaps, coords = assemble_outputs([], 7, (0.0, -1))
+    assert gaps.dtype == jnp.float32
+    assert coords.dtype == jnp.int32
+    assert (np.asarray(gaps) == 0.0).all()
+    assert (np.asarray(coords) == -1).all()

@@ -142,3 +142,96 @@ def test_fit_service_auto_backend_charges_like_explicit(problem):
     assert done_auto[0].config.backend in ("jax_sparse", "dense")
     assert (svc_auto.accountants["t"].spent_steps
             == svc_exp.accountants["t"].spent_steps)
+
+
+def test_shard_observation_cannot_flip_jax_sparse_mode():
+    """Cost-book keying regression: the batched drivers used to record every
+    group under backend="jax_sparse", so sharded timings steered the kernel
+    pipeline's vmap-vs-sequential choice.  Observations must stay siloed per
+    backend."""
+    stats = planner.ProblemStats(n=2000, d=4800, nnz=80_000, kc=64, kr=40)
+    planner.clear_costbook()
+    try:
+        # a shard group that measured vmap as (absurdly) cheap...
+        for _ in range(2):
+            planner.record_cost("jax_shard", "vmap", "cpu", stats, 1e-6)
+            planner.record_cost("jax_shard", "sequential", "cpu", stats, 1.0)
+        # ...must not flip a jax_sparse group off the CPU default
+        assert planner.group_mode(stats, 8, platform="cpu") == "sequential"
+        # while the shard backend's own groups do read them
+        assert planner.group_mode(stats, 8, platform="cpu",
+                                  backend="jax_shard") == "vmap"
+    finally:
+        planner.clear_costbook()
+
+
+def test_shard_group_records_under_its_own_key(problem):
+    """solve_many shard groups feed the book under backend="jax_shard"."""
+    X, y = problem
+    planner.clear_costbook()
+    try:
+        stats = planner.data_stats(X)
+        cfgs = grid(lam=(5.0, 9.0), backend="jax_shard", steps=4)
+        for _ in range(2):           # first observation per key is discarded
+            solve_many(X, y, cfgs)
+        assert planner.measured_cost("jax_shard", "vmap", "cpu",
+                                     stats) is not None
+        assert planner.measured_cost("jax_sparse", "vmap", "cpu",
+                                     stats) is None
+    finally:
+        planner.clear_costbook()
+
+
+def test_store_stats_from_manifest_never_materializes(problem, tmp_path,
+                                                      monkeypatch):
+    """data_stats(store) must come from manifest metadata — the old path
+    called to_host_csr(), materializing the whole store per admission."""
+    from repro.data.store import DatasetStore
+    X, y = problem
+    store = DatasetStore.from_arrays(str(tmp_path / "ds"), X, y,
+                                     rows_per_shard=40)
+    expect = planner.data_stats(X)
+    planner._STORE_STATS.clear()
+    monkeypatch.setattr(
+        DatasetStore, "to_host_csr",
+        lambda self: (_ for _ in ()).throw(
+            AssertionError("data_stats materialized the store")))
+    got = planner.data_stats(store)
+    assert (got.n, got.d, got.nnz, got.kc, got.kr) == \
+        (expect.n, expect.d, expect.nnz, expect.kc, expect.kr)
+    # cached per content hash
+    assert planner.data_stats(store) is got
+
+
+def test_store_stats_legacy_manifest_fallback(problem, tmp_path):
+    """Stores written before the row/col max manifest keys still derive the
+    same stats (col max off df counts, row max off mmap'd indptrs)."""
+    from repro.data.store import DatasetStore
+    X, y = problem
+    store = DatasetStore.from_arrays(str(tmp_path / "ds"), X, y,
+                                     rows_per_shard=40)
+    fresh = planner.store_stats(store)
+    planner._STORE_STATS.clear()
+    store.manifest.pop("row_nnz_max")
+    store.manifest.pop("col_nnz_max")
+    legacy = planner.store_stats(store)
+    planner._STORE_STATS.clear()
+    assert legacy == fresh == planner.data_stats(X)
+
+
+def test_fit_service_stats_come_from_source(problem, tmp_path, monkeypatch):
+    """FitService admissions derive planner stats from the resolved source
+    (O(1) for stores), not by re-walking the coerced padded pair."""
+    from repro.data.store import DatasetStore
+    from repro.serve.fit_service import FitService
+    X, y = problem
+    store = DatasetStore.from_arrays(str(tmp_path / "ds"), X, y,
+                                     rows_per_shard=40)
+    svc = FitService(store)
+    planner._STORE_STATS.clear()
+    monkeypatch.setattr(
+        DatasetStore, "to_host_csr",
+        lambda self: (_ for _ in ()).throw(
+            AssertionError("admission materialized the store")))
+    assert svc._planned_backend(FWConfig(backend="auto")) in (
+        "dense", "jax_sparse")
