@@ -136,6 +136,10 @@ def main(argv=None) -> int:
     ap.add_argument("--update", action="store_true",
                     help="copy fresh JSONs over the baselines instead of "
                          "gating (then commit the diff)")
+    ap.add_argument("--report", action="store_true",
+                    help="also render the run's telemetry artifact "
+                         "(BENCH_telemetry.jsonl in --fresh-dir) next to "
+                         "the gate verdict")
     args = ap.parse_args(argv)
 
     fresh_dir = pathlib.Path(args.fresh_dir)
@@ -154,6 +158,16 @@ def main(argv=None) -> int:
                   "nothing updated; run `python -m benchmarks.run` first")
             return 2
         return 0
+
+    if args.report:
+        tel = fresh_dir / "BENCH_telemetry.jsonl"
+        if tel.exists():
+            from repro.obs.report import render_path
+            print(render_path(str(tel)))
+            print()
+        else:
+            print(f"[check] no telemetry artifact at {tel} — run "
+                  "`python -m benchmarks.run` to produce one")
 
     all_errors, checked = [], 0
     for name in SPEC:

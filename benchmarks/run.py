@@ -13,7 +13,10 @@
 
 ``python -m benchmarks.run [--fast] [--only NAME] [--backend B]`` — results
 to BENCH_<name>.json per bench + aggregate bench_results.json + stdout
-summary.  ``--backend`` retargets the Alg-2 side of the registry-aware
+summary.  The whole run executes under a ``repro.obs`` telemetry session:
+solver spans, planner drift and cache counters land in
+``BENCH_telemetry.jsonl`` next to the result JSONs (render with
+``python -m repro.obs.report BENCH_telemetry.jsonl``).  ``--backend`` retargets the Alg-2 side of the registry-aware
 benches (fig1 convergence, table4 accuracy) onto any engine from
 ``repro.core.solvers.available_backends()``; the FLOP/heap-audit benches are
 pinned to the host engine (see docs/BENCHMARKS.md).
@@ -89,24 +92,32 @@ def main():
             steps=100 if fast else 150),
         "roofline": lambda: roofline_table.run(args.dryrun_json),
     }
+    from repro import obs
     results, failures = {}, []
-    for name, fn in suite.items():
-        if args.only and args.only not in name:
-            continue
-        t0 = time.time()
-        print(f"[bench] {name} ...", flush=True)
-        try:
-            results[name] = fn()
-            results[name]["bench_seconds"] = round(time.time() - t0, 1)
-            with open(f"BENCH_{name}.json", "w") as f:
-                json.dump(results[name], f, indent=1)
-            print(f"[bench] {name} done in {results[name]['bench_seconds']}s "
-                  f"→ BENCH_{name}.json", flush=True)
-        except Exception as e:  # noqa: BLE001
-            failures.append({"bench": name, "error": str(e)})
-            traceback.print_exc()
+    with obs.session(jsonl_path="BENCH_telemetry.jsonl",
+                     meta={"harness": "benchmarks.run",
+                           "fast": fast, "only": args.only or ""}):
+        for name, fn in suite.items():
+            if args.only and args.only not in name:
+                continue
+            t0 = time.time()
+            print(f"[bench] {name} ...", flush=True)
+            try:
+                with obs.span("bench", bench=name):
+                    results[name] = fn()
+                results[name]["bench_seconds"] = round(time.time() - t0, 1)
+                with open(f"BENCH_{name}.json", "w") as f:
+                    json.dump(results[name], f, indent=1)
+                print(f"[bench] {name} done in "
+                      f"{results[name]['bench_seconds']}s "
+                      f"→ BENCH_{name}.json", flush=True)
+            except Exception as e:  # noqa: BLE001
+                failures.append({"bench": name, "error": str(e)})
+                traceback.print_exc()
     with open(args.out, "w") as f:
         json.dump({"results": results, "failures": failures}, f, indent=1)
+    print("telemetry artifact → BENCH_telemetry.jsonl "
+          "(render: python -m repro.obs.report BENCH_telemetry.jsonl)")
 
     # ---- summary ---------------------------------------------------------
     print("\n=== benchmark summary ===")

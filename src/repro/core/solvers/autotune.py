@@ -37,6 +37,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.solvers.config import FWConfig
 
 TUNE_VERSION = 1
@@ -251,14 +252,20 @@ def tune_jax_sparse(pcsr, pcsc, y, *, loss: str = "logistic",
                          private=True, **kw))
 
     default_ms = per_iter(pcsc)
+    obs.event("autotune.candidate", backend="jax_sparse", loss=loss,
+              candidate="flat", per_iter_ms=default_ms, parity=True)
     best_width, best_ms = None, default_ms
     for width in candidate_widths(pcsc):
         cand = tiered_from_padded(pcsc, width)
         if not probe_parity(pcsr, pcsc, cand, y32, loss=loss,
                             interpret=interpret, steps=probe_steps, lam=lam,
                             setup=setup):
+            obs.event("autotune.candidate", backend="jax_sparse", loss=loss,
+                      candidate=f"tiered-{width}", parity=False)
             continue                      # exactness gate: never eligible
         ms = per_iter(cand)
+        obs.event("autotune.candidate", backend="jax_sparse", loss=loss,
+                  candidate=f"tiered-{width}", per_iter_ms=ms, parity=True)
         if ms < best_ms:
             best_width, best_ms = width, ms
     winner = (tiered_from_padded(pcsc, best_width) if best_width is not None
@@ -267,6 +274,10 @@ def tune_jax_sparse(pcsr, pcsc, y, *, loss: str = "logistic",
                          private=True, **kw) if tune_chunk else None)
     stats = data_stats((pcsr, pcsc))
     _feed_planner("jax_sparse", stats, best_ms, loss=loss, platform=plat)
+    obs.event("autotune.winner", backend="jax_sparse", loss=loss,
+              ell_width=best_width, chunk_steps=chunk,
+              per_iter_ms=best_ms,
+              speedup=default_ms / max(best_ms, 1e-12))
     return TuningRecord(
         content_hash=content_hash, platform=plat, backend="jax_sparse",
         loss=loss, ell_width=best_width, chunk_steps=chunk, mesh=None,
@@ -319,7 +330,14 @@ def tune_jax_shard(src, y, *, loss: str = "logistic", steps: int = 24,
             jax.block_until_ready(out[0])
 
         timings[(a, b)] = _time_per_iter_ms(run, steps)
+        obs.event("autotune.candidate", backend="jax_shard", loss=loss,
+                  candidate=f"{a}x{b}", per_iter_ms=timings[(a, b)],
+                  parity=True)
     best = min(timings, key=timings.get)
+    obs.event("autotune.winner", backend="jax_shard", loss=loss,
+              candidate=f"{best[0]}x{best[1]}",
+              per_iter_ms=timings[best],
+              speedup=timings[(1, 1)] / max(timings[best], 1e-12))
     default_ms = timings[(1, 1)]
     stats = data_stats(src.csr) if src.csr is not None else \
         data_stats(src.store)
@@ -356,6 +374,7 @@ def autotune(data, y=None, *, backend: str = "jax_sparse",
     if store is not None and not force:
         rec = store.autotune_load(backend, loss, plat)
         if rec is not None:
+            obs.count("autotune.replayed", backend=backend)
             return rec
     if backend == "jax_sparse":
         prepared = as_padded(data)

@@ -60,6 +60,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.solvers.config import (STOP_GAP_TOL, STOP_MAX_SECONDS,
                                        STOP_MAX_STEPS, FWConfig, FWResult,
                                        check_gap_certificate)
@@ -312,6 +313,9 @@ def _solve_jax_sparse_group_cohort(
             coords=jnp.asarray(coords_buf[cfg_id]),
             losses=jnp.zeros((steps,), w.dtype), stop_step=stop,
             stop_reason=reason)
+        obs.event("cohort.retire", config=cfg_id, stop_step=stop,
+                  stop_reason=reason, survivors=len(active) - 1)
+        obs.count("cohort.retired", reason=reason)
 
     widths = cohort_widths(n_cfg)        # pow-2 bucket schedule, full → 1
     while active and t0 < steps:
@@ -331,8 +335,11 @@ def _solve_jax_sparse_group_cohort(
             steps=c, loss=c0.loss, private=private, fused=fused,
             interpret=c0.interpret)
         jax.block_until_ready(g)
+        dt = time.perf_counter() - tw
         record_cost(c0.backend, "vmap", platform, stats,
-                    (time.perf_counter() - tw) / (c * width), loss=c0.loss)
+                    dt / (c * width), loss=c0.loss)
+        obs.observe("cohort.chunk.seconds", dt)
+        obs.count("cohort.chunk.steps", c * len(active))
         cur = jax.tree_util.tree_map(lambda a: a[: len(active)], padded)
         g_np, j_np = np.asarray(g), np.asarray(j)
         for lane, cfg_id in enumerate(active):
@@ -401,10 +408,13 @@ def _run_jax_sparse_group(data, y, member_cfgs: Sequence[FWConfig],
                           loss=member_cfgs[0].loss,
                           backend=member_cfgs[0].backend)
     if mode == "sequential":
-        return _solve_jax_sparse_group_sequential(data, y, member_cfgs)
+        with obs.span("group.sequential", size=len(member_cfgs)):
+            return _solve_jax_sparse_group_sequential(data, y, member_cfgs)
     if early:
-        return _solve_jax_sparse_group_cohort(data, y, member_cfgs)
-    return _solve_jax_sparse_group(data, y, member_cfgs)
+        with obs.span("group.cohort", size=len(member_cfgs)):
+            return _solve_jax_sparse_group_cohort(data, y, member_cfgs)
+    with obs.span("group.vmap", size=len(member_cfgs)):
+        return _solve_jax_sparse_group(data, y, member_cfgs)
 
 
 def solve_many(X, y=None, configs: Sequence[FWConfig] = (), *,
@@ -433,42 +443,50 @@ def solve_many(X, y=None, configs: Sequence[FWConfig] = (), *,
     configs = list(configs)
     if not configs:
         return []
-    plan = _as_plan(plan)
-    X, y = resolve_data(X, y)
-    resolved = []
-    auto_stats = None                 # derived once, only if any config asks
-    for c in configs:
-        if c.backend == "auto":
-            from repro.core.solvers.planner import choose_backend, data_stats
-            if auto_stats is None:
-                auto_stats = data_stats(X)
-            c = dataclasses.replace(c, backend=choose_backend(auto_stats, c))
-        check_gap_certificate(c)
-        backend = get_backend(c.backend)
-        resolved.append((backend, resolve_queue(backend, c)))
+    with obs.span("solve_many", configs=len(configs)) as sp:
+        plan = _as_plan(plan)
+        X, y = resolve_data(X, y)
+        resolved = []
+        auto_stats = None             # derived once, only if any config asks
+        for c in configs:
+            if c.backend == "auto":
+                from repro.core.solvers.planner import (choose_backend,
+                                                        data_stats)
+                if auto_stats is None:
+                    auto_stats = data_stats(X)
+                c = dataclasses.replace(c,
+                                        backend=choose_backend(auto_stats, c))
+            check_gap_certificate(c)
+            backend = get_backend(c.backend)
+            resolved.append((backend, resolve_queue(backend, c)))
 
-    if prepared is None:
-        prepared = {}                 # data layout -> coerced X (once each)
-    for backend, _ in resolved:
-        if backend.data_format not in prepared:
-            prepared[backend.data_format] = backend.prepare(X)
+        if prepared is None:
+            prepared = {}             # data layout -> coerced X (once each)
+        for backend, _ in resolved:
+            if backend.data_format not in prepared:
+                with obs.span("solve_many.coerce",
+                              layout=backend.data_format):
+                    prepared[backend.data_format] = backend.prepare(X)
 
-    groups: Dict[Tuple, List[int]] = {}
-    for i, (_, cfg) in enumerate(resolved):
-        groups.setdefault(group_key(cfg), []).append(i)
+        groups: Dict[Tuple, List[int]] = {}
+        for i, (_, cfg) in enumerate(resolved):
+            groups.setdefault(group_key(cfg), []).append(i)
+        sp.set(groups=len(groups))
 
-    results: List[FWResult | None] = [None] * len(configs)
-    for members in groups.values():
-        backend, _ = resolved[members[0]]
-        data = prepared[backend.data_format]
-        member_cfgs = [resolved[i][1] for i in members]
-        if backend.name == "jax_sparse" and len(members) > 1:
-            out = _run_jax_sparse_group(data, y, member_cfgs, plan)
-        elif backend.name == "jax_shard" and len(members) > 1:
-            from repro.core.solvers.jax_shard import solve_shard_group
-            out = solve_shard_group(data, y, member_cfgs)
-        else:
-            out = [backend.fn(data, y, cfg) for cfg in member_cfgs]
-        for i, res in zip(members, out):
-            results[i] = res
+        results: List[FWResult | None] = [None] * len(configs)
+        for members in groups.values():
+            backend, _ = resolved[members[0]]
+            data = prepared[backend.data_format]
+            member_cfgs = [resolved[i][1] for i in members]
+            with obs.span("solve_many.group", backend=backend.name,
+                          size=len(members)):
+                if backend.name == "jax_sparse" and len(members) > 1:
+                    out = _run_jax_sparse_group(data, y, member_cfgs, plan)
+                elif backend.name == "jax_shard" and len(members) > 1:
+                    from repro.core.solvers.jax_shard import solve_shard_group
+                    out = solve_shard_group(data, y, member_cfgs)
+                else:
+                    out = [backend.fn(data, y, cfg) for cfg in member_cfgs]
+            for i, res in zip(members, out):
+                results[i] = res
     return results  # type: ignore[return-value]

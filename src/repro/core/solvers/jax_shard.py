@@ -31,6 +31,7 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.dp.accountant import em_log_weight_scale
 from repro.core.solvers.config import FWConfig, FWResult
 from repro.distributed.fw_shard import (DistFW, build_dist_fw,
@@ -165,13 +166,15 @@ def shard_fw(src: ShardSource, y, config: FWConfig) -> FWResult:
     t0 = time.perf_counter()
     with mesh:
         ypad = _pad_labels(y, blocks.padded[0])
-        setup = prog.setup(blocks, ypad)
-        w, gaps, coords, stop_step = prog.scan(
-            blocks, ypad, *setup, jnp.float32(config.lam),
-            jnp.float32(shard_em_scale(config, n)),
-            jnp.float32(config.gap_tol),
-            jax.random.PRNGKey(config.seed))
-    jax.block_until_ready(w)
+        with obs.span("shard.setup", mesh=f"{a}x{b}"):
+            setup = prog.setup(blocks, ypad)
+        with obs.span("shard.scan", mesh=f"{a}x{b}", steps=config.steps):
+            w, gaps, coords, stop_step = prog.scan(
+                blocks, ypad, *setup, jnp.float32(config.lam),
+                jnp.float32(shard_em_scale(config, n)),
+                jnp.float32(config.gap_tol),
+                jax.random.PRNGKey(config.seed))
+            jax.block_until_ready(w)
     _record_shard_cost(src, "sequential",
                        (time.perf_counter() - t0) / max(config.steps, 1),
                        loss=config.loss)
@@ -199,7 +202,8 @@ def solve_shard_group(src: ShardSource, y, configs) -> list:
     t0 = time.perf_counter()
     with mesh:
         ypad = _pad_labels(y, blocks.padded[0])
-        setup = prog.setup(blocks, ypad)
+        with obs.span("shard.setup", mesh=f"{a}x{b}", size=len(configs)):
+            setup = prog.setup(blocks, ypad)
         if a * b == 1:
             vscan = vmapped_scan(blocks, mesh, steps=c0.steps, loss=c0.loss,
                                  selection=c0.queue, early_stop=early)

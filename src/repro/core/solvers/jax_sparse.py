@@ -352,18 +352,21 @@ def jax_sparse_fw(
     em_scale = em_scale_for(config, n)
     y_scan = None if config.loss_fn().separable else jnp.asarray(y)
 
+    from repro import obs
     if setup is None:
-        setup = fw_setup_jit(pcsr, y, loss=config.loss,
-                             interpret=config.interpret)
+        with obs.span("solve.setup", loss=config.loss):
+            setup = fw_setup_jit(pcsr, y, loss=config.loss,
+                                 interpret=config.interpret)
     if config.early_stopping:
         return _chunked_fw(pcsr, pcsc, setup, config, em_scale, private,
                            fused, y=y_scan)
     vbar0, qbar0, alpha0 = setup
-    w, gaps, coords, stop_step = fw_scan_jit(
-        pcsr, pcsc, vbar0, qbar0, alpha0,
-        config.lam, em_scale, jax.random.PRNGKey(config.seed), 0.0, y_scan,
-        steps=config.steps, loss=config.loss, private=private, fused=fused,
-        interpret=config.interpret)
+    with obs.span("solve.scan", steps=config.steps, private=private):
+        w, gaps, coords, stop_step = fw_scan_jit(
+            pcsr, pcsc, vbar0, qbar0, alpha0,
+            config.lam, em_scale, jax.random.PRNGKey(config.seed), 0.0,
+            y_scan, steps=config.steps, loss=config.loss, private=private,
+            fused=fused, interpret=config.interpret)
     return FWResult(w=w, gaps=gaps, coords=coords,
                     losses=jnp.zeros_like(gaps), stop_step=config.steps,
                     stop_reason=STOP_MAX_STEPS)

@@ -38,6 +38,7 @@ from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.solvers.config import FWConfig
 from repro.roofline.analysis import roofline_terms
 
@@ -229,6 +230,7 @@ def record_cost(backend: str, mode: str, platform: str, stats: ProblemStats,
     prev = _COSTBOOK.get(key)
     _COSTBOOK[key] = (seconds_per_step_lane if prev is None
                       else 0.7 * prev + 0.3 * seconds_per_step_lane)
+    _gauge_drift(backend, mode, platform, stats, loss, seconds_per_step_lane)
 
 
 def record_measured(backend: str, mode: str, platform: str,
@@ -244,6 +246,23 @@ def record_measured(backend: str, mode: str, platform: str,
     key = _cost_key(backend, mode, platform, stats, loss)
     _WARMED.add(key)
     _COSTBOOK[key] = float(seconds_per_step_lane)
+    _gauge_drift(backend, mode, platform, stats, loss, seconds_per_step_lane)
+
+
+def _gauge_drift(backend: str, mode: str, platform: str, stats: ProblemStats,
+                 loss: str, seconds_per_step_lane: float) -> None:
+    """Predicted-vs-measured gauge: measured seconds/step over the roofline
+    model's prediction (> 1 means the model is optimistic).  Only evaluated
+    when a collector is active — the model itself costs a few hundred flops
+    we refuse to pay on the disabled path."""
+    if not obs.enabled():
+        return
+    model = step_time_model(stats, backend, platform)
+    if model > 0.0:
+        obs.gauge("planner.drift", seconds_per_step_lane / model,
+                  backend=backend, mode=mode, loss=loss)
+    obs.observe("planner.step_seconds", seconds_per_step_lane,
+                backend=backend, mode=mode)
 
 
 def measured_cost(backend: str, mode: str, platform: str,

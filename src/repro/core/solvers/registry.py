@@ -279,16 +279,24 @@ def solve(X, y=None, config: Optional[FWConfig] = None,
     dense scan, the Alg-2 kernel pipeline, and (when ``mesh`` names a real
     grid) the sharded engine.
     """
+    from repro import obs
     config = config or FWConfig()
     if overrides:
         config = dataclasses.replace(config, **overrides)
-    check_gap_certificate(config)   # non-smooth loss + gap_tol, unknown loss
-    X, y = resolve_data(X, y)
-    if config.backend == "auto":
-        from repro.core.solvers.planner import choose_backend, data_stats
-        config = dataclasses.replace(
-            config, backend=choose_backend(data_stats(X), config))
-    backend = get_backend(config.backend)
-    config = resolve_queue(backend, config)
-    data = _COERCE[backend.data_format](X)
-    return backend.fn(data, y, config)
+    with obs.span("solve", loss=config.loss, steps=config.steps) as sp:
+        check_gap_certificate(config)   # non-smooth loss + gap_tol/unknown
+        X, y = resolve_data(X, y)
+        if config.backend == "auto":
+            with obs.span("solve.plan"):
+                from repro.core.solvers.planner import (choose_backend,
+                                                        data_stats)
+                config = dataclasses.replace(
+                    config, backend=choose_backend(data_stats(X), config))
+        backend = get_backend(config.backend)
+        config = resolve_queue(backend, config)
+        sp.set(backend=backend.name, queue=config.queue)
+        obs.count("solve.calls", backend=backend.name)
+        with obs.span("solve.coerce", layout=backend.data_format):
+            data = _COERCE[backend.data_format](X)
+        with obs.span("solve.run", backend=backend.name):
+            return backend.fn(data, y, config)

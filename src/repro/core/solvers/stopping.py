@@ -49,25 +49,47 @@ def drive_chunks(
     later chunk re-enters, which is a one-off cost of the process, not of
     this run — charging it would make any budget shorter than the compile
     stop every run after one chunk regardless of optimization progress.
+
+    Per-chunk wall times, the first-chunk (compile-dominated) cost, and the
+    final stop verdict are reported to the obs layer when a collector is
+    active — host-side reads of already-materialized state, never inside
+    the compiled chunk itself.
     """
+    from repro import obs
     outs: List[Tuple[jnp.ndarray, ...]] = []
     t0, stop_reason = 0, STOP_MAX_STEPS
     t_start: Optional[float] = None
+    n_chunks = 0
+    t_prev = time.perf_counter()
     while t0 < steps:
         c = min(chunk, steps - t0)
         carry, out = advance(carry, t0, c)
         outs.append(out if isinstance(out, tuple) else (out,))
         t0 += c
-        if bool(done_of(carry)):            # blocks: the chunk has run
+        n_chunks += 1
+        done = bool(done_of(carry))         # blocks: the chunk has run
+        now = time.perf_counter()
+        if obs.enabled():
+            if n_chunks == 1:
+                # compile-dominated cold chunk: tracked as its own gauge so
+                # it never skews the steady-state chunk histogram
+                obs.gauge("chunk.first_seconds", now - t_prev)
+            else:
+                obs.observe("chunk.seconds", now - t_prev)
+            obs.count("chunk.steps", c)
+        t_prev = now
+        if done:
             stop_reason = STOP_GAP_TOL
             break
-        now = time.perf_counter()
         if t_start is None:                 # cold chunk: compile excluded
             t_start = now
         elif max_seconds is not None and now - t_start >= max_seconds:
             stop_reason = STOP_MAX_SECONDS
             break
     stop_step = (int(stop_at_of(carry)) if bool(done_of(carry)) else t0)
+    obs.event("chunks.stop", stop_step=stop_step, stop_reason=stop_reason,
+              chunks=n_chunks, steps_requested=steps)
+    obs.count("chunks.stopped", reason=stop_reason)
     return carry, outs, stop_step, stop_reason
 
 

@@ -44,8 +44,13 @@ from typing import Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.sparse.formats import HostCSR
 from repro.data.sparse_io import LibsvmChunk, iter_any
+
+
+def _cache_count(cache: str, hit: bool) -> None:
+    obs.count("store.cache", cache=cache, outcome="hit" if hit else "miss")
 
 FORMAT_VERSION = 1
 MANIFEST = "manifest.json"
@@ -460,11 +465,14 @@ class DatasetStore:
         """The padded ELL pair straight off mmap, or None on cache miss."""
         meta_path = self._padded_meta_path()
         if not os.path.exists(meta_path):
+            _cache_count("padded", hit=False)
             return None
         with open(meta_path) as f:
             meta = json.load(f)
         if meta.get("content_hash") != self.content_hash:
+            _cache_count("padded", hit=False)
             return None
+        _cache_count("padded", hit=True)
         import jax.numpy as jnp
 
         from repro.core.sparse.formats import PaddedCSC, PaddedCSR
@@ -501,11 +509,14 @@ class DatasetStore:
         """
         meta_path = self._blocks_meta_path(a, b)
         if not os.path.exists(meta_path):
+            _cache_count("blocks", hit=False)
             return None
         with open(meta_path) as f:
             meta = json.load(f)
         if meta.get("content_hash") != self.content_hash:
+            _cache_count("blocks", hit=False)
             return None
+        _cache_count("blocks", hit=True)
         import jax.numpy as jnp
 
         from repro.distributed.block_sparse import BlockSparse
@@ -537,12 +548,15 @@ class DatasetStore:
         version, so stale search formats never replay)."""
         path = self._autotune_path(backend, loss, platform)
         if not os.path.exists(path):
+            _cache_count("autotune", hit=False)
             return None
         from repro.core.solvers.autotune import TuningRecord
         with open(path) as f:
             rec = TuningRecord.from_json(json.load(f))
         if rec is None or rec.content_hash != self.content_hash:
+            _cache_count("autotune", hit=False)
             return None
+        _cache_count("autotune", hit=True)
         return rec
 
     def autotune_save(self, record) -> None:
@@ -559,11 +573,14 @@ class DatasetStore:
     def _setup_load(self, loss: str, interpret: bool):
         path = self._setup_cache_path(loss, interpret)
         if not os.path.exists(path):
+            _cache_count("setup", hit=False)
             return None
         import jax.numpy as jnp
         with np.load(path) as z:
             if str(z["content_hash"]) != self.content_hash:
+                _cache_count("setup", hit=False)
                 return None
+            _cache_count("setup", hit=True)
             return (jnp.asarray(z["vbar0"]), jnp.asarray(z["qbar0"]),
                     jnp.asarray(z["alpha0"]))
 

@@ -49,11 +49,14 @@ import math
 import time
 from typing import Dict, List, Mapping, Optional
 
+from repro import obs
 from repro.core.dp.accountant import PrivacyAccountant, per_step_epsilon
 from repro.core.solvers.batched import group_key, solve_many
 from repro.core.solvers.config import (FWConfig, FWResult,
                                        check_gap_certificate)
 from repro.core.solvers.registry import get_backend, resolve_queue
+from repro.obs.ledger import AuditLedger
+from repro.obs.metrics import quantile
 
 # Native queue/selection names that consume privacy budget (the DP
 # exponential mechanism and report-noisy-max realizations, per backend).
@@ -80,6 +83,10 @@ class FitRequest:
 @dataclasses.dataclass(frozen=True)
 class FitServiceConfig:
     slots: int = 8                    # max configs per compiled batch
+    # ε-spend audit trail (DESIGN.md §12): None keeps the ledger in-memory
+    # only; a path appends every charge/refusal as JSONL (and a restarted
+    # service continues the same file)
+    ledger_path: Optional[str] = None
 
 
 class FitService:
@@ -114,28 +121,41 @@ class FitService:
         self.batches_run = 0
         self.batch_sizes: List[int] = []
         self.serving_s = 0.0              # wall-clock actually spent draining
+        # the ε-spend audit trail: every accountant's attach state is the
+        # base of its replay chain (pre-spent budgets audit cleanly)
+        self.ledger = AuditLedger(config.ledger_path)
+        for tenant, acct in sorted(self.accountants.items()):
+            self.ledger.open_tenant(tenant, acct)
 
     # ------------------------------------------------------------------ public
     def submit(self, req: FitRequest) -> None:
         req.submitted_at = time.time()
         req.status = "queued"
         self.queue.append(req)
+        obs.count("service.submitted", tenant=req.tenant)
+        obs.gauge("service.queue_depth", len(self.queue))
 
     def run(self) -> List[FitRequest]:
         """Drain the queue; returns every request (done/rejected/failed)."""
-        admitted = [r for r in self.queue if self._admit(r)]
-        rejected = [r for r in self.queue if r.status == "rejected"]
-        self.queue = []
-        for batch in self._pack(admitted):
-            self._drain(batch)
+        with obs.span("service.run", queued=len(self.queue)):
+            admitted = [r for r in self.queue if self._admit(r)]
+            rejected = [r for r in self.queue if r.status == "rejected"]
+            self.queue = []
+            obs.gauge("service.queue_depth", 0)
+            for batch in self._pack(admitted):
+                self._drain(batch)
         done = sorted(admitted + rejected, key=lambda r: r.uid)
+        for r in done:
+            obs.count("service.finished", status=r.status)
+            if r.status == "done":
+                obs.observe("service.latency_s", r.latency_s)
         self.finished.extend(done)
         return done
 
     def stats(self) -> dict:
         """Per-request latency + throughput + per-tenant accountant state."""
         done = [r for r in self.finished if r.status == "done"]
-        lat = sorted(r.latency_s for r in done)
+        lat = [r.latency_s for r in done]
         return {
             "requests": len(self.finished),
             "done": len(done),
@@ -143,9 +163,14 @@ class FitService:
             "failed": sum(r.status == "failed" for r in self.finished),
             "batches": self.batches_run,
             "batch_sizes": list(self.batch_sizes),
+            "queue_depth": len(self.queue),
+            # interpolated order statistics (shared obs helper) — the old
+            # lat[len(lat)//2] midpoint was not a p50 on even-length samples
             "latency_s": {
-                "p50": lat[len(lat) // 2] if lat else 0.0,
-                "max": lat[-1] if lat else 0.0,
+                "p50": quantile(lat, 0.50),
+                "p90": quantile(lat, 0.90),
+                "p99": quantile(lat, 0.99),
+                "max": max(lat) if lat else 0.0,
             },
             # over drain time only — idle wall-clock between run() calls is
             # not serving time
@@ -157,6 +182,16 @@ class FitService:
                     "spent_epsilon": a.spent_epsilon()}
                 for t, a in self.accountants.items()},
         }
+
+    def verify_ledger(self) -> Dict[str, dict]:
+        """Audit the ε-spend ledger against the live accountants (exact —
+        raises on any drift; see ``AuditLedger.verify``)."""
+        return self.ledger.verify(self.accountants)
+
+    def checkpoint_accountants(self, directory: str) -> str:
+        """Snapshot accountant state via ``repro.checkpoint`` so a restart
+        resumes from audited spend (pair with ``config.ledger_path``)."""
+        return self.ledger.checkpoint(directory, self.accountants)
 
     # --------------------------------------------------------------- internals
     def _planned_backend(self, cfg: FWConfig) -> str:
@@ -214,10 +249,23 @@ class FitService:
             try:
                 # bad (ε, δ, T) raise here, BEFORE the budget is touched —
                 # a config the solver would choke on must never be charged
-                acct.spend(self._charged_steps(acct, resolved))
+                steps = self._charged_steps(acct, resolved)
+                before = AuditLedger.state_of(acct)
+                acct.spend(steps)
             except (RuntimeError, ValueError) as e:
                 return self._reject(req, str(e))
+            self.ledger.charge(
+                tenant=req.tenant, uid=req.uid, steps=steps, before=before,
+                acct=acct, request=self._request_facts(resolved))
+        obs.count("service.admitted", tenant=req.tenant)
         return True
+
+    @staticmethod
+    def _request_facts(cfg: FWConfig) -> dict:
+        """The request facts a later audit needs to interpret a charge."""
+        return {"epsilon": cfg.epsilon, "delta": cfg.delta,
+                "steps": cfg.steps, "queue": cfg.queue,
+                "backend": cfg.backend, "loss": cfg.loss}
 
     @staticmethod
     def _charged_steps(acct: PrivacyAccountant, cfg: FWConfig) -> int:
@@ -238,10 +286,15 @@ class FitService:
         ratio = eps_req_step / acct.per_step
         return max(1, math.ceil(cfg.steps * ratio * ratio - 1e-9))
 
-    @staticmethod
-    def _reject(req: FitRequest, reason: str) -> bool:
+    def _reject(self, req: FitRequest, reason: str) -> bool:
         req.status, req.reason = "rejected", reason
         req.finished_at = time.time()
+        # every refusal is a ledger fact: charge-free, with the tenant's
+        # (unchanged) accountant state attested when one exists
+        self.ledger.refusal(tenant=req.tenant, uid=req.uid, reason=reason,
+                            acct=self.accountants.get(req.tenant),
+                            request=self._request_facts(req.config))
+        obs.count("service.rejected", tenant=req.tenant)
         return False
 
     def _pack(self, admitted: List[FitRequest]) -> List[List[FitRequest]]:
@@ -258,14 +311,17 @@ class FitService:
     def _drain(self, batch: List[FitRequest]) -> None:
         t0 = time.time()
         try:
-            results = solve_many(self._source, self.y,
-                                 [r.config for r in batch],
-                                 prepared=self._coerced)
+            with obs.span("service.batch", size=len(batch),
+                          backend=batch[0].config.backend):
+                results = solve_many(self._source, self.y,
+                                     [r.config for r in batch],
+                                     prepared=self._coerced)
         except Exception as e:  # noqa: BLE001 — one bad batch must not
             # strand the rest of the queue.  The charged budget is NOT
             # refunded: admission cannot prove how far the mechanism got
             # before failing, and DP accounting must stay conservative.
             now = time.time()
+            obs.count("service.batch_failures")
             for req in batch:
                 req.status = "failed"
                 req.reason = f"solver error: {e}"

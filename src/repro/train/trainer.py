@@ -20,6 +20,7 @@ from typing import Any, Callable, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.train.optimizer import Optimizer, clip_by_global_norm, get_optimizer, make_schedule
 
 Pytree = Any
@@ -129,22 +130,37 @@ def fit(state: TrainState, step_fn: Callable, batches, *,
         steps: int, checkpointer=None, ckpt_every: int = 200,
         log_every: int = 10, watchdog_s: float = 600.0,
         log: Callable[[str], None] = print) -> Tuple[TrainState, list]:
-    """Host training loop with checkpoint rotation and straggler watchdog."""
+    """Host training loop with checkpoint rotation and straggler watchdog.
+
+    ``log=`` is the text sink (a callable, ``print`` by default — the loop
+    itself never prints); step timings, straggler detections and skipped
+    steps also flow to ``repro.obs`` when a collector is active, so a run
+    artifact carries the loop's telemetry without parsing log lines.
+    """
     jit_step = jax.jit(step_fn, donate_argnums=(0,))
     history = []
-    for i in range(steps):
-        t0 = time.time()
-        batch = next(batches)
-        state, metrics = jit_step(state, batch)
-        dt = time.time() - t0
-        if dt > watchdog_s:
-            log(f"[watchdog] step {int(state.step)} took {dt:.1f}s (> {watchdog_s}s) — "
-                "straggler detected; continuing")
-        if i % log_every == 0 or i == steps - 1:
-            m = {k: float(v) for k, v in metrics.items()}
-            history.append({"step": int(state.step), **m, "sec": dt})
-            log(f"step {int(state.step):>6d}  loss={m['loss']:.4f}  "
-                f"gnorm={m['grad_norm']:.3f}  lr={m['lr']:.2e}  {dt*1e3:.0f}ms")
-        if checkpointer is not None and int(state.step) % ckpt_every == 0:
-            checkpointer.save(state)
+    with obs.span("train.fit", steps=steps):
+        for i in range(steps):
+            t0 = time.time()
+            batch = next(batches)
+            state, metrics = jit_step(state, batch)
+            dt = time.time() - t0
+            obs.observe("train.step_seconds", dt)
+            if dt > watchdog_s:
+                obs.event("train.straggler", step=int(state.step), sec=dt,
+                          watchdog_s=watchdog_s)
+                obs.count("train.stragglers")
+                log(f"[watchdog] step {int(state.step)} took {dt:.1f}s "
+                    f"(> {watchdog_s}s) — straggler detected; continuing")
+            if i % log_every == 0 or i == steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                history.append({"step": int(state.step), **m, "sec": dt})
+                if m.get("skipped"):
+                    obs.count("train.skipped_steps")
+                log(f"step {int(state.step):>6d}  loss={m['loss']:.4f}  "
+                    f"gnorm={m['grad_norm']:.3f}  lr={m['lr']:.2e}  "
+                    f"{dt*1e3:.0f}ms")
+            if checkpointer is not None and int(state.step) % ckpt_every == 0:
+                with obs.span("train.checkpoint", step=int(state.step)):
+                    checkpointer.save(state)
     return state, history
