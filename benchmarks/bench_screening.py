@@ -1,0 +1,129 @@
+"""Screening bench — §13 DP iterative screening vs the plain chunked solve.
+
+Two arms of the same private ``jax_sparse`` fit at **equal total ε** on a
+held-out split of each dataset twin:
+
+  * ``plain``    — the §9 chunked driver, full padded D every chunk;
+  * ``screened`` — ``screen_every`` fires the privatized screening query at
+    chunk boundaries, repacking the padded pair to the survivors, so later
+    chunks pay O(D_surviving).
+
+Reported per dataset: end-to-end wall time of each arm (steady-state — both
+arms run twice and time the second pass, so every chunk shape the screened
+schedule visits hits the XLA compile cache; the DP screening noise is
+seeded per (config.seed, round), which makes the survivor sets — and hence
+the compiled shapes — identical across passes), the speedup ratio, the
+survivor count, and the **utility audit**: held-out accuracy of both arms
+at the same total ε, with ``pass_utility`` asserting the screened fit gives
+up at most ``UTILITY_TOL`` accuracy.  ``pass_coords`` pins the §13 result
+contract — original-space coords, supp(w) inside the selected set.
+
+The twins are ~300× smaller than the paper's datasets (benchmarks/common),
+so ε is generous by paper standards: per-coordinate EM noise scales like
+N·ε, and at twin N a paper-scale ε would drown the selection signal both
+arms share.  The *comparison* is ε-fair — both arms spend the same total
+budget (docs/BENCHMARKS.md).
+
+Output: BENCH_screening.json (``run.py --only screening``; gated by
+``check.py`` on ``screen_speedup`` and ``pass_utility``).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.sparse.formats import HostCSR
+
+UTILITY_TOL = 0.05       # max held-out accuracy give-up at equal total ε
+TRAIN_FRACTION = 0.8
+
+
+def _row_split(X: HostCSR, n_train: int):
+    """Contiguous train/test row split of a HostCSR (twin rows are i.i.d.
+    by construction, so a prefix split is already a random split)."""
+    lo = X.indptr[:n_train + 1].copy()
+    hi = X.indptr[n_train:].copy()
+    train = HostCSR(lo, X.indices[: lo[-1]].copy(),
+                    X.data[: lo[-1]].copy(), (n_train, X.shape[1]))
+    test = HostCSR(hi - hi[0], X.indices[hi[0]:].copy(),
+                   X.data[hi[0]:].copy(), (X.shape[0] - n_train, X.shape[1]))
+    return train, test
+
+
+def _timed_solve(backend, data, y, cfg):
+    """Steady-state end-to-end wall: warm pass compiles every chunk shape
+    the schedule visits, second pass is timed."""
+    res = backend.fn(data, y, cfg)
+    np.asarray(res.w)
+    t0 = time.time()
+    res = backend.fn(data, y, cfg)
+    np.asarray(res.w)
+    return res, time.time() - t0
+
+
+def run(datasets=("rcv1", "url"), steps: int = 320, lam: float = 30.0,
+        epsilon: float = 12.0, delta: float = 1e-6, chunk_steps: int = 40,
+        screen_every: int = 1, screen_eps_frac: float = 0.25):
+    from benchmarks.common import accuracy_auc, load_problem
+    from repro.core.solvers import FWConfig, get_backend, resolve_queue
+
+    out = {"steps": steps, "lam": lam, "epsilon": epsilon,
+           "chunk_steps": chunk_steps, "screen_every": screen_every,
+           "screen_eps_frac": screen_eps_frac, "datasets": {}}
+    backend = get_backend("jax_sparse")
+    for name in datasets:
+        prob = load_problem(name)
+        n, d = prob.X.shape
+        n_train = int(n * TRAIN_FRACTION)
+        X_train, X_test = _row_split(prob.X, n_train)
+        y_train, y_test = prob.y[:n_train], prob.y[n_train:]
+        data = backend.prepare(X_train)
+
+        base = FWConfig(backend="jax_sparse", queue="bsls", lam=lam,
+                        steps=steps, epsilon=epsilon, delta=delta,
+                        chunk_steps=chunk_steps)
+        plain_cfg = resolve_queue(backend, base)
+        screen_cfg = resolve_queue(backend, FWConfig(
+            backend="jax_sparse", queue="bsls", lam=lam, steps=steps,
+            epsilon=epsilon, delta=delta, chunk_steps=chunk_steps,
+            screen_every=screen_every, screen_eps_frac=screen_eps_frac))
+
+        plain, t_plain = _timed_solve(backend, data, y_train, plain_cfg)
+        scr, t_scr = _timed_solve(backend, data, y_train, screen_cfg)
+
+        w_p, w_s = np.asarray(plain.w), np.asarray(scr.w)
+        acc_p, auc_p = accuracy_auc(X_test, y_test, w_p)
+        acc_s, auc_s = accuracy_auc(X_test, y_test, w_s)
+        coords = np.asarray(scr.coords)
+        survivors = int(len(set(coords[coords >= 0].tolist())))
+        pass_coords = bool(
+            w_s.shape == (d,)
+            and ((coords >= -1) & (coords < d)).all()
+            and set(np.flatnonzero(w_s).tolist())
+            <= set(coords[coords >= 0].tolist()))
+        row = {
+            "n": n, "d": d, "train_rows": n_train,
+            "seconds_plain": round(t_plain, 3),
+            "seconds_screened": round(t_scr, 3),
+            "per_iter_ms_plain": round(t_plain / steps * 1e3, 3),
+            "per_iter_ms_screened": round(t_scr / steps * 1e3, 3),
+            "screen_speedup": round(t_plain / max(t_scr, 1e-9), 2),
+            "selected_coords": survivors,
+            "acc_plain": round(acc_p, 4), "acc_screened": round(acc_s, 4),
+            "auc_plain": round(auc_p, 4), "auc_screened": round(auc_s, 4),
+            "pass_utility": bool(acc_s >= acc_p - UTILITY_TOL),
+            "pass_coords": pass_coords,
+        }
+        out["datasets"][name] = row
+        print(f"[screening] {name}: plain {row['seconds_plain']}s, "
+              f"screened {row['seconds_screened']}s "
+              f"({row['screen_speedup']}x)  acc {acc_p:.3f} -> {acc_s:.3f} "
+              f"utility={row['pass_utility']} coords={pass_coords}",
+              flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

@@ -36,11 +36,12 @@ def _time_solve(backend, data, y, cfg, steps: int) -> tuple:
 
 
 def run(datasets=("rcv1", "news20"), steps: int = 60, lam: float = 20.0,
-        epsilon: float = 1.0):
+        epsilon: float = 1.0, mesh: tuple = (1, 1)):
     from benchmarks.common import load_problem
     from repro.core.solvers import FWConfig, get_backend, resolve_queue
 
-    out = {"steps": steps, "lam": lam, "mesh": [1, 1], "datasets": {}}
+    mesh = tuple(int(m) for m in mesh)
+    out = {"steps": steps, "lam": lam, "mesh": list(mesh), "datasets": {}}
     for name in datasets:
         prob = load_problem(name)
         row = {"n": prob.X.shape[0], "d": prob.X.shape[1],
@@ -48,14 +49,18 @@ def run(datasets=("rcv1", "news20"), steps: int = 60, lam: float = 20.0,
         results, prepared = {}, {}
         for bname in ("jax_sparse", "jax_shard"):
             backend = get_backend(bname)
-            cfg = resolve_queue(backend, FWConfig(backend=bname, lam=lam,
-                                                  steps=steps))
+            cfg = resolve_queue(backend, FWConfig(
+                backend=bname, lam=lam, steps=steps,
+                mesh=mesh if bname == "jax_shard" else None))
             data = prepared[bname] = backend.prepare(prob.X)
             res, per_iter_ms = _time_solve(backend, data, prob.y, cfg, steps)
             results[bname] = res
             row[f"per_iter_ms_{bname}"] = round(per_iter_ms, 2)
             if bname == "jax_shard":
-                row["block_waste"] = round(data.blocks(1, 1).waste, 2)
+                # waste of the grid actually benchmarked, plus the 1×1
+                # figure every report has carried (comparable across meshes)
+                row["block_waste"] = round(data.blocks(*mesh).waste, 2)
+                row["block_waste_1x1"] = round(data.blocks(1, 1).waste, 2)
 
         # ---- step-parity audit: identical non-private trajectories -------
         a, b = results["jax_sparse"], results["jax_shard"]
@@ -77,7 +82,8 @@ def run(datasets=("rcv1", "news20"), steps: int = 60, lam: float = 20.0,
             backend = get_backend(bname)
             cfg = resolve_queue(backend, FWConfig(
                 backend=bname, lam=lam, steps=steps, queue="bsls",
-                epsilon=epsilon, delta=1e-6))
+                epsilon=epsilon, delta=1e-6,
+                mesh=mesh if bname == "jax_shard" else None))
             res = backend.fn(prepared[bname], prob.y, cfg)
             w = np.asarray(res.w)
             row[f"dp_ok_{bname}"] = bool(

@@ -69,6 +69,14 @@ SPEC = {
         ("min", "warm_setup_speedup", 2.0),
         ("rel_min", "warm_setup_speedup", 0.25),
     ],
+    "BENCH_screening.json": [
+        ("flags",),              # pass_utility (equal-ε accuracy audit)
+                                 # + pass_coords (original-index contract)
+        # the §13 tentpole invariant: mid-solve screening must make the
+        # end-to-end private solve ≥ 1.5× faster at equal total ε
+        ("min", "screen_speedup", 1.5),
+        ("rel_min", "screen_speedup", 0.5),
+    ],
 }
 
 

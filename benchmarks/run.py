@@ -44,8 +44,8 @@ def main():
 
     from benchmarks import (bench_accuracy, bench_autotune, bench_convergence,
                             bench_flops, bench_heap_pops, bench_ingest,
-                            bench_scaling, bench_shard, bench_speedup,
-                            bench_sweep, roofline_table)
+                            bench_scaling, bench_screening, bench_shard,
+                            bench_speedup, bench_sweep, roofline_table)
     from repro.core.solvers import available_backends
 
     if args.backend is not None and args.backend not in available_backends():
@@ -81,6 +81,9 @@ def main():
         "autotune": lambda: bench_autotune.run(
             datasets=("rcv1",) if fast else ("rcv1", "news20"),
             steps=20 if fast else 40),
+        "screening": lambda: bench_screening.run(
+            datasets=("rcv1",) if fast else ("rcv1", "url"),
+            steps=240 if fast else 320),
         "ingest": lambda: bench_ingest.run(
             datasets=("rcv1_like",) if fast else
             ("rcv1_like", "url_small_like"),
@@ -131,7 +134,8 @@ def main():
                                     "final_gap_rel_diff", "sweep_speedup",
                                     "ingest_s", "warm_setup_speedup",
                                     "shard_over_sparse", "block_waste",
-                                    "tuned_over_default", "tuned_speedup")
+                                    "tuned_over_default", "tuned_speedup",
+                                    "screen_speedup", "selected_coords")
                         if k in row]
                 kv = {k: row[k] for k in keys}
                 for eps_k in ("eps_1.0", "eps_0.1"):

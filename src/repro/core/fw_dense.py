@@ -16,6 +16,7 @@ Selection rules:
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Union
 
 import jax
@@ -187,6 +188,88 @@ def dense_fw_stopping(X: Design, y: jnp.ndarray, config: FWConfig) -> FWResult:
                                             (0.0, -1, 0.0))
     return FWResult(w=carry[0], gaps=gaps, coords=coords, losses=losses,
                     stop_step=stop_step, stop_reason=stop_reason)
+
+
+def dense_fw_screened(X: Design, y: jnp.ndarray, config: FWConfig) -> FWResult:
+    """Algorithm 1 with DP iterative screening between chunks (§13).
+
+    Same chunked host loop as :func:`dense_fw_stopping`, but the design
+    matrix lives in a mutable :class:`ChunkGeometry` cell: every
+    ``screen_every``-th boundary recomputes α from the current iterate on
+    the host, runs the privatized keep rule, column-subsets the design (a
+    dense slice, or the padded-ELL repack for ``PaddedCSR`` inputs) and the
+    carry, and re-enters the chunk program at the smaller D.  The selection
+    mechanism runs at the solve share ε·(1 − screen_eps_frac) of the budget
+    (the chunk program is compiled against a reduced-ε config — Alg 1
+    derives its noise scales from the config, not a traced scalar); the
+    screening queries spend the rest.  Coordinates in the outputs and the
+    final ``w`` are mapped back to original feature ids.
+    """
+    import time as _time
+
+    import numpy as np
+
+    from repro.core.solvers.screening import (Screener, repack_dense,
+                                              solve_epsilon)
+    from repro.core.solvers.stopping import (ChunkGeometry, assemble_outputs,
+                                             drive_chunks, resolve_chunk)
+    y = jnp.asarray(y)
+    loss = config.loss_fn()
+    n, d0 = _n_rows(X), _n_cols(X)
+    private = config.selection in ("noisy_max", "gumbel")
+    run_cfg = (dataclasses.replace(config, epsilon=solve_epsilon(config))
+               if private else config)
+    em_scale = (per_step_epsilon(run_cfg.epsilon, run_cfg.delta,
+                                 run_cfg.steps) * n / (2.0 * loss.lipschitz)
+                if private else 0.0)
+    row_width = (int(X.indices.shape[1]) if isinstance(X, PaddedCSR) else d0)
+    scr = Screener(config, d=d0, n_rows=n, row_width=row_width,
+                   em_scale=em_scale, private=private)
+    geom = ChunkGeometry(operands=(X,), d=d0, pad_row=row_width)
+
+    def advance(carry, t0, c):
+        return _dense_chunk_jit(geom.operands[0], y, carry, t0,
+                                config=run_cfg, chunk=c)
+
+    def out_map(out, t0):
+        gap, j, mean_loss = out
+        return gap, scr.map_coords(j), mean_loss
+
+    def alpha_now(Xc, w):
+        v = _matvec(Xc, w)
+        if loss.separable:
+            q = loss.split_grad(v) - y
+        else:
+            q = loss.grad(v, y)
+        return np.abs(np.asarray(_rmatvec(Xc, q))) / n
+
+    def respec(carry, t0, n_chunks):
+        if not scr.due(n_chunks):
+            return None
+        w = carry[0]
+        keep = scr.screen(alpha_now(geom.operands[0], w),
+                          np.asarray(w) != 0)
+        if keep is None:
+            return None
+        tw = _time.perf_counter()
+        X2 = repack_dense(geom.operands[0], keep)
+        w2 = jnp.asarray(np.asarray(w)[np.flatnonzero(keep)])
+        pad2 = (int(X2.indices.shape[1]) if isinstance(X2, PaddedCSR)
+                else int(X2.shape[1]))
+        geom.swap((X2,), X2.shape[1], pad_row=pad2)
+        info = scr.commit(keep, repack_seconds=_time.perf_counter() - tw)
+        return (w2, carry[1], carry[2], carry[3]), info
+
+    carry, outs, stop_step, stop_reason = drive_chunks(
+        advance, _carry0(X, d0, config), steps=config.steps,
+        chunk=resolve_chunk(config), max_seconds=config.max_seconds,
+        done_of=lambda cy: cy[2], stop_at_of=lambda cy: cy[3],
+        respec=respec, out_map=out_map)
+    gaps, coords, losses = assemble_outputs(outs, config.steps,
+                                            (0.0, -1, 0.0))
+    return FWResult(w=scr.expand(carry[0]), gaps=gaps, coords=coords,
+                    losses=losses, stop_step=stop_step,
+                    stop_reason=stop_reason)
 
 
 def dense_fw_flops(n: int, d: int, nnz: int, steps: int) -> int:

@@ -43,13 +43,16 @@ def _normalize_stop(res: FWResult, config: FWConfig) -> FWResult:
 
 
 @register("dense", data_format="dense", queues=QUEUE_ALIASES["selection"],
-          default_queue=None,
+          default_queue=None, supports_screening=True,
           doc="Alg 1 baseline: dense-work FW (O(nnz + D)/iter), device scan")
 def _dense_backend(data, y, config: FWConfig) -> FWResult:
-    from repro.core.fw_dense import dense_fw_jit, dense_fw_stopping
+    from repro.core.fw_dense import (dense_fw_jit, dense_fw_screened,
+                                     dense_fw_stopping)
     if config.queue is not None:  # queue name chosen → translate to selection
         config = dataclasses.replace(config, selection=config.queue, queue=None)
     y = jnp.asarray(y, jnp.float32)
+    if config.screen_every > 0:   # §13: mutable-geometry chunked driver
+        return dense_fw_screened(data, y, config)
     if config.early_stopping:     # §9: host-driven chunked masked scan
         return dense_fw_stopping(data, y, config)
     return _normalize_stop(dense_fw_jit(data, y, config), config)
@@ -100,7 +103,7 @@ def _jax_shard_backend(data, y, config: FWConfig) -> FWResult:
 
 
 @register("jax_sparse", data_format="padded", queues=QUEUE_ALIASES["device"],
-          default_queue="group_argmax",
+          default_queue="group_argmax", supports_screening=True,
           doc="Alg 2 device scan through the Pallas kernels "
               "(spmv + coord_update + bsls_draw)")
 def _jax_sparse_backend(data, y, config: FWConfig) -> FWResult:

@@ -65,16 +65,20 @@ from repro.core.solvers.config import (STOP_GAP_TOL, STOP_MAX_SECONDS,
                                        STOP_MAX_STEPS, FWConfig, FWResult,
                                        check_gap_certificate)
 from repro.core.solvers.planner import SolvePlan, record_cost
-from repro.core.solvers.registry import (get_backend, resolve_data,
-                                         resolve_queue)
+from repro.core.solvers.registry import (check_screening_support, get_backend,
+                                         resolve_data, resolve_queue)
 
 # FWConfig fields that must agree within one vmapped sweep group: they are
 # jit-static (shape the compiled scan) or flip a Python-level branch.  The
 # complementary set — lam / epsilon / delta / seed / gap_tol / max_seconds —
 # is what a group stacks (the stopping knobs ride as traced scalars or
-# host-side checks, so they never split a group).
+# host-side checks, so they never split a group).  The §13 screening knobs
+# are group fields because a fired screen changes the problem *shape*: two
+# screened members diverge to different widths (DP noise makes survivor sets
+# seed-dependent), so a screened group can never be lane-stacked and must
+# not mix with unscreened members.
 GROUP_FIELDS = ("backend", "steps", "queue", "loss", "selection", "interpret",
-                "mesh", "chunk_steps")
+                "mesh", "chunk_steps", "screen_every", "screen_eps_frac")
 
 
 def grid(base: FWConfig | None = None, **axes) -> Tuple[FWConfig, ...]:
@@ -260,9 +264,13 @@ def _solve_jax_sparse_group_sequential(
         t0 = time.perf_counter()
         res = jax_sparse_fw(pcsr, pcsc, y32, cfg, setup=setup)
         jax.block_until_ready(res.w)
-        ran = max(res.stop_step_or(cfg.steps), 1)
-        record_cost(cfg.backend, "sequential", platform, stats,
-                    (time.perf_counter() - t0) / ran, loss=cfg.loss)
+        if cfg.screen_every == 0:
+            # screened solves record per-chunk inside the §13 driver with
+            # the geometry each chunk actually ran at; a whole-solve average
+            # over shrinking D would poison the cost book
+            ran = max(res.stop_step_or(cfg.steps), 1)
+            record_cost(cfg.backend, "sequential", platform, stats,
+                        (time.perf_counter() - t0) / ran, loss=cfg.loss)
         out.append(res)
     return out
 
@@ -398,6 +406,13 @@ def _run_jax_sparse_group(data, y, member_cfgs: Sequence[FWConfig],
                        else dataclasses.replace(c,
                                                 chunk_steps=plan.chunk_steps)
                        for c in member_cfgs]
+    if member_cfgs[0].screen_every > 0:
+        # §13: once a screen fires, per-member geometry diverges (DP noise
+        # makes survivor sets seed-dependent), so lanes can never be stacked
+        # — screened groups always run the sequential mutable-geometry
+        # driver, whatever the plan says.
+        with obs.span("group.screened", size=len(member_cfgs)):
+            return _solve_jax_sparse_group_sequential(data, y, member_cfgs)
     early = any(c.early_stopping for c in member_cfgs)
     mode = plan.mode
     if mode == "auto":
@@ -457,7 +472,11 @@ def solve_many(X, y=None, configs: Sequence[FWConfig] = (), *,
                 c = dataclasses.replace(c,
                                         backend=choose_backend(auto_stats, c))
             check_gap_certificate(c)
+            if c.screen_every:
+                from repro.core.solvers.screening import check_screen_config
+                check_screen_config(c)
             backend = get_backend(c.backend)
+            check_screening_support(backend, c)
             resolved.append((backend, resolve_queue(backend, c)))
 
         if prepared is None:

@@ -73,6 +73,22 @@ class FWConfig:
     # [8, 256]).  Chunking never changes iterates — only how often the host
     # checks for convergence/timeouts and retires finished configs.
     chunk_steps: Optional[int] = None
+    # DP iterative screening (DESIGN.md §13).  screen_every = k > 0 runs a
+    # privatized screening query every k chunk boundaries: coordinates whose
+    # (noisy) |α| score falls far enough below the max are dropped and the
+    # padded problem geometry is repacked to the survivors, so later chunks
+    # pay O(D_surviving) instead of O(D).  0 (the default) disables screening
+    # and reproduces today's programs bit-for-bit.  Unlike chunking, a fired
+    # screen *changes the trajectory* (dropped coordinates can no longer be
+    # selected), so the §9 parity-vs-prefix contract applies only while
+    # screening is off or has not fired.
+    screen_every: int = 0
+    # Fraction of config.epsilon reserved for the screening queries when the
+    # run is private; the solve's selection mechanism runs at the remaining
+    # (1 - frac)·ε.  Composed under the same advanced-composition currency as
+    # the EM draws — see screening.screen_plan.  Ignored while screening is
+    # off or for non-private runs (which screen noise-free, charge-free).
+    screen_eps_frac: float = 0.25
 
     def loss_fn(self) -> Loss:
         return get_loss(self.loss)

@@ -296,11 +296,20 @@ fw_carry_init_jit = jax.jit(fw_carry_init, static_argnames=("d", "dtype",
 
 def em_scale_for(config: FWConfig, n_rows: int) -> float:
     """EM log-weight scale ε'·N/(2L) when the (native) queue is the DP
-    two-level sampler; 1.0 otherwise (priorities are then raw |α|)."""
+    two-level sampler; 1.0 otherwise (priorities are then raw |α|).
+
+    A screened run's selection mechanism only gets the solve share of the
+    budget — ``ε·(1 − screen_eps_frac)`` when rounds are planned (§13) —
+    so the scale shrinks accordingly; the screening queries spend the rest.
+    """
     if config.queue != "two_level":
         return 1.0
+    epsilon = config.epsilon
+    if config.screen_every > 0:
+        from repro.core.solvers.screening import solve_epsilon
+        epsilon = solve_epsilon(config)
     return em_log_weight_scale(
-        epsilon=config.epsilon, delta=config.delta, steps=config.steps,
+        epsilon=epsilon, delta=config.delta, steps=config.steps,
         n_rows=n_rows, lipschitz=config.loss_fn().lipschitz)
 
 
@@ -330,6 +339,95 @@ def _chunked_fw(pcsr, pcsc, setup, config: FWConfig, em_scale: float,
                     stop_reason=stop_reason)
 
 
+def _screened_chunked_fw(pcsr, pcsc, setup, config: FWConfig,
+                         em_scale: float, private: bool, fused: bool,
+                         y=None) -> FWResult:
+    """§13 screened chunk loop: the §9 driver with mutable problem geometry.
+
+    The padded pair lives in a :class:`stopping.ChunkGeometry` cell that the
+    ``advance`` closure reads per entry; at every ``screen_every``-th chunk
+    boundary the ``respec`` hook runs the privatized screening query over
+    the live |α|, repacks the pair/carry to the survivors and swaps the
+    cell — the next chunk compiles once for the smaller D and every term
+    that scales with the padded width (masked-scan freezes, w/α scatter,
+    √D selection, the (G, M) sampler state) shrinks with it.  Outputs are
+    translated to original feature ids per chunk (``out_map``), before the
+    boundary's repack changes what current-space ids mean; the final w is
+    scattered back to the full D₀.  Per-chunk times are fed to the planner
+    cost book against the *current* geometry's stats, so the model sees the
+    shrinking D, not the admission-time one.
+    """
+    import time as _time
+
+    import numpy as np
+
+    from repro.core.solvers.planner import data_stats, record_cost
+    from repro.core.solvers.screening import (Screener, repack_carry,
+                                              repack_pair)
+    from repro.core.solvers.stopping import ChunkGeometry
+
+    dtype = pcsr.values.dtype
+    pad_col = (pcsc.full_width if isinstance(pcsc, TieredCSC)
+               else int(pcsc.indices.shape[1]))
+    geom = ChunkGeometry(operands=(pcsr, pcsc), d=pcsr.shape[1],
+                         pad_row=int(pcsr.indices.shape[1]), pad_col=pad_col)
+    scr = Screener(config, d=pcsr.shape[1], n_rows=pcsr.shape[0],
+                   row_width=int(pcsr.indices.shape[1]), em_scale=em_scale,
+                   private=private)
+    carry0 = fw_carry_init_jit(pcsr.shape[1], dtype, *setup, em_scale,
+                               jax.random.PRNGKey(config.seed),
+                               private=private)
+    platform = jax.devices()[0].platform
+    stats_cache = {}
+
+    def cur_stats():
+        if geom.version not in stats_cache:
+            stats_cache[geom.version] = data_stats(geom.operands)
+        return stats_cache[geom.version]
+
+    def advance(carry, t0, c):
+        p, q = geom.operands
+        tw = _time.perf_counter()
+        carry, out = fw_scan_chunk_jit(
+            p, q, carry, config.lam, em_scale, config.gap_tol, t0, y,
+            steps=c, loss=config.loss, private=private, fused=fused,
+            interpret=config.interpret, early_stop=True)
+        jax.block_until_ready(out[0])
+        record_cost("jax_sparse", "sequential", platform, cur_stats(),
+                    (_time.perf_counter() - tw) / c, loss=config.loss)
+        return carry, out
+
+    def out_map(out, t0):
+        gaps, coords = out
+        return gaps, scr.map_coords(coords)
+
+    def respec(carry, t0, n_chunks):
+        if not scr.due(n_chunks):
+            return None
+        keep = scr.screen(np.abs(np.asarray(carry.alpha)),
+                          np.asarray(carry.w) != 0)
+        if keep is None:
+            return None
+        tw = _time.perf_counter()
+        p2, q2 = repack_pair(*geom.operands, keep)
+        carry2 = repack_carry(carry, keep, em_scale, private)
+        pad2 = (q2.full_width if isinstance(q2, TieredCSC)
+                else int(q2.indices.shape[1]))
+        geom.swap((p2, q2), p2.shape[1],
+                  pad_row=int(p2.indices.shape[1]), pad_col=pad2)
+        info = scr.commit(keep, repack_seconds=_time.perf_counter() - tw)
+        return carry2, info
+
+    carry, outs, stop_step, stop_reason = drive_chunks(
+        advance, carry0, steps=config.steps, chunk=resolve_chunk(config),
+        max_seconds=config.max_seconds, done_of=lambda cy: cy.done,
+        stop_at_of=lambda cy: cy.stop_at, respec=respec, out_map=out_map)
+    gaps, coords = assemble_outputs(outs, config.steps, (0.0, -1))
+    return FWResult(w=scr.expand(carry.w * carry.w_m), gaps=gaps,
+                    coords=coords, losses=jnp.zeros_like(gaps),
+                    stop_step=stop_step, stop_reason=stop_reason)
+
+
 def jax_sparse_fw(
     pcsr: PaddedCSR, pcsc, y: jnp.ndarray, config: FWConfig,
     setup: Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray] = None,
@@ -357,6 +455,10 @@ def jax_sparse_fw(
         with obs.span("solve.setup", loss=config.loss):
             setup = fw_setup_jit(pcsr, y, loss=config.loss,
                                  interpret=config.interpret)
+    if config.screen_every > 0:
+        # §13: mutable-geometry chunked driver (subsumes early stopping)
+        return _screened_chunked_fw(pcsr, pcsc, setup, config, em_scale,
+                                    private, fused, y=y_scan)
     if config.early_stopping:
         return _chunked_fw(pcsr, pcsc, setup, config, em_scale, private,
                            fused, y=y_scan)

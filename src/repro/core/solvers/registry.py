@@ -48,6 +48,10 @@ class Backend:
     # reject FWConfig.max_seconds; declared here so admission layers (the
     # fit service) can refuse such configs *before* charging DP budget.
     supports_max_seconds: bool = True
+    # §13: chunk-boundary screening needs a host-driven chunk loop with
+    # mutable geometry; engines without one refuse screen_every up front
+    # (again so admission can reject charge-free).
+    supports_screening: bool = False
 
     def prepare(self, X):
         """Coerce ``X`` into this backend's data layout (what solve() does
@@ -92,14 +96,16 @@ QUEUE_ALIASES: Mapping[str, Mapping[str, str]] = {
 
 def register(name: str, *, data_format: str, queues: Mapping[str, str],
              default_queue: Optional[str], doc: str = "",
-             supports_max_seconds: bool = True) -> Callable:
+             supports_max_seconds: bool = True,
+             supports_screening: bool = False) -> Callable:
     """Decorator: add ``fn(data, y, config) -> FWResult`` under ``name``."""
 
     def deco(fn: Callable) -> Callable:
         _REGISTRY[name] = Backend(name=name, fn=fn, data_format=data_format,
                                   queues=queues, default_queue=default_queue,
                                   doc=doc,
-                                  supports_max_seconds=supports_max_seconds)
+                                  supports_max_seconds=supports_max_seconds,
+                                  supports_screening=supports_screening)
         return fn
 
     return deco
@@ -264,6 +270,18 @@ def resolve_queue(backend: Backend, config: FWConfig) -> FWConfig:
     return dataclasses.replace(config, queue=native)
 
 
+def check_screening_support(backend: Backend, config: FWConfig) -> None:
+    """Refuse ``screen_every`` on engines without a mutable-geometry chunk
+    loop (§13) — loudly and up front, so the fit service rejects such
+    configs before charging any DP budget."""
+    if config.screen_every > 0 and not backend.supports_screening:
+        raise ValueError(
+            f"backend {backend.name!r} does not support chunk-boundary "
+            "screening (screen_every > 0): it has no host-driven chunk loop "
+            "with mutable problem geometry — use the dense or jax_sparse "
+            "backend, or set screen_every=0")
+
+
 def solve(X, y=None, config: Optional[FWConfig] = None,
           **overrides) -> FWResult:
     """Run the configured Frank-Wolfe backend on (X, y).
@@ -285,6 +303,9 @@ def solve(X, y=None, config: Optional[FWConfig] = None,
         config = dataclasses.replace(config, **overrides)
     with obs.span("solve", loss=config.loss, steps=config.steps) as sp:
         check_gap_certificate(config)   # non-smooth loss + gap_tol/unknown
+        if config.screen_every:
+            from repro.core.solvers.screening import check_screen_config
+            check_screen_config(config)
         X, y = resolve_data(X, y)
         if config.backend == "auto":
             with obs.span("solve.plan"):
@@ -293,6 +314,7 @@ def solve(X, y=None, config: Optional[FWConfig] = None,
                 config = dataclasses.replace(
                     config, backend=choose_backend(data_stats(X), config))
         backend = get_backend(config.backend)
+        check_screening_support(backend, config)
         config = resolve_queue(backend, config)
         sp.set(backend=backend.name, queue=config.queue)
         obs.count("solve.calls", backend=backend.name)

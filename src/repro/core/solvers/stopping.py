@@ -7,9 +7,19 @@ flag lands, the wall clock runs out, or T is spent — then assembles the
 full-length sentinel-padded output arrays.  That contract (0.0-padded gaps,
 -1-padded coords, ``stop_step``/``stop_reason`` resolution) is defined once
 here so the backends cannot drift apart.
+
+Mutable problem geometry (DESIGN.md §13): the operands a chunk program runs
+over are no longer fixed for the life of a run.  A driver that screens
+features between chunks holds its padded pair in a :class:`ChunkGeometry`
+cell, reads it inside ``advance``, and swaps it from the ``respec`` hook —
+the next ``advance`` re-enters a freshly compiled (then cached-per-shape)
+program over the smaller problem.  ``out_map`` lets such drivers translate
+each chunk's outputs back into a stable index space *before* the boundary's
+repack changes what the indices mean.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Callable, List, Optional, Sequence, Tuple
 
@@ -29,6 +39,35 @@ def resolve_chunk(config: FWConfig) -> int:
     return default_chunk(config.steps)
 
 
+@dataclasses.dataclass
+class ChunkGeometry:
+    """The per-chunk problem geometry of a chunked run — first-class and
+    mutable.
+
+    ``advance`` closures read the current ``operands`` (e.g. the padded
+    ELL/CSC pair) through this cell instead of closing over fixed arrays;
+    a ``respec`` hook (the §13 screening repack) swaps them between chunks
+    via :meth:`swap`.  ``d``/``pad_row``/``pad_col`` are the shape facts the
+    cost model and obs trail read per chunk; ``version`` counts swaps —
+    each new shape compiles the chunk program once, then re-enters the
+    cached executable like any other chunk.
+    """
+
+    operands: tuple
+    d: int
+    pad_row: int = 0
+    pad_col: int = 0
+    version: int = 0
+
+    def swap(self, operands: tuple, d: int, pad_row: int = 0,
+             pad_col: int = 0) -> None:
+        self.operands = operands
+        self.d = int(d)
+        self.pad_row = int(pad_row)
+        self.pad_col = int(pad_col)
+        self.version += 1
+
+
 def drive_chunks(
     advance: Callable,      # (carry, t0, chunk_len) -> (carry, outs tuple)
     carry,
@@ -38,6 +77,9 @@ def drive_chunks(
     max_seconds: Optional[float],
     done_of: Callable,      # carry -> device bool: certificate landed
     stop_at_of: Callable,   # carry -> device int: steps applied at freeze
+    clock: Callable[[], float] = time.perf_counter,
+    respec: Optional[Callable] = None,
+    out_map: Optional[Callable] = None,
 ) -> Tuple[object, List[Tuple[jnp.ndarray, ...]], int, str]:
     """Re-enter one compiled masked chunk until the run ends.
 
@@ -49,26 +91,41 @@ def drive_chunks(
     later chunk re-enters, which is a one-off cost of the process, not of
     this run — charging it would make any budget shorter than the compile
     stop every run after one chunk regardless of optimization progress.
+    ``clock`` injects the time source (tests drive timeout behavior with a
+    fake clock instead of sleeping real wall time).
 
-    Per-chunk wall times, the first-chunk (compile-dominated) cost, and the
-    final stop verdict are reported to the obs layer when a collector is
-    active — host-side reads of already-materialized state, never inside
-    the compiled chunk itself.
+    ``respec`` is the §13 mutable-geometry hook: called at each interior
+    chunk boundary the run will continue past (never after ``done``, a
+    timeout, or the final chunk) as ``respec(carry, t0, n_chunks)``.  It
+    returns ``None`` to continue unchanged, or ``(new_carry, info)`` after
+    swapping the geometry its ``advance`` closure reads — ``info`` (a dict)
+    lands on the ``chunks.respec`` obs event.  A respec'd chunk recompiles
+    for its new shape; that cost is charged to ``max_seconds`` like any
+    warm chunk (only the first chunk's compile is excluded).
+
+    ``out_map`` maps each chunk's output tuple before buffering, as
+    ``out_map(out, t0)`` with ``t0`` the chunk's starting step — it runs
+    *before* the boundary's ``respec``, so drivers whose geometry mutates
+    can translate outputs into the stable original index space using the
+    mapping the chunk actually ran under.
     """
     from repro import obs
     outs: List[Tuple[jnp.ndarray, ...]] = []
     t0, stop_reason = 0, STOP_MAX_STEPS
     t_start: Optional[float] = None
     n_chunks = 0
-    t_prev = time.perf_counter()
+    t_prev = clock()
     while t0 < steps:
         c = min(chunk, steps - t0)
         carry, out = advance(carry, t0, c)
-        outs.append(out if isinstance(out, tuple) else (out,))
+        out = out if isinstance(out, tuple) else (out,)
+        if out_map is not None:
+            out = out_map(out, t0)
+        outs.append(out)
         t0 += c
         n_chunks += 1
         done = bool(done_of(carry))         # blocks: the chunk has run
-        now = time.perf_counter()
+        now = clock()
         if obs.enabled():
             if n_chunks == 1:
                 # compile-dominated cold chunk: tracked as its own gauge so
@@ -86,10 +143,18 @@ def drive_chunks(
         elif max_seconds is not None and now - t_start >= max_seconds:
             stop_reason = STOP_MAX_SECONDS
             break
+        if respec is not None and t0 < steps:
+            swapped = respec(carry, t0, n_chunks)
+            if swapped is not None:
+                carry, info = swapped
+                if obs.enabled():
+                    obs.event("chunks.respec", t0=t0, chunks=n_chunks,
+                              **(info or {}))
     stop_step = (int(stop_at_of(carry)) if bool(done_of(carry)) else t0)
-    obs.event("chunks.stop", stop_step=stop_step, stop_reason=stop_reason,
-              chunks=n_chunks, steps_requested=steps)
-    obs.count("chunks.stopped", reason=stop_reason)
+    if obs.enabled():
+        obs.event("chunks.stop", stop_step=stop_step, stop_reason=stop_reason,
+                  chunks=n_chunks, steps_requested=steps)
+        obs.count("chunks.stopped", reason=stop_reason)
     return carry, outs, stop_step, stop_reason
 
 

@@ -54,7 +54,8 @@ from repro.core.dp.accountant import PrivacyAccountant, per_step_epsilon
 from repro.core.solvers.batched import group_key, solve_many
 from repro.core.solvers.config import (FWConfig, FWResult,
                                        check_gap_certificate)
-from repro.core.solvers.registry import get_backend, resolve_queue
+from repro.core.solvers.registry import (check_screening_support, get_backend,
+                                         resolve_queue)
 from repro.obs.ledger import AuditLedger
 from repro.obs.metrics import quantile
 
@@ -226,6 +227,12 @@ class FitService:
                     f"backend {backend.name!r} runs as one compiled scan "
                     "and cannot enforce max_seconds; use gap_tol or a "
                     "chunked backend")
+            # §13: bad screening knobs and engines without a mutable-geometry
+            # chunk loop are refused here, charge-free, not at drain time
+            if cfg.screen_every:
+                from repro.core.solvers.screening import check_screen_config
+                check_screen_config(cfg)
+            check_screening_support(backend, cfg)
             resolved = resolve_queue(backend, cfg)
             # unknown loss -> KeyError; gap_tol on a non-smooth objective ->
             # ValueError — both refused here, before any budget is charged
@@ -262,10 +269,19 @@ class FitService:
 
     @staticmethod
     def _request_facts(cfg: FWConfig) -> dict:
-        """The request facts a later audit needs to interpret a charge."""
-        return {"epsilon": cfg.epsilon, "delta": cfg.delta,
-                "steps": cfg.steps, "queue": cfg.queue,
-                "backend": cfg.backend, "loss": cfg.loss}
+        """The request facts a later audit needs to interpret a charge.
+
+        Must never raise, even on invalid configs — the refusal path records
+        these same facts — so screening contributes only its raw knobs, never
+        derived ``screen_plan`` quantities (whose math refuses bad fracs).
+        """
+        facts = {"epsilon": cfg.epsilon, "delta": cfg.delta,
+                 "steps": cfg.steps, "queue": cfg.queue,
+                 "backend": cfg.backend, "loss": cfg.loss}
+        if cfg.screen_every:
+            facts["screen_every"] = cfg.screen_every
+            facts["screen_eps_frac"] = cfg.screen_eps_frac
+        return facts
 
     @staticmethod
     def _charged_steps(acct: PrivacyAccountant, cfg: FWConfig) -> int:
@@ -277,14 +293,27 @@ class FitService:
         ``T_req · (ε'_req/ε'_acct)²`` pool steps (the 1e-9 absorbs float slop
         before ceil).  A request with δ weaker than the accountant's is not
         expressible in its currency and is refused.
+
+        §13 screening splits the request ε: the T EM selections run at the
+        solve share ε·(1 − screen_eps_frac), and each of the R planned
+        screening rounds is one extra advanced-composition query at
+        ε_round = ε·frac/√(8R·log(1/δ)) — both priced in the same pool-step
+        currency and charged up-front at admission (a screen that never
+        fires, like a stop before T, under-uses the charge; never refunds).
         """
         if cfg.delta > acct.delta * (1.0 + 1e-12):
             raise ValueError(
                 f"request δ={cfg.delta:g} is weaker than the tenant "
                 f"accountant's δ={acct.delta:g}")
-        eps_req_step = per_step_epsilon(cfg.epsilon, cfg.delta, cfg.steps)
+        from repro.core.solvers.screening import screen_plan
+        plan = screen_plan(cfg, private=True)
+        eps_req_step = per_step_epsilon(plan.eps_solve, cfg.delta, cfg.steps)
         ratio = eps_req_step / acct.per_step
-        return max(1, math.ceil(cfg.steps * ratio * ratio - 1e-9))
+        charged = max(1, math.ceil(cfg.steps * ratio * ratio - 1e-9))
+        if plan.rounds:
+            sratio = plan.eps_round / acct.per_step
+            charged += max(1, math.ceil(plan.rounds * sratio * sratio - 1e-9))
+        return charged
 
     def _reject(self, req: FitRequest, reason: str) -> bool:
         req.status, req.reason = "rejected", reason

@@ -267,8 +267,23 @@ class _FakeCarry:
     stop_at = 0
 
 
-def _drive(advance, steps, chunk, max_seconds):
+class _FakeClock:
+    """Deterministic time source for ``drive_chunks(clock=...)``: the
+    ``advance`` stubs tick it instead of sleeping real wall time."""
+
+    def __init__(self):
+        self.now = 0.0
+
+    def tick(self, seconds):
+        self.now += seconds
+
+    def __call__(self):
+        return self.now
+
+
+def _drive(advance, steps, chunk, max_seconds, clock=None):
     from repro.core.solvers.stopping import drive_chunks
+    import time
     import jax.numpy as jnp
     calls = []
 
@@ -279,7 +294,8 @@ def _drive(advance, steps, chunk, max_seconds):
 
     out = drive_chunks(wrapped, _FakeCarry(), steps=steps, chunk=chunk,
                        max_seconds=max_seconds,
-                       done_of=lambda c: c.done, stop_at_of=lambda c: c.stop_at)
+                       done_of=lambda c: c.done, stop_at_of=lambda c: c.stop_at,
+                       clock=clock or time.perf_counter)
     return out, calls
 
 
@@ -287,14 +303,14 @@ def test_compile_heavy_first_chunk_does_not_trip_max_seconds():
     """The wall-clock budget must not be charged for the cold chunk's XLA
     compile: a first chunk far over budget followed by instant chunks runs
     to completion (the old driver stopped after chunk 1, always)."""
-    import time
+    clock = _FakeClock()
 
     def advance(i):
         if i == 0:
-            time.sleep(0.3)          # "compile": one-off process cost
+            clock.tick(0.3)          # "compile": one-off process cost
 
     (carry, outs, stop, reason), calls = _drive(advance, steps=40, chunk=10,
-                                                max_seconds=0.2)
+                                                max_seconds=0.2, clock=clock)
     assert reason == "max_steps"
     assert stop == 40
     assert len(calls) == 4
@@ -303,15 +319,15 @@ def test_compile_heavy_first_chunk_does_not_trip_max_seconds():
 def test_max_seconds_still_enforced_after_warm_chunk():
     """Steady-state chunks do count: the budget trips once warm wall time
     crosses it, and the partial trace keeps its sentinel contract."""
-    import time
     import numpy as np
+    clock = _FakeClock()
 
     def advance(i):
         if i > 0:
-            time.sleep(0.12)
+            clock.tick(0.12)
 
     (carry, outs, stop, reason), calls = _drive(advance, steps=500, chunk=10,
-                                                max_seconds=0.2)
+                                                max_seconds=0.2, clock=clock)
     assert reason == "max_seconds"
     assert stop == len(calls) * 10 < 500
     assert len(calls) >= 2           # never stops on the cold chunk alone
@@ -332,3 +348,28 @@ def test_assemble_outputs_zero_chunk_keeps_stream_dtypes():
     assert coords.dtype == jnp.int32
     assert (np.asarray(gaps) == 0.0).all()
     assert (np.asarray(coords) == -1).all()
+
+
+def test_assemble_outputs_zero_chunk_dtypes_under_x64():
+    """Same sentinel contract with jax_enable_x64 on: the dtype of the
+    empty stream follows the sentinel's weak-type promotion (f64/i64 under
+    x64), not a hard-coded 32-bit pick."""
+    import jax
+    import numpy as np
+    from repro.core.solvers.stopping import assemble_outputs
+    prev = jax.config.read("jax_enable_x64")
+    jax.config.update("jax_enable_x64", True)
+    try:
+        gaps, coords = assemble_outputs([], 5, (0.0, -1))
+        assert np.issubdtype(np.asarray(gaps).dtype, np.floating)
+        assert np.issubdtype(np.asarray(coords).dtype, np.integer)
+        assert (np.asarray(gaps) == 0.0).all()
+        assert (np.asarray(coords) == -1).all()
+        # filler concatenation onto a real chunk keeps its dtype too
+        import jax.numpy as jnp
+        chunk = (jnp.zeros(2, jnp.float64), jnp.full(2, 3, jnp.int64))
+        gaps, coords = assemble_outputs([chunk], 5, (0.0, -1))
+        assert gaps.dtype == jnp.float64 and coords.dtype == jnp.int64
+        assert (np.asarray(coords)[2:] == -1).all()
+    finally:
+        jax.config.update("jax_enable_x64", prev)

@@ -1,0 +1,281 @@
+"""DP iterative screening between chunks (DESIGN.md §13).
+
+Covers the screening subsystem end to end: the ε plan/round schedule, the
+exactness of the geometry repack, trajectory parity when a round keeps
+everything, the original-index map on screened results, the obs trail, and
+the FitService admission charge for the composed release.
+"""
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.dp.accountant import PrivacyAccountant, per_step_epsilon
+from repro.core.solvers import FWConfig, solve
+from repro.core.solvers import screening
+from repro.core.solvers.screening import (Screener, check_screen_config,
+                                          repack_pair, screen_plan,
+                                          screening_rounds, solve_epsilon)
+from repro.core.sparse.formats import (TieredCSC, dense_to_host,
+                                       host_to_padded, tiered_from_padded)
+from repro.data.synthetic import make_sparse_classification
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_sparse_classification(n=150, d=600, nnz_per_row=10,
+                                      informative=15, seed=11)
+
+
+# ---------------------------------------------------------------------------
+# plan / config validation
+# ---------------------------------------------------------------------------
+
+
+def test_screening_rounds_schedule():
+    # 96 steps / chunk 16 -> 6 chunks -> 5 interior boundaries
+    assert screening_rounds(96, 16, 1) == 5
+    assert screening_rounds(96, 16, 2) == 2
+    assert screening_rounds(96, 16, 5) == 1
+    assert screening_rounds(96, 16, 6) == 0   # only the final boundary left
+    assert screening_rounds(96, 96, 1) == 0   # single chunk: nothing interior
+    assert screening_rounds(96, 16, 0) == 0
+
+
+def test_screen_plan_epsilon_split():
+    cfg = FWConfig(steps=96, chunk_steps=16, screen_every=2,
+                   screen_eps_frac=0.25, epsilon=2.0, delta=1e-6)
+    plan = screen_plan(cfg, private=True)
+    assert plan.rounds == 2
+    assert plan.eps_screen == pytest.approx(0.5)
+    assert plan.eps_solve == pytest.approx(1.5)
+    assert plan.eps_round == pytest.approx(
+        per_step_epsilon(0.5, 1e-6, 2))
+    assert solve_epsilon(cfg) == pytest.approx(1.5)
+    # non-private: the whole ε stays with the solve
+    np_plan = screen_plan(cfg, private=False)
+    assert np_plan.eps_solve == pytest.approx(2.0)
+    assert np_plan.eps_screen == 0.0 and np_plan.eps_round == 0.0
+    # screening off: full ε, zero rounds
+    off = dataclasses.replace(cfg, screen_every=0)
+    assert solve_epsilon(off) == pytest.approx(2.0)
+    assert screen_plan(off, private=True).rounds == 0
+
+
+def test_check_screen_config_refusals():
+    check_screen_config(FWConfig())                       # off: fine
+    check_screen_config(FWConfig(screen_every=3))         # on, default frac
+    with pytest.raises(ValueError, match="screen_every"):
+        check_screen_config(FWConfig(screen_every=-1))
+    for frac in (0.0, 1.0, 1.5, -0.2):
+        with pytest.raises(ValueError, match="screen_eps_frac"):
+            check_screen_config(
+                FWConfig(screen_every=2, screen_eps_frac=frac))
+
+
+def test_unsupported_backends_refuse_screening(problem):
+    X, y, _ = problem
+    for backend in ("host_sparse", "jax_dense", "jax_shard"):
+        with pytest.raises(ValueError, match="screening"):
+            solve(X, y, FWConfig(backend=backend, steps=8, screen_every=2))
+
+
+# ---------------------------------------------------------------------------
+# geometry repack exactness
+# ---------------------------------------------------------------------------
+
+
+def _random_pair(n=40, d=60, seed=0, density=0.15):
+    rng = np.random.default_rng(seed)
+    X = np.where(rng.random((n, d)) < density,
+                 rng.standard_normal((n, d)), 0.0).astype(np.float32)
+    return X, host_to_padded(dense_to_host(X))
+
+
+def _csc_dense(pcsc) -> np.ndarray:
+    """Densify a CSC layout through its own per-column accessors (not the
+    repack's reconstruction helper — keeps the check independent)."""
+    n, d = pcsc.shape
+    out = np.zeros((n, d), np.float32)
+    for j in range(d):
+        if isinstance(pcsc, TieredCSC):
+            idx, val, mask = (pcsc.col_heavy(j) if bool(pcsc.is_heavy(j))
+                              else pcsc.col_light(j))
+        else:
+            idx, val, mask = pcsc.col(j)
+        m = np.asarray(mask)
+        out[np.asarray(idx)[m], j] = np.asarray(val)[m]
+    return out
+
+
+@pytest.mark.parametrize("tiered", [False, True])
+def test_repack_pair_matches_dense_column_subset(tiered):
+    X, (pcsr, pcsc) = _random_pair()
+    if tiered:
+        pcsc = tiered_from_padded(pcsc, max(1, pcsc.indices.shape[1] // 2))
+    rng = np.random.default_rng(7)
+    keep = rng.random(X.shape[1]) < 0.5
+    keep[:3] = True                       # keep a deterministic prefix
+    sel = np.flatnonzero(keep)
+    p2, q2 = repack_pair(pcsr, pcsc, keep)
+    ref = X[:, sel]
+    assert p2.shape == (X.shape[0], sel.size)
+    np.testing.assert_array_equal(np.asarray(p2.to_dense()), ref)
+    np.testing.assert_array_equal(_csc_dense(q2), ref)
+    # pad width shrinks to the survivors' true maxima
+    assert p2.indices.shape[1] == max(1, int((ref != 0).sum(1).max()))
+    # matvec/rmatvec agree with the dense subset
+    w = np.random.default_rng(1).standard_normal(sel.size).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(p2.matvec(jnp.asarray(w))),
+                               ref @ w, rtol=1e-5, atol=1e-5)
+
+
+def test_repack_pair_retiers_wide_survivors():
+    X, (pcsr, pcsc) = _random_pair(n=60, d=30, density=0.4)
+    tiered = tiered_from_padded(pcsc, 2)   # narrow light tier, real heavy set
+    keep = np.ones(X.shape[1], bool)
+    keep[::3] = False
+    p2, q2 = repack_pair(pcsr, tiered, keep)
+    assert isinstance(q2, TieredCSC) and q2.width == 2
+    np.testing.assert_array_equal(_csc_dense(q2), X[:, np.flatnonzero(keep)])
+
+
+# ---------------------------------------------------------------------------
+# trajectory contracts
+# ---------------------------------------------------------------------------
+
+BASE = dict(lam=30.0, steps=96, chunk_steps=16, seed=3)
+
+
+def test_keep_all_rounds_are_trajectory_exact(problem, monkeypatch):
+    """A round that keeps every coordinate still repacks/rebuilds the carry
+    through the mutable-geometry path — and must not move the trajectory:
+    same coords, same gaps, same iterate as the unscreened chunked run."""
+    X, y, _ = problem
+    monkeypatch.setattr(
+        Screener, "screen",
+        lambda self, scores, support: np.ones(scores.shape[0], bool))
+    ref = solve(X, y, FWConfig(backend="jax_sparse", queue="group_argmax",
+                               **BASE))
+    res = solve(X, y, FWConfig(backend="jax_sparse", queue="group_argmax",
+                               screen_every=2, **BASE))
+    np.testing.assert_array_equal(np.asarray(res.coords),
+                                  np.asarray(ref.coords))
+    np.testing.assert_array_equal(np.asarray(res.w), np.asarray(ref.w))
+    np.testing.assert_array_equal(np.asarray(res.gaps), np.asarray(ref.gaps))
+
+
+def test_screened_coords_map_back_to_original_ids(problem):
+    """Regression: a screened solve's FWResult lives in the *original*
+    feature space — coords are original ids, w has length D₀, and the
+    support sits inside the selected coordinates."""
+    X, y, _ = problem
+    d0 = X.shape[1]
+    with obs.session() as tel:
+        res = solve(X, y, FWConfig(backend="jax_sparse",
+                                   queue="group_argmax", screen_every=1,
+                                   **BASE))
+    c = np.asarray(res.coords)
+    w = np.asarray(res.w)
+    assert w.shape == (d0,)
+    assert ((c >= -1) & (c < d0)).all()
+    assert set(np.flatnonzero(w).tolist()) <= set(c[c >= 0].tolist())
+    rounds = [e["attrs"] for e in tel.events if e["name"] == "screen.round"]
+    assert rounds, "screening never fired"
+    fired = [a for a in rounds if a["repacked"]]
+    assert fired and all(a["survivors"] < d0 for a in fired)
+    assert any(e["name"] == "chunks.respec" for e in tel.events)
+
+
+def test_private_screened_solve_is_sane(problem):
+    X, y, _ = problem
+    res = solve(X, y, FWConfig(backend="jax_sparse", queue="bsls",
+                               epsilon=4.0, delta=1e-6, screen_every=2,
+                               **BASE))
+    w = np.asarray(res.w)
+    assert w.shape == (X.shape[1],)
+    assert np.isfinite(w).all()
+    assert np.abs(w).sum() <= BASE["lam"] * (1 + 1e-5)
+    c = np.asarray(res.coords)
+    assert ((c >= -1) & (c < X.shape[1])).all()
+
+
+def test_dense_screened_solve_matches_contracts(problem):
+    X, y, _ = problem
+    d0 = X.shape[1]
+    res = solve(X, y, FWConfig(backend="dense", screen_every=2, **BASE))
+    w = np.asarray(res.w)
+    c = np.asarray(res.coords)
+    assert w.shape == (d0,) and ((c >= -1) & (c < d0)).all()
+    assert set(np.flatnonzero(w).tolist()) <= set(c[c >= 0].tolist())
+    priv = solve(X, y, FWConfig(backend="dense", selection="gumbel",
+                                epsilon=4.0, screen_every=2, **BASE))
+    assert np.isfinite(np.asarray(priv.w)).all()
+
+
+def test_screening_off_is_the_default_everywhere():
+    cfg = FWConfig()
+    assert cfg.screen_every == 0
+    assert solve_epsilon(cfg) == cfg.epsilon
+
+
+# ---------------------------------------------------------------------------
+# fit-service admission: charge + audit trail
+# ---------------------------------------------------------------------------
+
+
+def _service(problem, budget_steps=20000, epsilon=8.0):
+    from repro.serve.fit_service import FitService
+    X, y, _ = problem
+    acct = PrivacyAccountant(epsilon=epsilon, delta=1e-6,
+                             total_steps=budget_steps)
+    return FitService(X, y, accountants={"acme": acct}), acct
+
+
+def test_fit_service_charges_solve_plus_screen(problem):
+    from repro.serve.fit_service import FitRequest, FitService
+    svc, acct = _service(problem)
+    cfg = FWConfig(backend="jax_sparse", queue="bsls", epsilon=2.0,
+                   delta=1e-6, screen_every=2, **BASE)
+    svc.submit(FitRequest(uid=0, tenant="acme", config=cfg))
+    done = svc.run()
+    assert done[0].status == "done"
+    plan = screen_plan(cfg, private=True)
+    eps_step = per_step_epsilon(plan.eps_solve, cfg.delta, cfg.steps)
+    expect = max(1, math.ceil(
+        cfg.steps * (eps_step / acct.per_step) ** 2 - 1e-9))
+    expect += max(1, math.ceil(
+        plan.rounds * (plan.eps_round / acct.per_step) ** 2 - 1e-9))
+    assert acct.spent_steps == expect
+    # the screened charge exceeds the same request's unscreened charge for
+    # the solve share alone, and the ledger replays bitwise
+    assert FitService._charged_steps(
+        acct, dataclasses.replace(cfg, screen_every=0)) > expect - \
+        max(1, math.ceil(
+            plan.rounds * (plan.eps_round / acct.per_step) ** 2 - 1e-9))
+    svc.verify_ledger()
+    entry = [e for e in svc.ledger.entries if e.get("kind") == "charge"][-1]
+    assert entry["request"]["screen_every"] == 2
+    assert entry["request"]["screen_eps_frac"] == cfg.screen_eps_frac
+
+
+def test_fit_service_refuses_screening_misuse_charge_free(problem):
+    from repro.serve.fit_service import FitRequest
+    svc, acct = _service(problem)
+    bad = [
+        # engine without a mutable-geometry chunk loop
+        FWConfig(backend="host_sparse", queue="bsls", epsilon=1.0,
+                 screen_every=2, **BASE),
+        # malformed ε split
+        FWConfig(backend="jax_sparse", queue="bsls", epsilon=1.0,
+                 screen_every=2, screen_eps_frac=1.5, **BASE),
+    ]
+    for uid, cfg in enumerate(bad):
+        svc.submit(FitRequest(uid=uid, tenant="acme", config=cfg))
+    done = svc.run()
+    assert all(r.status == "rejected" for r in done)
+    assert acct.spent_steps == 0
+    svc.verify_ledger()
