@@ -1,0 +1,182 @@
+"""λ-path bench — §14 warm-started homotopy vs per-λ from-scratch solves.
+
+Two arms of the same private ``jax_sparse`` fit at **equal total ε** on a
+held-out split of each dataset twin:
+
+  * ``path``    — one ``run_path`` call over the decreasing λ-grid: the
+    first λ solves cold at the full budget, every later λ warm-starts from
+    the previous carry at the planner's warm budget, all segments re-enter
+    one compiled chunk;
+  * ``scratch`` — one independent solve per λ, each at the full budget and
+    at ε/√K, so the K solves compose to exactly the path's total ε at the
+    same uniform per-selection rate (advanced composition).
+
+Reported per dataset: steady-state wall time of each arm (both arms run
+twice, second pass timed — deterministic seeding makes the passes
+identical), the headline ``path_speedup`` ratio, and three audits:
+
+  * ``pass_utility`` — on a non-private run of the same grid, every warm
+    segment's held-out accuracy is within ``UTILITY_TOL`` of a cold solve
+    given the same iteration budget: warm-starting must not cost solution
+    quality, λ by λ, measured without DP noise in the way;
+  * ``pass_utility_dp`` — the same per-λ audit on the equal-ε private
+    arms, at the wider ``DP_UTILITY_TOL``: at twin scale N every private
+    fit sits in a ±0.05 chance band around ~0.5 held-out accuracy (so does
+    the *non-private* fit — see the committed BENCH_screening baseline),
+    and the path and scratch arms are *different* mechanisms whose chance
+    fluctuations don't cancel the way bench_screening's same-mechanism
+    arms do — the DP audit therefore only catches systematic collapse,
+    not twin-scale weather;
+  * ``pass_gap`` — every warm segment's final duality gap is no worse than
+    the cold-at-equal-budget solve's (the §14 claim: the carry is worth
+    its budget); segment 0 must also match its standalone single-λ solve
+    bit-for-bit (``pass_parity`` — the ``segment_config`` contract);
+  * ``pass_eps_split`` — the plan's per-λ ε shares all sit at the single
+    uniform per-selection rate (machine-independent accounting identity).
+
+Output: BENCH_path.json (``run.py --only path``; gated by ``check.py`` on
+``path_speedup`` ≥ 2 and the audit flags — see benchmarks/suite.py).
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import numpy as np
+
+from benchmarks.bench_screening import TRAIN_FRACTION, UTILITY_TOL, _row_split
+
+GAP_SLACK = 1.5      # warm-segment gap vs cold-at-equal-budget gap
+GAP_FLOOR = 0.05     # absolute slack when the cold gap is already tiny
+DP_UTILITY_TOL = 0.10  # twin-scale chance band (see docstring)
+# decreasing ball radii bracketing the twins' operating point (λ ≈ 30, the
+# screening bench's): big radii amplify the EM selection noise at twin N
+# (weight η·λ lands on every noisy pick), tiny radii underfit — either way
+# both arms drop to chance accuracy and the utility audit compares noise
+LAMBDAS = (50.0, 40.0, 32.0, 26.0, 21.0, 17.0)
+
+
+def _timed(fn):
+    """Steady-state wall: warm pass compiles, second pass is timed."""
+    fn()
+    t0 = time.time()
+    out = fn()
+    return out, time.time() - t0
+
+
+def _final_gaps(results):
+    return [float(r.gaps_valid[-1]) for r in results]
+
+
+def run(datasets=("rcv1", "url"), steps: int = 240, lambdas=LAMBDAS,
+        epsilon: float = 12.0, delta: float = 1e-6, chunk_steps: int = 40):
+    from benchmarks.common import accuracy_auc, load_problem
+    from repro.core.dp.accountant import per_step_epsilon
+    from repro.core.solvers import FWConfig, get_backend
+    from repro.core.solvers.path import path_plan, run_path, segment_config
+    from repro.core.solvers.registry import resolve_queue
+
+    lambdas = tuple(lambdas)
+    k_lams = len(lambdas)
+    # ε/√K per scratch solve ⇒ per_step_epsilon(ε/√K, δ, T) =
+    # per_step_epsilon(ε, δ, K·T): the K solves compose to the path's total
+    # ε at the same uniform rate — the comparison is ε-fair by construction
+    eps_scratch = epsilon / math.sqrt(k_lams)
+    out = {"steps": steps, "lambdas": list(lambdas), "epsilon": epsilon,
+           "delta": delta, "chunk_steps": chunk_steps, "datasets": {}}
+    backend = get_backend("jax_sparse")
+    for name in datasets:
+        prob = load_problem(name)
+        n, d = prob.X.shape
+        n_train = int(n * TRAIN_FRACTION)
+        X_train, X_test = _row_split(prob.X, n_train)
+        y_train, y_test = prob.y[:n_train], prob.y[n_train:]
+        data = backend.prepare(X_train)
+
+        path_cfg = resolve_queue(backend, FWConfig(
+            backend="jax_sparse", queue="bsls", lam=lambdas[0], steps=steps,
+            epsilon=epsilon, delta=delta, chunk_steps=chunk_steps,
+            lambdas=lambdas))
+        plan = path_plan(path_cfg, private=True)
+        scratch_cfgs = [resolve_queue(backend, FWConfig(
+            backend="jax_sparse", queue="bsls", lam=lam, steps=steps,
+            epsilon=eps_scratch, delta=delta, chunk_steps=chunk_steps))
+            for lam in lambdas]
+
+        # --- timed private arms at equal total ε --------------------------
+        path_res, t_path = _timed(
+            lambda: run_path(backend, data, y_train, path_cfg))
+        scratch_res, t_scratch = _timed(
+            lambda: [backend.fn(data, y_train, c) for c in scratch_cfgs])
+
+        # --- gap + utility audit: non-private grid vs cold at equal budgets
+        np_cfg = resolve_queue(backend, FWConfig(
+            backend="jax_sparse", queue="group_argmax", lam=lambdas[0],
+            steps=steps, chunk_steps=chunk_steps, lambdas=lambdas))
+        np_path = run_path(backend, data, y_train, np_cfg)
+        cold = [backend.fn(data, y_train, segment_config(np_cfg,
+                                                         np_path.plan, k))
+                for k in range(k_lams)]
+        gap_warm, gap_cold = _final_gaps(np_path), _final_gaps(cold)
+        pass_gap = bool(all(
+            gw <= max(GAP_SLACK * gc, GAP_FLOOR)
+            for gw, gc in zip(gap_warm, gap_cold)))
+        pass_parity = bool(np.array_equal(np.asarray(np_path[0].w),
+                                          np.asarray(cold[0].w)))
+        accs_warm = [accuracy_auc(X_test, y_test, np.asarray(r.w))[0]
+                     for r in np_path]
+        accs_cold = [accuracy_auc(X_test, y_test, np.asarray(r.w))[0]
+                     for r in cold]
+        pass_utility = bool(all(
+            aw >= ac - UTILITY_TOL
+            for aw, ac in zip(accs_warm, accs_cold)))
+
+        # --- utility + accounting audits on the private arms --------------
+        accs_path = [accuracy_auc(X_test, y_test, np.asarray(r.w))[0]
+                     for r in path_res]
+        accs_scr = [accuracy_auc(X_test, y_test, np.asarray(r.w))[0]
+                    for r in scratch_res]
+        pass_utility_dp = bool(all(
+            ap >= asc - DP_UTILITY_TOL
+            for ap, asc in zip(accs_path, accs_scr)))
+        pass_eps_split = bool(all(
+            abs(per_step_epsilon(e, delta, b) - plan.eps_per_step)
+            <= 1e-9 * plan.eps_per_step
+            for e, b in zip(plan.eps_lambdas, plan.budgets)))
+
+        row = {
+            "n": n, "d": d, "train_rows": n_train, "n_lambdas": k_lams,
+            "steps_path": plan.total_steps, "steps_scratch": k_lams * steps,
+            "seconds_path": round(t_path, 3),
+            "seconds_scratch": round(t_scratch, 3),
+            "path_speedup": round(t_scratch / max(t_path, 1e-9), 2),
+            "per_lambda": [
+                {"lam": lam, "budget": plan.budgets[k],
+                 "eps_lambda": round(plan.eps_lambdas[k], 4),
+                 "acc_path": round(accs_path[k], 4),
+                 "acc_scratch": round(accs_scr[k], 4),
+                 "acc_warm": round(accs_warm[k], 4),
+                 "acc_cold": round(accs_cold[k], 4),
+                 "gap_warm": round(gap_warm[k], 4),
+                 "gap_cold": round(gap_cold[k], 4),
+                 "nnz_path": int(path_res[k].nnz)}
+                for k, lam in enumerate(lambdas)],
+            "pass_utility": pass_utility,
+            "pass_utility_dp": pass_utility_dp,
+            "pass_gap": pass_gap,
+            "pass_parity": pass_parity,
+            "pass_eps_split": pass_eps_split,
+        }
+        out["datasets"][name] = row
+        print(f"[path] {name}: path {row['seconds_path']}s "
+              f"({plan.total_steps} steps), scratch "
+              f"{row['seconds_scratch']}s ({k_lams * steps} steps) → "
+              f"{row['path_speedup']}x  utility={pass_utility} "
+              f"dp={pass_utility_dp} gap={pass_gap} parity={pass_parity} "
+              f"eps={pass_eps_split}", flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

@@ -38,46 +38,14 @@ from typing import List, Optional
 
 BASELINE_DIR = pathlib.Path(__file__).parent / "baselines"
 
-# rule kinds: ("flags",) | ("min"|"max", metric, bound)
+# Gated artifacts and their rules come from the one suite registry shared
+# with run.py (benchmarks/suite.py) — adding a bench there with a ``gate``
+# wires it into both the runner and this gate, so they cannot drift.
+# Rule kinds: ("flags",) | ("min"|"max", metric, bound)
 #           | ("rel_min"|"rel_max", metric, factor)   [skipped in full mode]
-SPEC = {
-    "BENCH_sweep.json": [
-        ("flags",),
-        # the tentpole invariant: gap-adaptive batched scheduling must beat
-        # the fixed-T sequential loop on every dataset
-        ("min", "sweep_speedup", 1.0),
-        ("rel_min", "sweep_speedup", 0.5),
-    ],
-    "BENCH_shard.json": [
-        ("flags",),
-        # jax_shard per-iter cost relative to jax_sparse on the 1×1 CPU mesh
-        # (lower is better; ratio of same-run timings)
-        ("rel_max", "shard_over_sparse", 3.0),
-    ],
-    "BENCH_autotune.json": [
-        ("flags",),              # pass_tuned_parity: bitwise, never a timing
-        # the §11 search must never pick a layout slower than the flat
-        # default, and on the power-law text regimes it must find a real
-        # win (ISSUE-7 acceptance: ≤ 0.8× default per-iter on rcv1)
-        ("max", "tuned_over_default", 0.8),
-        ("min", "tuned_speedup", 1.0),
-        ("rel_min", "tuned_speedup", 0.5),
-    ],
-    "BENCH_ingest.json": [
-        ("flags",),
-        # warm store opens must keep skipping the setup sweep
-        ("min", "warm_setup_speedup", 2.0),
-        ("rel_min", "warm_setup_speedup", 0.25),
-    ],
-    "BENCH_screening.json": [
-        ("flags",),              # pass_utility (equal-ε accuracy audit)
-                                 # + pass_coords (original-index contract)
-        # the §13 tentpole invariant: mid-solve screening must make the
-        # end-to-end private solve ≥ 1.5× faster at equal total ε
-        ("min", "screen_speedup", 1.5),
-        ("rel_min", "screen_speedup", 0.5),
-    ],
-}
+from benchmarks.suite import gate_spec  # noqa: E402
+
+SPEC = gate_spec()
 
 
 def _rows(doc: dict):

@@ -9,15 +9,23 @@
   (store)  bench_ingest        dataset-store ingest + cold/warm prepare
   (shard)  bench_shard         jax_sparse vs jax_shard + step-parity audit
   (§11)    bench_autotune      layout/chunk autotuner gains + parity gate
+  (§13)    bench_screening     DP iterative screening vs plain chunked solve
+  (§14)    bench_path          warm λ-path vs per-λ from-scratch solves
   §Roofline roofline_table     three-term model from dryrun_results.json
+
+The suite itself — names, runners, perf-gate rules — lives in
+``benchmarks.suite`` (shared with ``check.py``, so ``--only`` and the gate
+can never drift apart again).
 
 ``python -m benchmarks.run [--fast] [--only NAME] [--backend B]`` — results
 to BENCH_<name>.json per bench + aggregate bench_results.json + stdout
-summary.  The whole run executes under a ``repro.obs`` telemetry session:
-solver spans, planner drift and cache counters land in
-``BENCH_telemetry.jsonl`` next to the result JSONs (render with
-``python -m repro.obs.report BENCH_telemetry.jsonl``).  ``--backend`` retargets the Alg-2 side of the registry-aware
-benches (fig1 convergence, table4 accuracy) onto any engine from
+summary.  ``--only`` is a substring filter over ``suite.names()`` and
+rejects a filter that matches nothing.  The whole run executes under a
+``repro.obs`` telemetry session: solver spans, planner drift and cache
+counters land in ``BENCH_telemetry.jsonl`` next to the result JSONs (render
+with ``python -m repro.obs.report BENCH_telemetry.jsonl``).  ``--backend``
+retargets the Alg-2 side of the registry-aware benches (fig1 convergence,
+table4 accuracy) onto any engine from
 ``repro.core.solvers.available_backends()``; the FLOP/heap-audit benches are
 pinned to the host engine (see docs/BENCHMARKS.md).
 """
@@ -30,9 +38,13 @@ import traceback
 
 
 def main():
+    from benchmarks.suite import SUITE, names
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="fewer steps/datasets")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="substring filter over the suite names: "
+                         + ", ".join(names()))
     ap.add_argument("--out", default="bench_results.json")
     ap.add_argument("--dryrun-json", default="dryrun_results.json")
     ap.add_argument("--backend", default=None,
@@ -42,72 +54,30 @@ def main():
                          "engine with a batched fast path)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_accuracy, bench_autotune, bench_convergence,
-                            bench_flops, bench_heap_pops, bench_ingest,
-                            bench_scaling, bench_screening, bench_shard,
-                            bench_speedup, bench_sweep, roofline_table)
     from repro.core.solvers import available_backends
 
     if args.backend is not None and args.backend not in available_backends():
         ap.error(f"--backend {args.backend!r} not in {available_backends()}")
-    alg2_backend = args.backend or "host_sparse"
+    if args.only and not any(args.only in n for n in names()):
+        ap.error(f"--only {args.only!r} matches no bench; choose a "
+                 f"substring of: {', '.join(names())}")
 
     fast = args.fast
-    suite = {
-        "fig1_convergence": lambda: bench_convergence.run(
-            datasets=("rcv1",) if fast else ("rcv1", "news20"),
-            steps=150 if fast else 300, backend=alg2_backend),
-        "fig2_4_flops": lambda: bench_flops.run(
-            datasets=("rcv1",) if fast else ("rcv1", "news20", "kdda"),
-            steps=150 if fast else 300),
-        "fig3_heap_pops": lambda: bench_heap_pops.run(
-            datasets=("rcv1",) if fast else ("rcv1", "url"),
-            steps=200 if fast else 400),
-        "table3_speedup": lambda: bench_speedup.run(
-            datasets=("rcv1", "url") if fast else
-            ("rcv1", "news20", "url", "web", "kdda"),
-            steps=100 if fast else 200),
-        "table4_accuracy": lambda: bench_accuracy.run(
-            datasets=("rcv1",) if fast else ("rcv1", "news20", "url"),
-            steps=800 if fast else 2000, backend=alg2_backend),
-        "sweep": lambda: bench_sweep.run(
-            datasets=("rcv1", "news20", ("rcv1", "huber")),
-            lams=(10.0, 20.0, 40.0, 80.0), epsilons=(0.5, 2.0),
-            steps=40 if fast else 120,
-            backend=args.backend or "jax_sparse"),
-        "shard": lambda: bench_shard.run(
-            datasets=("rcv1",) if fast else ("rcv1", "news20"),
-            steps=30 if fast else 80),
-        "autotune": lambda: bench_autotune.run(
-            datasets=("rcv1",) if fast else ("rcv1", "news20"),
-            steps=20 if fast else 40),
-        "screening": lambda: bench_screening.run(
-            datasets=("rcv1",) if fast else ("rcv1", "url"),
-            steps=240 if fast else 320),
-        "ingest": lambda: bench_ingest.run(
-            datasets=("rcv1_like",) if fast else
-            ("rcv1_like", "url_small_like"),
-            steps=30 if fast else 80,
-            backend=args.backend or "jax_sparse"),
-        "scaling_beyond": lambda: bench_scaling.run(
-            d_values=(10_000, 100_000) if fast else
-            (10_000, 100_000, 400_000, 800_000),
-            steps=100 if fast else 150),
-        "roofline": lambda: roofline_table.run(args.dryrun_json),
-    }
     from repro import obs
     results, failures = {}, []
     with obs.session(jsonl_path="BENCH_telemetry.jsonl",
                      meta={"harness": "benchmarks.run",
                            "fast": fast, "only": args.only or ""}):
-        for name, fn in suite.items():
+        for spec in SUITE:
+            name = spec.name
             if args.only and args.only not in name:
                 continue
             t0 = time.time()
             print(f"[bench] {name} ...", flush=True)
             try:
                 with obs.span("bench", bench=name):
-                    results[name] = fn()
+                    results[name] = spec.run(fast, args.backend,
+                                             args.dryrun_json)
                 results[name]["bench_seconds"] = round(time.time() - t0, 1)
                 with open(f"BENCH_{name}.json", "w") as f:
                     json.dump(results[name], f, indent=1)
@@ -135,7 +105,8 @@ def main():
                                     "ingest_s", "warm_setup_speedup",
                                     "shard_over_sparse", "block_waste",
                                     "tuned_over_default", "tuned_speedup",
-                                    "screen_speedup", "selected_coords")
+                                    "screen_speedup", "selected_coords",
+                                    "path_speedup")
                         if k in row]
                 kv = {k: row[k] for k in keys}
                 for eps_k in ("eps_1.0", "eps_0.1"):

@@ -1,4 +1,7 @@
-"""Enc-dec (seamless-m4t) serving: encoder prefill fills the cross-attention
+"""NOTE: LM-scale serving scaffolding — not part of the DP-LASSO
+reproduction (see README "Examples" and docs/API.md for the paper surface).
+
+Enc-dec (seamless-m4t) serving: encoder prefill fills the cross-attention
 K/V cache, then batched greedy decoding — speech-to-text-style inference.
 
     PYTHONPATH=src python examples/serve_encdec.py

@@ -1,4 +1,7 @@
-"""Batched serving example: continuous batching with mixed prompt lengths,
+"""NOTE: LM-scale serving scaffolding — not part of the DP-LASSO
+reproduction (see README "Examples" and docs/API.md for the paper surface).
+
+Batched serving example: continuous batching with mixed prompt lengths,
 slot reuse and latency stats — plus a greedy-determinism self-check.
 
     PYTHONPATH=src python examples/serve_lm.py [--arch falcon-mamba-7b]

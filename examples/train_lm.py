@@ -1,4 +1,7 @@
-"""End-to-end driver (deliverable b): train a ~100M-parameter LM for a few
+"""NOTE: LM-scale training scaffolding — not part of the DP-LASSO
+reproduction (see README "Examples" and docs/API.md for the paper surface).
+
+End-to-end driver (deliverable b): train a ~100M-parameter LM for a few
 hundred steps on the synthetic markov stream, with checkpoint/restart.
 
     PYTHONPATH=src python examples/train_lm.py [--steps 300]

@@ -26,9 +26,18 @@ stop any backend early on the duality-gap certificate (surfaced as
 ``FWResult.stop_step``/``stop_reason``), sweeps retire converged configs
 between chunks, and ``solvers.planner`` picks backend + execution mode from
 a roofline cost model (``backend="auto"``, ``solve_many(plan=...)``).
+
+Regularization paths (DESIGN.md §14): a strictly decreasing λ-sequence
+solves as one warm-started homotopy run for roughly one solve's cost —
+``solve_path(X, y, lambdas=(80., 40., 20.), config=cfg)`` (equivalently
+``FWConfig(lambdas=...)`` through ``solve``/``solve_many``/``FitService``)
+returns a ``PathResult`` of per-λ ``FWResult``s with gap certificates and
+a deterministic up-front ε split across the path.
 """
 from repro.core.solvers.batched import grid, solve_many  # noqa: F401
 from repro.core.solvers.config import FWConfig, FWResult  # noqa: F401
+from repro.core.solvers.path import (PathPlan, PathResult,  # noqa: F401
+                                     check_path_config, path_plan, solve_path)
 from repro.core.solvers.planner import SolvePlan, plan_for  # noqa: F401
 from repro.core.solvers.registry import (QUEUE_ALIASES, Backend,  # noqa: F401
                                          available_backends, backend_doc,

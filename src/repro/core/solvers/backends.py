@@ -43,7 +43,7 @@ def _normalize_stop(res: FWResult, config: FWConfig) -> FWResult:
 
 
 @register("dense", data_format="dense", queues=QUEUE_ALIASES["selection"],
-          default_queue=None, supports_screening=True,
+          default_queue=None, supports_screening=True, supports_path=True,
           doc="Alg 1 baseline: dense-work FW (O(nnz + D)/iter), device scan")
 def _dense_backend(data, y, config: FWConfig) -> FWResult:
     from repro.core.fw_dense import (dense_fw_jit, dense_fw_screened,
@@ -104,6 +104,7 @@ def _jax_shard_backend(data, y, config: FWConfig) -> FWResult:
 
 @register("jax_sparse", data_format="padded", queues=QUEUE_ALIASES["device"],
           default_queue="group_argmax", supports_screening=True,
+          supports_path=True,
           doc="Alg 2 device scan through the Pallas kernels "
               "(spmv + coord_update + bsls_draw)")
 def _jax_sparse_backend(data, y, config: FWConfig) -> FWResult:

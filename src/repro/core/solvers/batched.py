@@ -65,7 +65,8 @@ from repro.core.solvers.config import (STOP_GAP_TOL, STOP_MAX_SECONDS,
                                        STOP_MAX_STEPS, FWConfig, FWResult,
                                        check_gap_certificate)
 from repro.core.solvers.planner import SolvePlan, record_cost
-from repro.core.solvers.registry import (check_screening_support, get_backend,
+from repro.core.solvers.registry import (check_path_support,
+                                         check_screening_support, get_backend,
                                          resolve_data, resolve_queue)
 
 # FWConfig fields that must agree within one vmapped sweep group: they are
@@ -76,9 +77,13 @@ from repro.core.solvers.registry import (check_screening_support, get_backend,
 # are group fields because a fired screen changes the problem *shape*: two
 # screened members diverge to different widths (DP noise makes survivor sets
 # seed-dependent), so a screened group can never be lane-stacked and must
-# not mix with unscreened members.
+# not mix with unscreened members.  ``lambdas`` (§14) is a group field
+# because a λ-path is a different *control flow* — sequential-in-λ segments
+# through shared global step slots — and only identical paths can share the
+# fused-across-tenants schedule.
 GROUP_FIELDS = ("backend", "steps", "queue", "loss", "selection", "interpret",
-                "mesh", "chunk_steps", "screen_every", "screen_eps_frac")
+                "mesh", "chunk_steps", "screen_every", "screen_eps_frac",
+                "lambdas")
 
 
 def grid(base: FWConfig | None = None, **axes) -> Tuple[FWConfig, ...]:
@@ -98,16 +103,22 @@ def grid(base: FWConfig | None = None, **axes) -> Tuple[FWConfig, ...]:
     def _scalar(k, v):
         if isinstance(v, str) or not isinstance(v, Iterable):
             return True
-        # one mesh spec (a tuple of ints) is a value, not a sweep axis; a
-        # sequence of tuples sweeps meshes
-        return k == "mesh" and bool(v) and all(isinstance(x, int) for x in v)
+        # one mesh spec (a tuple of ints) / one λ-path (a sequence of
+        # numbers) is a value, not a sweep axis; a sequence of tuples
+        # sweeps meshes/paths
+        if k == "mesh":
+            return bool(v) and all(isinstance(x, int) for x in v)
+        if k == "lambdas":
+            return bool(v) and all(isinstance(x, (int, float)) for x in v)
+        return False
 
-    # mesh specs normalize to tuples (FWConfig.mesh must stay hashable for
-    # solve_many/FitService grouping even when the caller wrote a list)
-    fixed = {k: tuple(v) if k == "mesh" and _scalar(k, v) and v is not None
-             else v
+    # mesh/lambdas specs normalize to tuples (both FWConfig fields must stay
+    # hashable for solve_many/FitService grouping even when the caller wrote
+    # a list)
+    fixed = {k: tuple(v) if k in ("mesh", "lambdas") and _scalar(k, v)
+             and v is not None else v
              for k, v in axes.items() if _scalar(k, v)}
-    sweep = {k: tuple(tuple(x) if k == "mesh" else x for x in v)
+    sweep = {k: tuple(tuple(x) if k in ("mesh", "lambdas") else x for x in v)
              for k, v in axes.items() if k not in fixed}
     unknown = set(axes) - {f.name for f in dataclasses.fields(FWConfig)}
     if unknown:
@@ -375,6 +386,135 @@ def _solve_jax_sparse_group_cohort(
 
 
 # ---------------------------------------------------------------------------
+# λ-path groups (§14): sequential-in-λ, fused-across-tenants
+# ---------------------------------------------------------------------------
+
+
+def _solve_jax_sparse_path_group_sequential(
+    data, y, configs: Sequence[FWConfig]
+) -> List:
+    """Per-config warm-started path drivers over one shared coercion +
+    setup (each re-enters the same compiled chunk program anyway)."""
+    from repro.core.solvers.path import jax_sparse_path
+    pcsr, pcsc, setup, _ = _group_context(data, y, configs)
+    y32 = jnp.asarray(y, jnp.float32)
+    return [jax_sparse_path(pcsr, pcsc, y32, cfg, setup=setup)
+            for cfg in configs]
+
+
+def _solve_jax_sparse_path_group_fused(
+    data, y, configs: Sequence[FWConfig]
+) -> List:
+    """Fused-across-tenants λ-path: every lane advances through the *same*
+    fixed global step slots (segment k occupies [S_{k-1}, S_k) whether or
+    not its certificate landed early — frozen lanes are bit-frozen no-ops),
+    so one vmapped chunk program drives the whole group and the per-lane
+    trajectories are bit-identical to the sequential path driver's.
+
+    λ-paths are a GROUP_FIELDS member, so every lane shares lambdas /
+    steps / budgets; ε (hence the EM scale), seed, and gap_tol stack.
+    """
+    from repro.core.solvers.jax_sparse import fw_carry_init
+    from repro.core.solvers.path import PathResult, path_em_scale, path_plan
+    from repro.core.solvers.stopping import resolve_chunk
+    c0 = configs[0]
+    pcsr, pcsc, setup, sc = _group_context(data, y, configs)
+    stats = _group_stats(pcsr, pcsc)
+    platform = jax.devices()[0].platform
+    private = c0.queue == "two_level"
+    fused = True
+    y_scan = _group_labels(c0, y)
+    n_cfg = len(configs)
+    n, d = pcsr.shape
+    dtype = pcsr.values.dtype
+    plans = [path_plan(c, private=private) for c in configs]
+    plan0 = plans[0]   # lambdas/steps are group fields → same budgets/offsets
+    em_scales = jnp.asarray(
+        [path_em_scale(c, p, n) for c, p in zip(configs, plans)], dtype)
+
+    init = jax.jit(jax.vmap(
+        lambda s, k: fw_carry_init(d, dtype, *setup, s, k, private=private)))
+    cur = init(em_scales, sc["keys"])                # stacked FWCarry
+    buf_dtype = np.asarray(sc["lams"]).dtype
+    per_cfg: List[List[FWResult]] = [[] for _ in configs]
+
+    for k, lam_k in enumerate(plan0.lambdas):
+        budget, seg_off = plan0.budgets[k], plan0.offsets[k]
+        if k:
+            # warm restart per lane: un-freeze stopping flags, keep the rest
+            cur = cur._replace(done=jnp.zeros(n_cfg, bool),
+                               stop_at=jnp.zeros(n_cfg, jnp.int32))
+        lams = jnp.full((n_cfg,), lam_k, dtype)
+        chunk = resolve_chunk(dataclasses.replace(c0, steps=budget))
+        gaps_buf = np.zeros((n_cfg, budget), buf_dtype)
+        coords_buf = np.full((n_cfg, budget), -1, np.int32)
+        t0 = 0
+        while t0 < budget:
+            c = min(chunk, budget - t0)
+            tw = time.perf_counter()
+            cur, (g, j) = _cohort_chunk_jit(
+                pcsr, pcsc, cur, lams, em_scales, sc["gap_tols"],
+                seg_off + t0, y_scan, steps=c, loss=c0.loss, private=private,
+                fused=fused, interpret=c0.interpret)
+            jax.block_until_ready(g)
+            record_cost(c0.backend, "vmap", platform, stats,
+                        (time.perf_counter() - tw) / (c * n_cfg),
+                        loss=c0.loss)
+            gaps_buf[:, t0:t0 + c] = np.asarray(g)
+            coords_buf[:, t0:t0 + c] = np.asarray(j)
+            t0 += c
+            if bool(np.asarray(cur.done).all()):
+                break    # remaining slots stay sentinel-padded, as the
+                         # sequential driver's assemble_outputs would
+        dones, stops = np.asarray(cur.done), np.asarray(cur.stop_at)
+        for i in range(n_cfg):
+            done_i = bool(dones[i])
+            stop = int(stops[i]) - seg_off if done_i else budget
+            w = cur.w[i] * cur.w_m[i]
+            per_cfg[i].append(FWResult(
+                w=w, gaps=jnp.asarray(gaps_buf[i]),
+                coords=jnp.asarray(coords_buf[i]),
+                losses=jnp.zeros((budget,), w.dtype), stop_step=stop,
+                stop_reason=STOP_GAP_TOL if done_i else STOP_MAX_STEPS))
+        if obs.enabled():
+            obs.event("path.lambda", index=k, lam=float(lam_k),
+                      budget=budget, offset=seg_off, lanes=n_cfg,
+                      converged=int(dones.sum()))
+    return [PathResult(plans[i].lambdas, per_cfg[i], plans[i])
+            for i in range(n_cfg)]
+
+
+def _run_path_group(backend, data, y, member_cfgs: Sequence[FWConfig],
+                    plan: SolvePlan) -> List:
+    """Dispatch one λ-path sweep group (§14).
+
+    A path is sequential-in-λ by construction; across tenants it runs fused
+    (one vmapped chunk program through shared global step slots) or
+    sequential, per the same §9 mode machinery as plain sweep groups.
+    """
+    from repro.core.solvers.path import run_path
+    if backend.name == "jax_sparse" and len(member_cfgs) > 1:
+        mode = plan.mode
+        if mode == "auto":
+            from repro.core.solvers.planner import group_mode
+            pcsr = (data.pcsr if hasattr(data, "pcsr") else data[0])
+            pcsc = (data.pcsc if hasattr(data, "pcsc") else data[1])
+            mode = group_mode(_group_stats(pcsr, pcsc), len(member_cfgs),
+                              loss=member_cfgs[0].loss,
+                              backend=member_cfgs[0].backend)
+        if mode == "vmap":
+            with obs.span("group.path", size=len(member_cfgs), mode="fused"):
+                return _solve_jax_sparse_path_group_fused(data, y,
+                                                          member_cfgs)
+        with obs.span("group.path", size=len(member_cfgs),
+                      mode="sequential"):
+            return _solve_jax_sparse_path_group_sequential(data, y,
+                                                           member_cfgs)
+    with obs.span("group.path", size=len(member_cfgs), mode="sequential"):
+        return [run_path(backend, data, y, cfg) for cfg in member_cfgs]
+
+
+# ---------------------------------------------------------------------------
 # solve_many
 # ---------------------------------------------------------------------------
 
@@ -454,6 +594,10 @@ def solve_many(X, y=None, configs: Sequence[FWConfig] = (), *,
     ``prepared`` is an optional caller-owned ``{data_format: coerced X}``
     cache: pass the same dict across calls (the fit service does, per
     drain) and each layout is coerced exactly once per service lifetime.
+
+    Configs with ``lambdas`` set (§14 λ-paths) yield a ``PathResult`` at
+    their position instead of an ``FWResult``; identical paths group and
+    run fused across tenants where the planner allows.
     """
     configs = list(configs)
     if not configs:
@@ -475,8 +619,12 @@ def solve_many(X, y=None, configs: Sequence[FWConfig] = (), *,
             if c.screen_every:
                 from repro.core.solvers.screening import check_screen_config
                 check_screen_config(c)
+            if c.lambdas is not None:
+                from repro.core.solvers.path import check_path_config
+                check_path_config(c)
             backend = get_backend(c.backend)
             check_screening_support(backend, c)
+            check_path_support(backend, c)
             resolved.append((backend, resolve_queue(backend, c)))
 
         if prepared is None:
@@ -499,7 +647,12 @@ def solve_many(X, y=None, configs: Sequence[FWConfig] = (), *,
             member_cfgs = [resolved[i][1] for i in members]
             with obs.span("solve_many.group", backend=backend.name,
                           size=len(members)):
-                if backend.name == "jax_sparse" and len(members) > 1:
+                if member_cfgs[0].lambdas is not None:
+                    # §14: λ-path groups get their own sequential-in-λ /
+                    # fused-across-tenants schedule (and return PathResults)
+                    out = _run_path_group(backend, data, y, member_cfgs,
+                                          plan)
+                elif backend.name == "jax_sparse" and len(members) > 1:
                     out = _run_jax_sparse_group(data, y, member_cfgs, plan)
                 elif backend.name == "jax_shard" and len(members) > 1:
                     from repro.core.solvers.jax_shard import solve_shard_group

@@ -89,6 +89,24 @@ class FWConfig:
     # the EM draws — see screening.screen_plan.  Ignored while screening is
     # off or for non-private runs (which screen noise-free, charge-free).
     screen_eps_frac: float = 0.25
+    # Regularization path — homotopy solving (DESIGN.md §14).  A strictly
+    # decreasing λ-sequence turns the config into one warm-started path
+    # solve: each λ continues from the previous λ's iterate/active set
+    # inside the same compiled chunk program (``solve_path``; ``lam`` is
+    # ignored).  ``steps`` is the first λ's cold budget; later λs get the
+    # planner's warm fraction (``planner.path_budgets``), and for private
+    # runs ``epsilon`` is split across the whole path at one uniform
+    # advanced-composition rate (``path.path_plan``), charged up-front at
+    # fit-service admission.  None (the default) keeps this an ordinary
+    # single-λ config and changes nothing.
+    lambdas: Optional[Tuple[float, ...]] = None
+
+    def __post_init__(self):
+        # normalize any λ-sequence to a tuple of floats: the config must stay
+        # hashable (jit-static, sweep-group key) even when callers pass lists
+        if self.lambdas is not None:
+            object.__setattr__(self, "lambdas",
+                               tuple(float(l) for l in self.lambdas))
 
     def loss_fn(self) -> Loss:
         return get_loss(self.loss)

@@ -313,6 +313,29 @@ def default_chunk(steps: int) -> int:
     return max(1, min(max(8, steps // 8), 256, steps))
 
 
+# Warm λ-segments of a homotopy path re-solve from the previous λ's iterate,
+# so they need only a fraction of the cold budget; steps/4 keeps the warm
+# budget comfortably above the observed continuation cost on the benchmark
+# twins while making a K-λ path cost ~(1 + (K-1)/4)·T instead of K·T.
+PATH_WARM_DIV = 4
+
+
+def path_budgets(steps: int, n_lambdas: int) -> Tuple[int, ...]:
+    """Planner-predicted per-λ iteration budgets for a warm-started path.
+
+    The first λ solves cold at the config's full ``steps`` budget; every
+    later λ continues from the previous solution and gets the warm fraction
+    (``steps // PATH_WARM_DIV``, clamped to [8, steps]).  Deterministic and
+    shape-free by design: fit-service admission must price the exact same
+    budgets the drivers later run (DESIGN.md §14).
+    """
+    if n_lambdas <= 0:
+        return ()
+    steps = int(steps)
+    warm = max(1, min(steps, max(8, steps // PATH_WARM_DIV)))
+    return (steps,) + (warm,) * (n_lambdas - 1)
+
+
 def cohort_widths(width: int) -> Tuple[int, ...]:
     """Allowed vmap-cohort widths: powers of two down from the grid size.
     Retiring converged configs re-enters the next bucket instead of

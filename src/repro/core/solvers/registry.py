@@ -52,6 +52,10 @@ class Backend:
     # mutable geometry; engines without one refuse screen_every up front
     # (again so admission can reject charge-free).
     supports_screening: bool = False
+    # §14: warm-started λ-path (homotopy) solving needs a re-enterable
+    # chunked driver whose carry survives across λ segments; engines
+    # without one refuse FWConfig.lambdas up front (charge-free).
+    supports_path: bool = False
 
     def prepare(self, X):
         """Coerce ``X`` into this backend's data layout (what solve() does
@@ -97,7 +101,8 @@ QUEUE_ALIASES: Mapping[str, Mapping[str, str]] = {
 def register(name: str, *, data_format: str, queues: Mapping[str, str],
              default_queue: Optional[str], doc: str = "",
              supports_max_seconds: bool = True,
-             supports_screening: bool = False) -> Callable:
+             supports_screening: bool = False,
+             supports_path: bool = False) -> Callable:
     """Decorator: add ``fn(data, y, config) -> FWResult`` under ``name``."""
 
     def deco(fn: Callable) -> Callable:
@@ -105,7 +110,8 @@ def register(name: str, *, data_format: str, queues: Mapping[str, str],
                                   queues=queues, default_queue=default_queue,
                                   doc=doc,
                                   supports_max_seconds=supports_max_seconds,
-                                  supports_screening=supports_screening)
+                                  supports_screening=supports_screening,
+                                  supports_path=supports_path)
         return fn
 
     return deco
@@ -282,6 +288,18 @@ def check_screening_support(backend: Backend, config: FWConfig) -> None:
             "backend, or set screen_every=0")
 
 
+def check_path_support(backend: Backend, config: FWConfig) -> None:
+    """Refuse ``lambdas`` on engines without a re-enterable chunked driver
+    (§14) — loudly and up front, so the fit service rejects such configs
+    before charging any DP budget."""
+    if getattr(config, "lambdas", None) is not None and not backend.supports_path:
+        raise ValueError(
+            f"backend {backend.name!r} does not support warm-started λ-path "
+            "(homotopy) solving (lambdas=...): it has no re-enterable chunked "
+            "driver that can carry the iterate across λ segments — use the "
+            "dense or jax_sparse backend, or solve each λ separately")
+
+
 def solve(X, y=None, config: Optional[FWConfig] = None,
           **overrides) -> FWResult:
     """Run the configured Frank-Wolfe backend on (X, y).
@@ -301,6 +319,12 @@ def solve(X, y=None, config: Optional[FWConfig] = None,
     config = config or FWConfig()
     if overrides:
         config = dataclasses.replace(config, **overrides)
+    if config.lambdas is not None:
+        # a λ-path config is one warm-started homotopy solve (§14); the
+        # path entry point owns validation/accounting and returns the
+        # per-λ FWResult sequence as a PathResult
+        from repro.core.solvers.path import solve_path
+        return solve_path(X, y, config=config)
     with obs.span("solve", loss=config.loss, steps=config.steps) as sp:
         check_gap_certificate(config)   # non-smooth loss + gap_tol/unknown
         if config.screen_every:

@@ -54,7 +54,8 @@ from repro.core.dp.accountant import PrivacyAccountant, per_step_epsilon
 from repro.core.solvers.batched import group_key, solve_many
 from repro.core.solvers.config import (FWConfig, FWResult,
                                        check_gap_certificate)
-from repro.core.solvers.registry import (check_screening_support, get_backend,
+from repro.core.solvers.registry import (check_path_support,
+                                         check_screening_support, get_backend,
                                          resolve_queue)
 from repro.obs.ledger import AuditLedger
 from repro.obs.metrics import quantile
@@ -233,6 +234,12 @@ class FitService:
                 from repro.core.solvers.screening import check_screen_config
                 check_screen_config(cfg)
             check_screening_support(backend, cfg)
+            # §14: malformed λ-paths and engines without a re-enterable
+            # chunked driver — same contract: refuse before any charge
+            if cfg.lambdas is not None:
+                from repro.core.solvers.path import check_path_config
+                check_path_config(cfg)
+            check_path_support(backend, cfg)
             resolved = resolve_queue(backend, cfg)
             # unknown loss -> KeyError; gap_tol on a non-smooth objective ->
             # ValueError — both refused here, before any budget is charged
@@ -281,6 +288,10 @@ class FitService:
         if cfg.screen_every:
             facts["screen_every"] = cfg.screen_every
             facts["screen_eps_frac"] = cfg.screen_eps_frac
+        if cfg.lambdas is not None:
+            # raw λ-sequence only — the derived PathPlan refuses malformed
+            # paths, and refusals must record facts without raising
+            facts["lambdas"] = [float(l) for l in cfg.lambdas]
         return facts
 
     @staticmethod
@@ -305,6 +316,17 @@ class FitService:
             raise ValueError(
                 f"request δ={cfg.delta:g} is weaker than the tenant "
                 f"accountant's δ={acct.delta:g}")
+        if cfg.lambdas is not None:
+            # §14: a path runs T_total = Σ budgets selections at the single
+            # uniform rate ε' = ε/√(8·T_total·log(1/δ)).  T·ε'² is T-free,
+            # so this prices identically to a plain solve at the same ε —
+            # kept explicit so the charge derives from the plan the drivers
+            # execute, not from a coincidence of algebra.  Screening is
+            # refused with paths at admission, so there is no rounds term.
+            from repro.core.solvers.path import path_plan
+            pplan = path_plan(cfg, private=True)
+            ratio = pplan.eps_per_step / acct.per_step
+            return max(1, math.ceil(pplan.total_steps * ratio * ratio - 1e-9))
         from repro.core.solvers.screening import screen_plan
         plan = screen_plan(cfg, private=True)
         eps_req_step = per_step_epsilon(plan.eps_solve, cfg.delta, cfg.steps)

@@ -1,0 +1,297 @@
+"""Regularization-path (homotopy) solving (DESIGN.md §14).
+
+Covers the path subsystem end to end: the planner budgets and the uniform
+per-selection ε split, config validation and charge-free refusals, the
+segment-0 bitwise parity contract with a standalone solve, fused-vs-
+sequential group parity in ``solve_many``, the dense driver, the obs trail,
+and the FitService admission charge for the composed mechanism.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.dp.accountant import PrivacyAccountant, per_step_epsilon
+from repro.core.solvers import (FWConfig, grid, solve, solve_many,
+                                solve_path)
+from repro.core.solvers.path import (PathResult, check_path_config,
+                                     path_plan, segment_config)
+from repro.core.solvers.planner import SolvePlan, path_budgets
+from repro.data.synthetic import make_sparse_classification
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_sparse_classification(n=150, d=600, nnz_per_row=10,
+                                      informative=15, seed=11)
+
+
+LAMBDAS = (40.0, 25.0, 15.0)
+BASE = dict(lam=LAMBDAS[0], steps=48, chunk_steps=16, seed=5,
+            lambdas=LAMBDAS)
+
+
+# ---------------------------------------------------------------------------
+# plan / config validation
+# ---------------------------------------------------------------------------
+
+
+def test_path_budgets_schedule():
+    # first λ solves cold at the full budget, later λs get the warm fraction
+    assert path_budgets(64, 1) == (64,)
+    assert path_budgets(64, 3) == (64, 16, 16)
+    assert path_budgets(240, 6) == (240, 60, 60, 60, 60, 60)
+    assert path_budgets(12, 2) == (12, 8)     # warm floor
+    assert path_budgets(4, 2) == (4, 4)       # floor capped at the budget
+
+
+def test_path_plan_epsilon_split():
+    cfg = FWConfig(steps=48, chunk_steps=16, epsilon=6.0, delta=1e-6,
+                   lambdas=LAMBDAS)
+    plan = path_plan(cfg, private=True)
+    assert plan.lambdas == LAMBDAS
+    assert plan.budgets == (48, 12, 12)
+    assert plan.offsets == (0, 48, 60)
+    assert plan.total_steps == 72
+    # the split's defining identity: every segment runs at the single
+    # uniform per-selection rate of the composed mechanism
+    assert plan.eps_per_step == pytest.approx(
+        per_step_epsilon(6.0, 1e-6, 72))
+    for eps_k, t_k in zip(plan.eps_lambdas, plan.budgets):
+        assert per_step_epsilon(eps_k, 1e-6, t_k) == pytest.approx(
+            plan.eps_per_step)
+    # ε_k = ε·√(T_k/T) ⇒ the shares compose back to exactly ε
+    assert math.sqrt(sum(e * e for e in plan.eps_lambdas)) == \
+        pytest.approx(6.0)
+    # non-private plans price nothing and keep the full ε per segment
+    np_plan = path_plan(cfg, private=False)
+    assert np_plan.eps_per_step == 0.0
+    assert np_plan.eps_lambdas == (6.0, 6.0, 6.0)
+    assert np_plan.budgets == plan.budgets
+
+
+def test_check_path_config_refusals():
+    check_path_config(FWConfig(lambdas=LAMBDAS))          # fine
+    with pytest.raises(ValueError, match="non-empty"):
+        check_path_config(FWConfig(lambdas=()))
+    with pytest.raises(ValueError, match="positive"):
+        check_path_config(FWConfig(lambdas=(30.0, -2.0)))
+    with pytest.raises(ValueError, match="decreasing"):
+        check_path_config(FWConfig(lambdas=(20.0, 30.0)))
+    with pytest.raises(ValueError, match="decreasing"):
+        check_path_config(FWConfig(lambdas=(30.0, 30.0)))
+    with pytest.raises(ValueError, match="screen"):
+        check_path_config(FWConfig(lambdas=LAMBDAS, screen_every=2))
+    with pytest.raises(ValueError, match="max_seconds"):
+        check_path_config(FWConfig(lambdas=LAMBDAS, max_seconds=1.0))
+
+
+def test_unsupported_backends_refuse_path(problem):
+    X, y, _ = problem
+    for backend in ("host_sparse", "jax_dense", "jax_shard"):
+        with pytest.raises(ValueError, match="path"):
+            solve(X, y, FWConfig(backend=backend, steps=8,
+                                 lambdas=LAMBDAS))
+
+
+def test_solve_path_requires_lambdas(problem):
+    X, y, _ = problem
+    with pytest.raises(ValueError, match="lambdas"):
+        solve_path(X, y, config=FWConfig(steps=8))
+
+
+def test_grid_lambdas_scalar_vs_sweep():
+    # one λ-sequence is a value (a single path), a sequence of sequences
+    # sweeps paths; lists normalize to hashable tuples
+    one = grid(FWConfig(), lambdas=[40.0, 20.0])
+    assert len(one) == 1 and one[0].lambdas == (40.0, 20.0)
+    two = grid(FWConfig(), lambdas=((40.0, 20.0), (30.0, 15.0)), seed=(0, 1))
+    assert len(two) == 4
+    assert {c.lambdas for c in two} == {(40.0, 20.0), (30.0, 15.0)}
+
+
+# ---------------------------------------------------------------------------
+# trajectory contracts (jax_sparse)
+# ---------------------------------------------------------------------------
+
+
+def test_nonprivate_path_segment0_parity_and_obs(problem):
+    """Segment 0 of a path is bit-identical to a standalone solve of
+    ``segment_config(cfg, plan, 0)`` — and the path leaves a per-λ obs
+    trail."""
+    X, y, _ = problem
+    cfg = FWConfig(backend="jax_sparse", queue="group_argmax", **BASE)
+    with obs.session() as tel:
+        path = solve_path(X, y, config=cfg)
+    assert isinstance(path, PathResult)
+    assert len(path) == len(LAMBDAS) and path.final is path[2]
+    seg0 = solve(X, y, segment_config(cfg, path.plan, 0))
+    np.testing.assert_array_equal(np.asarray(path[0].w), np.asarray(seg0.w))
+    np.testing.assert_array_equal(np.asarray(path[0].gaps),
+                                  np.asarray(seg0.gaps))
+    np.testing.assert_array_equal(np.asarray(path[0].coords),
+                                  np.asarray(seg0.coords))
+    events = [e["attrs"] for e in tel.events if e["name"] == "path.lambda"]
+    assert [e["lam"] for e in events] == list(LAMBDAS)
+    assert [e["budget"] for e in events] == list(path.plan.budgets)
+    assert [e["offset"] for e in events] == list(path.plan.offsets)
+
+
+def test_private_path_segment0_parity_and_sanity(problem):
+    """The ε split keeps one EM scale across segments, so private segment 0
+    also matches its standalone single-λ solve bit-for-bit."""
+    X, y, _ = problem
+    cfg = FWConfig(backend="jax_sparse", queue="bsls", epsilon=6.0,
+                   delta=1e-6, **BASE)
+    path = solve_path(X, y, config=cfg)
+    seg0 = solve(X, y, segment_config(cfg, path.plan, 0))
+    np.testing.assert_array_equal(np.asarray(path[0].w), np.asarray(seg0.w))
+    np.testing.assert_array_equal(np.asarray(path[0].coords),
+                                  np.asarray(seg0.coords))
+    for lam_k, res in zip(LAMBDAS, path):
+        w = np.asarray(res.w)
+        assert np.isfinite(w).all()
+        # warm iterates are convex combos of the carry and ±λ_k vertices,
+        # so no segment can leave the largest ball
+        assert np.abs(w).sum() <= LAMBDAS[0] * (1 + 1e-5)
+
+
+def test_solve_delegates_path_configs(problem):
+    X, y, _ = problem
+    cfg = FWConfig(backend="jax_sparse", queue="group_argmax", **BASE)
+    via_solve = solve(X, y, cfg)
+    direct = solve_path(X, y, config=cfg)
+    assert isinstance(via_solve, PathResult)
+    for a, b in zip(via_solve, direct):
+        np.testing.assert_array_equal(np.asarray(a.w), np.asarray(b.w))
+
+
+def test_dense_path_segment0_parity(problem):
+    X, y, _ = problem
+    cfg = FWConfig(backend="dense", **BASE)
+    path = solve_path(X, y, config=cfg)
+    assert len(path) == len(LAMBDAS)
+    seg0 = solve(X, y, segment_config(cfg, path.plan, 0))
+    np.testing.assert_array_equal(np.asarray(path[0].w), np.asarray(seg0.w))
+    np.testing.assert_array_equal(np.asarray(path[0].coords),
+                                  np.asarray(seg0.coords))
+
+
+# ---------------------------------------------------------------------------
+# solve_many: fused-across-tenants parity + mixed groups
+# ---------------------------------------------------------------------------
+
+
+def test_solve_many_fused_path_group_matches_sequential(problem):
+    """Fused lanes advance through the same fixed global step slots, so the
+    vmapped group is bit-identical to per-config path drivers."""
+    X, y, _ = problem
+    cfgs = [FWConfig(backend="jax_sparse", queue="bsls", epsilon=eps,
+                     delta=1e-6, **{**BASE, "seed": seed})
+            for eps, seed in ((4.0, 0), (8.0, 1), (6.0, 2))]
+    fused = solve_many(X, y, cfgs, plan=SolvePlan(mode="vmap"))
+    seq = [solve_path(X, y, config=c) for c in cfgs]
+    for f, s in zip(fused, seq):
+        assert isinstance(f, PathResult)
+        assert f.plan.budgets == s.plan.budgets
+        for rf, rs in zip(f, s):
+            np.testing.assert_array_equal(np.asarray(rf.w),
+                                          np.asarray(rs.w))
+            np.testing.assert_array_equal(np.asarray(rf.coords),
+                                          np.asarray(rs.coords))
+
+
+def test_solve_many_mixes_paths_and_plain_solves(problem):
+    X, y, _ = problem
+    path_cfg = FWConfig(backend="jax_sparse", queue="group_argmax", **BASE)
+    plain_cfg = FWConfig(backend="jax_sparse", queue="group_argmax",
+                         lam=25.0, steps=32, chunk_steps=16, seed=5)
+    out = solve_many(X, y, [path_cfg, plain_cfg])
+    assert isinstance(out[0], PathResult)
+    assert not isinstance(out[1], PathResult)
+    ref = solve(X, y, plain_cfg)
+    np.testing.assert_array_equal(np.asarray(out[1].w), np.asarray(ref.w))
+
+
+# ---------------------------------------------------------------------------
+# fit-service admission: charge + audit trail
+# ---------------------------------------------------------------------------
+
+
+def _service(problem, budget_steps=20000, epsilon=8.0):
+    from repro.serve.fit_service import FitService
+    X, y, _ = problem
+    acct = PrivacyAccountant(epsilon=epsilon, delta=1e-6,
+                             total_steps=budget_steps)
+    return FitService(X, y, accountants={"acme": acct}), acct
+
+
+def test_fit_service_charges_path_as_one_mechanism(problem):
+    from repro.serve.fit_service import FitRequest
+    svc, acct = _service(problem)
+    cfg = FWConfig(backend="jax_sparse", queue="bsls", epsilon=2.0,
+                   delta=1e-6, **BASE)
+    svc.submit(FitRequest(uid=0, tenant="acme", config=cfg))
+    done = svc.run()
+    assert done[0].status == "done"
+    assert isinstance(done[0].result, PathResult)
+    # the charge prices T_total selections at the path's uniform rate —
+    # not the cfg.steps of a plain solve
+    plan = path_plan(cfg, private=True)
+    expect = max(1, math.ceil(
+        plan.total_steps * (plan.eps_per_step / acct.per_step) ** 2 - 1e-9))
+    assert acct.spent_steps == expect
+    # T·(ε/√(8T·log(1/δ)))² = ε²/(8·log(1/δ)) is T-free: an ε-denominated
+    # charge is invariant to how the path splits its steps, so the path
+    # costs exactly a plain solve at the same ε — pin that identity
+    plain = max(1, math.ceil(cfg.steps * (
+        per_step_epsilon(cfg.epsilon, cfg.delta, cfg.steps)
+        / acct.per_step) ** 2 - 1e-9))
+    assert expect == plain
+    svc.verify_ledger()
+    entry = [e for e in svc.ledger.entries if e.get("kind") == "charge"][-1]
+    assert entry["request"]["lambdas"] == list(LAMBDAS)
+
+
+def test_fit_service_refuses_path_misuse_charge_free(problem):
+    from repro.serve.fit_service import FitRequest
+    svc, acct = _service(problem)
+    bad = [
+        # engine without a re-enterable chunked driver
+        FWConfig(backend="host_sparse", queue="bsls", epsilon=1.0, **BASE),
+        # malformed λ-sequence (not strictly decreasing)
+        FWConfig(backend="jax_sparse", queue="bsls", epsilon=1.0,
+                 **{**BASE, "lambdas": (15.0, 25.0)}),
+        # screening cannot compose with a path
+        FWConfig(backend="jax_sparse", queue="bsls", epsilon=1.0,
+                 screen_every=2, **BASE),
+    ]
+    for uid, cfg in enumerate(bad):
+        svc.submit(FitRequest(uid=uid, tenant="acme", config=cfg))
+    done = svc.run()
+    assert all(r.status == "rejected" for r in done)
+    assert acct.spent_steps == 0
+    svc.verify_ledger()
+    refusals = [e for e in svc.ledger.entries if e.get("kind") == "refusal"]
+    assert len(refusals) == len(bad)
+    # refusal facts still record the raw λ-sequence without raising
+    assert refusals[1]["request"]["lambdas"] == [15.0, 25.0]
+
+
+def test_path_epsilon_shares_solve_like_standalone(problem):
+    """Cross-check the whole accounting loop: charging the K segment configs
+    as independent solves costs exactly the path's single charge (the split
+    is composition-exact, not just approximately fair)."""
+    cfg = FWConfig(backend="jax_sparse", queue="bsls", epsilon=2.0,
+                   delta=1e-6, **BASE)
+    acct = PrivacyAccountant(epsilon=8.0, delta=1e-6, total_steps=20000)
+    plan = path_plan(cfg, private=True)
+    per_seg = [
+        seg.steps * (per_step_epsilon(seg.epsilon, seg.delta, seg.steps)
+                     / acct.per_step) ** 2
+        for seg in (segment_config(cfg, plan, k)
+                    for k in range(len(plan.lambdas)))]
+    whole = plan.total_steps * (plan.eps_per_step / acct.per_step) ** 2
+    assert sum(per_seg) == pytest.approx(whole)

@@ -1,0 +1,74 @@
+"""Execute every fenced ```python snippet in the given markdown files.
+
+CI's docs job runs this over README.md and docs/API.md so the documented
+code paths cannot silently rot: a snippet that raises fails the build.
+Snippets within one file share a single namespace and run top-to-bottom,
+so a later snippet may use names an earlier one defined (the README's
+quickstart builds on itself this way).
+
+Opt-out: put ``<!-- snippet: skip -->`` on the line directly above a fence
+to exclude it (for illustrative fragments that are not runnable as-is,
+e.g. shell transcripts typed as python or deliberately-failing examples).
+
+Usage: PYTHONPATH=src python tools/run_doc_snippets.py FILE.md [FILE.md ...]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+FENCE = re.compile(
+    r"(?P<skip><!--\s*snippet:\s*skip\s*-->\s*\n)?"
+    r"^```python[ \t]*\n(?P<body>.*?)^```",
+    re.MULTILINE | re.DOTALL)
+
+
+def snippets(text: str):
+    """(index, body, skipped) for every python fence in ``text``."""
+    for i, m in enumerate(FENCE.finditer(text)):
+        yield i, m.group("body"), bool(m.group("skip"))
+
+
+def run_file(path: pathlib.Path) -> int:
+    """Execute ``path``'s snippets in one shared namespace; count failures."""
+    ns = {"__name__": "__doc_snippet__", "__file__": str(path)}
+    failures = 0
+    for i, body, skipped in snippets(path.read_text()):
+        label = f"{path}#snippet-{i}"
+        if skipped:
+            print(f"[docs] {label}: skipped (snippet: skip)")
+            continue
+        print(f"[docs] {label}: running ({len(body.splitlines())} lines)",
+              flush=True)
+        try:
+            exec(compile(body, label, "exec"), ns)  # noqa: S102
+        except Exception:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            print(f"[docs] {label}: FAILED", flush=True)
+            failures += 1
+    return failures
+
+
+def main(argv) -> int:
+    if not argv:
+        print(__doc__)
+        return 2
+    total, missing = 0, 0
+    for name in argv:
+        path = pathlib.Path(name)
+        if not path.exists():
+            print(f"[docs] {name}: no such file")
+            missing += 1
+            continue
+        total += run_file(path)
+    if total or missing:
+        print(f"[docs] {total} snippet failure(s), {missing} missing file(s)")
+        return 1
+    print("[docs] all snippets ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
